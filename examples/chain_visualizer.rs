@@ -1,0 +1,49 @@
+//! Chain-order visualizer: draws the mesh and the visit order each
+//! scheduling strategy produces for a random destination set, with the
+//! resulting hop counts (paper §III-D / Fig 6 intuition).
+//!
+//! Run: `cargo run --release --example chain_visualizer [--n 8] [--seed 7]`
+
+use torrent::noc::{Mesh, NodeId};
+use torrent::sched::{self, Strategy};
+use torrent::util::cli::Args;
+use torrent::workloads;
+
+fn draw(mesh: &Mesh, src: NodeId, order: &[NodeId]) {
+    // Mark each destination with its 1-based visit index, the source with S.
+    let mut label = vec![String::from(" ."); mesh.n_nodes()];
+    label[src.0] = " S".into();
+    for (i, n) in order.iter().enumerate() {
+        label[n.0] = format!("{:2}", i + 1);
+    }
+    for y in (0..mesh.rows).rev() {
+        let row: Vec<&str> = (0..mesh.cols)
+            .map(|x| label[y * mesh.cols + x].as_str())
+            .collect();
+        println!("    {}", row.join(" "));
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 8);
+    let seed = args.u64_or("seed", 7);
+    let mesh = Mesh::new(8, 8);
+    let src = NodeId(0);
+    let dests = workloads::random_dest_sets(&mesh, src, n, 1, seed).remove(0);
+    println!("mesh 8x8, source = node 0 (bottom-left), {n} random destinations\n");
+
+    for strategy in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+        let order = sched::schedule(strategy, &mesh, src, &dests);
+        let hops = sched::chain_hops(&mesh, src, &order);
+        println!(
+            "{strategy:?}: total {hops} hops, {:.2} hops/dest",
+            hops as f64 / n as f64
+        );
+        draw(&mesh, src, &order);
+        println!();
+    }
+    let uni = sched::unicast_hops(&mesh, src, &dests);
+    let mc = torrent::noc::multicast::mcast_tree_hops(&mesh, src, &dests);
+    println!("reference: unicast {uni} hops, multicast tree {mc} hops");
+}

@@ -1,0 +1,136 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` or ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The HLO *text* parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs ``<name>.hlo.txt`` per entry point plus ``manifest.txt`` which the
+Rust runtime parses to know each artifact's parameter/result shapes.
+Shapes here are the *end-to-end example* shapes (a scaled-down DeepSeek-V3
+head — see DESIGN.md §3); the cycle-level Fig-9 benchmark uses the paper's
+full Table II shapes, which involve no numerics.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# End-to-end example geometry: one scaled-down DeepSeek-V3 MLA head.
+SEQ_PREFILL = 256  # prefill sequence length
+SEQ_DECODE = 512  # decode-time KV cache length
+D_HEAD = 64  # head dim
+D_LATENT = 128  # compressed MLA latent dim
+GEMM_M, GEMM_K, GEMM_N = 256, 64, 128  # bare accelerator GeMM
+DECODE_BATCH = 64  # batched decode rows
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, example_args)
+ENTRY_POINTS = {
+    "attn_prefill": (
+        model.attention_prefill,
+        (
+            _spec(SEQ_PREFILL, D_HEAD),
+            _spec(SEQ_PREFILL, D_HEAD),
+            _spec(SEQ_PREFILL, D_HEAD),
+        ),
+    ),
+    "attn_decode": (
+        model.attention_decode,
+        (_spec(1, D_HEAD), _spec(SEQ_DECODE, D_HEAD), _spec(SEQ_DECODE, D_HEAD)),
+    ),
+    "attn_prefill_flash": (
+        model.attention_prefill_flash,
+        (
+            _spec(SEQ_PREFILL, D_HEAD),
+            _spec(SEQ_PREFILL, D_HEAD),
+            _spec(SEQ_PREFILL, D_HEAD),
+        ),
+    ),
+    "kv_recovery": (
+        model.kv_recovery,
+        (
+            _spec(SEQ_PREFILL, D_LATENT),
+            _spec(D_LATENT, D_HEAD),
+            _spec(D_LATENT, D_HEAD),
+        ),
+    ),
+    "gemm_prefill": (
+        model.gemm_prefill,
+        (_spec(GEMM_M, GEMM_K), _spec(GEMM_K, GEMM_N)),
+    ),
+    "gemm_decode": (
+        model.gemm_decode,
+        (_spec(DECODE_BATCH, 64), _spec(64, 16)),
+    ),
+    "relayout_16x8_to_8x8": (
+        model.relayout_16x8_to_8x8,
+        (_spec(SEQ_PREFILL // 16, D_HEAD // 8, 16, 8),),
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s):
+    return "f32[" + ",".join(str(d) for d in s.shape) + "]"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of entry points"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = list(ENTRY_POINTS)
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    manifest_lines = []
+    for name in names:
+        fn, specs = ENTRY_POINTS[name]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        ins = ";".join(_shape_str(s) for s in specs)
+        outs_s = ";".join(_shape_str(s) for s in outs)
+        manifest_lines.append(f"{name}\t{name}.hlo.txt\t{ins}\t{outs_s}")
+        print(f"wrote {path} ({len(text)} chars)  in={ins}  out={outs_s}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            "# name\tfile\tinput_shapes\toutput_shapes — parsed by rust/src/runtime/manifest.rs\n"
+        )
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

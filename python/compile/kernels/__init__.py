@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only) + their pure-jnp oracles (ref)."""
+
+from . import ref  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .gemm import decode_matvec, matmul, matmul_int8  # noqa: F401
+from .relayout import relayout  # noqa: F401
+from .softmax import softmax  # noqa: F401

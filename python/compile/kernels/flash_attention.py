@@ -1,0 +1,93 @@
+"""L1 Pallas blocked attention kernel (online softmax / FlashAttention
+style) — the TPU-idiomatic extension of the paper's attention workload.
+
+The naive path (`model.attention_prefill`) materializes the full T×T
+score matrix; at DeepSeek-V3 prefill lengths that matrix dominates VMEM.
+This kernel never materializes it: the grid walks (query block × key
+block) with the key dimension innermost, carrying running max `m`,
+normalizer `l` and the unnormalized accumulator in the output block —
+the standard online-softmax recurrence, expressed with the same
+BlockSpec machinery the GeMM kernels use (DESIGN.md
+§Hardware-Adaptation: KV blocks stream HBM→VMEM per grid step while the
+q block stays resident).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, nk, scale):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]  # (bq, d)
+    k = k_ref[...]  # (bk, d)
+    v = v_ref[...]  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rescale previous state to the new max.
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[...] = o_ref[...] / l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def flash_attention(q, k, v, bq=64, bk=64):
+    """Single-head attention with online softmax: (T, d) x 3 -> (T, d).
+
+    Never materializes the T x T score matrix; VMEM per grid step is
+    O(bq*d + bk*d + bq*bk).
+    """
+    t, d = q.shape
+    tk, dk = k.shape
+    assert v.shape == (tk, dk) and d == dk
+    while t % bq:
+        bq -= 1
+    while tk % bk:
+        bk -= 1
+    scale = 1.0 / math.sqrt(d)  # python float: baked into the kernel
+    grid = (t // bq, tk // bk)  # kv block innermost: sequential accumulate
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=grid[1], scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),  # running max
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),  # normalizer
+        ],
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    return out

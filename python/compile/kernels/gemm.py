@@ -1,0 +1,123 @@
+"""L1 Pallas GeMM kernels — the compute hot-spot of the paper's cluster.
+
+The evaluation SoC's GeMM accelerator (1024 8-bit MACs) has two modes:
+
+* prefill — multiply 16x8 by 8x8 operand tiles;
+* decode  — multiply a 1x64 vector by a 64x16 matrix.
+
+On TPU the same insight maps onto the MXU: we tile the operands into
+VMEM-resident blocks with ``BlockSpec`` (the RTL did this with the DSE's
+affine loops), run the systolic matmul per block, and accumulate over the
+K grid dimension directly in the output block, which Pallas keeps resident
+across sequential K steps. All kernels run ``interpret=True`` on this image
+(CPU PJRT cannot execute Mosaic custom-calls); real-TPU perf is estimated
+structurally in DESIGN.md §Perf-estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The accelerator's native tile geometry (prefill mode). TPU blocks are
+# multiples of these so one HW tile never straddles a block boundary.
+ACCEL_TILE_M, ACCEL_TILE_K, ACCEL_TILE_N = 16, 8, 8
+# Decode mode: 1x64 vector times 64x16 matrix.
+DECODE_K, DECODE_N = 64, 16
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk, acc_dtype):
+    """Grid = (M/bm, N/bn, K/bk), K innermost; accumulate into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=acc_dtype
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim, pref):
+    """Largest divisor of `dim` that is <= pref (block shapes must tile)."""
+    b = min(dim, pref)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, bm=64, bk=64, bn=64):
+    """Tiled f32/bf16 matmul: (M, K) @ (K, N) -> (M, N) f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = _pick_block(m, bm), _pick_block(k, bk), _pick_block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], acc_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_int8(a, b, bm=64, bk=64, bn=64):
+    """Accelerator-faithful int8 matmul with int32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and a.dtype == jnp.int8 and b.dtype == jnp.int8
+    bm, bk, bn = _pick_block(m, bm), _pick_block(k, bk), _pick_block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], acc_dtype=jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _decode_kernel(x_ref, w_ref, o_ref):
+    """One grid step: a block of decode rows times one weight tile."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def decode_matvec(x, w, bb=64):
+    """Decode-mode GeMM: (B, 64) @ (64, 16) -> (B, 16).
+
+    The HW multiplies one 1x64 vector per invocation; a single row leaves
+    the MXU almost idle, so the TPU adaptation batches `bb` decode rows per
+    grid step (DESIGN.md §Hardware-Adaptation) — same math, restored
+    occupancy.
+    """
+    batch, k = x.shape
+    k2, n = w.shape
+    assert k == k2 == DECODE_K and n == DECODE_N, (x.shape, w.shape)
+    bb = _pick_block(batch, bb)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=(batch // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+compare each Pallas kernel's output against the function of the same name
+here with ``assert_allclose``. Keep these boring and obviously correct —
+no tiling, no Pallas, just jnp.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b, out_dtype=None):
+    """Plain matrix multiply with explicit accumulation dtype.
+
+    For int8 inputs the accelerator accumulates in int32 (1024 8-bit MACs);
+    for floats we accumulate in f32.
+    """
+    if a.dtype == jnp.int8:
+        out_dtype = out_dtype or jnp.int32
+        return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32)).astype(out_dtype)
+    out_dtype = out_dtype or jnp.float32
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+def softmax(x, axis=-1):
+    """Numerically stable row softmax."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def to_blocked(x, tm, tn):
+    """Logical (M, N) matrix -> physical blocked layout (M/tm, N/tn, tm, tn).
+
+    This is the paper's "MNMxNy" layout family (Table II): the matrix is
+    partitioned into tm x tn tiles, tiles stored row-major (M outer, N
+    inner), elements row-major within a tile. MNM16N8 == to_blocked(x,16,8).
+    """
+    m, n = x.shape
+    assert m % tm == 0 and n % tn == 0, (x.shape, tm, tn)
+    return x.reshape(m // tm, tm, n // tn, tn).transpose(0, 2, 1, 3)
+
+
+def from_blocked(xb):
+    """Inverse of :func:`to_blocked`: (Mt, Nt, tm, tn) -> (Mt*tm, Nt*tn)."""
+    mt, nt, tm, tn = xb.shape
+    return xb.transpose(0, 2, 1, 3).reshape(mt * tm, nt * tn)
+
+
+def relayout(xb, tm_out, tn_out):
+    """Re-tile a blocked matrix into a different tile geometry.
+
+    E.g. MNM16N8 -> MNM8N8 (prefill output feeding the next GeMM) or
+    MNM16N8 -> MNM64N16 (decode input layout).
+    """
+    return to_blocked(from_blocked(xb), tm_out, tn_out)
+
+
+def attention_prefill(q, k, v, scale=None):
+    """Single-head self-attention, prefill: softmax(Q.K^T * scale) . V."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = matmul(q, k.T) * scale
+    p = softmax(s, axis=-1)
+    return matmul(p, v)
+
+
+def attention_decode(q, k_cache, v_cache, scale=None):
+    """Single-head decode step: q is (1, d), caches are (T, d)."""
+    return attention_prefill(q, k_cache, v_cache, scale)
+
+
+def kv_recovery(c_kv, w_uk, w_uv):
+    """DeepSeek-V3 MLA KV recovery: up-project the compressed KV cache.
+
+    c_kv: (T, d_c) compressed latent; w_uk/w_uv: (d_c, d) up-projections.
+    Returns (K, V), each (T, d). This is workload P3/D3 of Table II.
+    """
+    return matmul(c_kv, w_uk), matmul(c_kv, w_uv)

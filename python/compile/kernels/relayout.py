@@ -1,0 +1,65 @@
+"""L1 Pallas layout-transform kernel — the paper's MNMxNy re-tiling.
+
+Table II's workloads move matrices between blocked layouts (MNM16N8 ->
+MNM8N8 for prefill, MNM16N8 -> MNM64N16 for decode). In the paper this is
+done on the fly by the Torrent DSE's ND-affine address generator; on TPU
+we express the same gather as a Pallas kernel whose BlockSpecs read one
+*logical* row-panel per grid step and emit it in the destination tile
+geometry.
+
+Blocked layouts are carried as 4D arrays (Mt, Nt, tm, tn) — see
+ref.to_blocked. A transform (tm_in, tn_in) -> (tm_out, tn_out) works on
+the least-common-multiple panel so each grid step touches whole tiles of
+both geometries.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relayout_kernel(x_ref, o_ref, *, tm_in, tn_in, tm_out, tn_out):
+    """Re-tile one LCM panel.
+
+    x_ref: (pm/tm_in, pn/tn_in, tm_in, tn_in) — input tiles of the panel
+    o_ref: (pm/tm_out, pn/tn_out, tm_out, tn_out) — output tiles
+    """
+    xt = x_ref[...]
+    a, b, _, _ = xt.shape
+    # blocked -> logical panel
+    logical = xt.transpose(0, 2, 1, 3).reshape(a * tm_in, b * tn_in)
+    pm, pn = logical.shape
+    # logical -> output blocked
+    o_ref[...] = logical.reshape(
+        pm // tm_out, tm_out, pn // tn_out, tn_out
+    ).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("tm_out", "tn_out"))
+def relayout(xb, tm_out, tn_out):
+    """(Mt, Nt, tm_in, tn_in) blocked matrix -> (tm_out, tn_out) tiling."""
+    mt, nt, tm_in, tn_in = xb.shape
+    m, n = mt * tm_in, nt * tn_in
+    assert m % tm_out == 0 and n % tn_out == 0, (xb.shape, tm_out, tn_out)
+    # LCM panel: whole tiles of both geometries.
+    pm = math.lcm(tm_in, tm_out)
+    pn = math.lcm(tn_in, tn_out)
+    grid = (m // pm, n // pn)
+    in_block = (pm // tm_in, pn // tn_in, tm_in, tn_in)
+    out_block = (pm // tm_out, pn // tn_out, tm_out, tn_out)
+    kern = functools.partial(
+        _relayout_kernel, tm_in=tm_in, tn_in=tn_in, tm_out=tm_out, tn_out=tn_out
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(in_block, lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec(out_block, lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (m // tm_out, n // tn_out, tm_out, tn_out), xb.dtype
+        ),
+        interpret=True,
+    )(xb)

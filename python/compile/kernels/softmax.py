@@ -1,0 +1,37 @@
+"""L1 Pallas row-softmax kernel (numerically stable).
+
+Used by the L2 attention model between the two GeMMs. One grid step
+processes a block of rows; the full row lives in VMEM (attention rows of
+a few thousand f32 fit comfortably), so a simple two-pass max/sum inside
+the block suffices — no online renormalization needed at these shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax(x, bm=64):
+    """Row softmax over the last axis of a 2D array."""
+    m, n = x.shape
+    bm = min(bm, m)
+    while m % bm:
+        bm -= 1
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

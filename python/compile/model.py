@@ -1,0 +1,71 @@
+"""L2 — the paper's real-workload compute graph in JAX.
+
+The FPGA evaluation (paper §IV-E, Table II) runs the data movement of
+DeepSeek-V3 self-attention layers: Q.K^T (P1/D1), S.V (P2/D2) and the MLA
+KV-cache recovery (P3/D3), all feeding the cluster GeMM accelerator. This
+module is the accelerator's compute expressed over the L1 Pallas kernels;
+`aot.py` lowers each entry point once to HLO text and the Rust coordinator
+executes the artifacts through PJRT while the simulator accounts for the
+data movement cycles.
+
+Python never runs on the simulation/request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import decode_matvec, flash_attention, matmul, relayout, softmax
+
+
+def attention_prefill(q, k, v):
+    """Single-head prefill attention: softmax(Q.K^T / sqrt(d)) . V.
+
+    q, k, v: (T, d). Covers workloads P1 (Q.K^T) and P2 (S.V).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = matmul(q, k.T) * scale
+    p = softmax(s)
+    return (matmul(p, v),)
+
+
+def attention_decode(q, k_cache, v_cache):
+    """Single-token decode: q (1, d) against caches (T, d). D1 + D2."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = matmul(q, k_cache.T) * scale
+    p = softmax(s)
+    return (matmul(p, v_cache),)
+
+
+def kv_recovery(c_kv, w_uk, w_uv):
+    """MLA KV recovery (P3/D3): up-project the compressed KV latent."""
+    return (matmul(c_kv, w_uk), matmul(c_kv, w_uv))
+
+
+def gemm_prefill(a, b):
+    """Bare accelerator prefill GeMM, exported for the quickstart path."""
+    return (matmul(a, b),)
+
+
+def gemm_decode(x, w):
+    """Bare accelerator decode GeMM: batched 1x64 @ 64x16."""
+    return (decode_matvec(x, w),)
+
+
+def relayout_16x8_to_8x8(xb):
+    """Table II layout transform MNM16N8 -> MNM8N8 (prefill chain)."""
+    return (relayout(xb, 8, 8),)
+
+
+def relayout_16x8_to_64x16(xb):
+    """Table II layout transform MNM16N8 -> MNM64N16 (decode chain)."""
+    return (relayout(xb, 64, 16),)
+
+
+def attention_prefill_flash(q, k, v):
+    """Blocked online-softmax attention (never materializes T x T scores).
+
+    Same math as :func:`attention_prefill`; the VMEM-resident variant a
+    long-context deployment would ship (DESIGN.md §Hardware-Adaptation).
+    """
+    return (flash_attention(q, k, v),)

@@ -1,0 +1,63 @@
+"""Blocked online-softmax attention kernel vs the naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("t,d", [(64, 32), (128, 64), (256, 64), (96, 16)])
+def test_flash_matches_naive(t, d):
+    q, k, v = _rand((t, d), 1), _rand((t, d), 2), _rand((t, d), 3)
+    got = flash_attention(q, k, v)
+    want = ref.attention_prefill(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_block_size_sweep():
+    q, k, v = _rand((128, 32), 4), _rand((128, 32), 5), _rand((128, 32), 6)
+    want = ref.attention_prefill(q, k, v)
+    for bq, bk in [(16, 16), (32, 64), (128, 128), (64, 32)]:
+        got = flash_attention(q, k, v, bq=bq, bk=bk)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5, err_msg=f"{bq},{bk}")
+
+
+def test_flash_cross_attention_shapes():
+    # Decode-like: few queries against a long KV cache.
+    q = _rand((8, 64), 7)
+    k, v = _rand((512, 64), 8), _rand((512, 64), 9)
+    got = flash_attention(q, k, v, bq=8, bk=64)
+    want = ref.attention_prefill(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_stable_at_large_logits():
+    # Online softmax must survive logits that overflow a naive exp.
+    q, k, v = _rand((64, 32), 10, 40.0), _rand((64, 32), 11, 40.0), _rand((64, 32), 12)
+    got = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = ref.attention_prefill(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(1, 8).map(lambda v: v * 16),
+    tk=st.integers(1, 8).map(lambda v: v * 16),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_hypothesis(t, tk, d, seed):
+    q = _rand((t, d), seed)
+    k, v = _rand((tk, d), seed + 1), _rand((tk, d), seed + 2)
+    got = flash_attention(q, k, v)
+    want = ref.attention_prefill(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,116 @@
+"""Pallas GeMM kernels vs the pure-jnp oracle — the core L1 signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_matvec, matmul, matmul_int8, ref
+
+# K-blocked accumulation reorders float adds vs the oracle's single dot.
+RTOL, ATOL = 1e-3, 1e-4
+
+
+def _rand(shape, dtype=jnp.float32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if dtype == jnp.int8:
+        return jax.random.randint(k, shape, -128, 127, jnp.int32).astype(jnp.int8)
+    return jax.random.normal(k, shape, dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (16, 8, 8),  # one accelerator prefill tile
+        (64, 64, 64),  # one TPU block
+        (128, 192, 128),  # prefill head slice (paper P1 geometry / 16)
+        (256, 64, 128),
+        (32, 8, 16),  # non-square, small K
+        (17, 13, 5),  # prime sizes force degenerate 1-wide blocks
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    a, b = _rand((m, k), seed=1), _rand((k, n), seed=2)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul(a, b), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_block_sweep():
+    a, b = _rand((128, 96), seed=3), _rand((96, 64), seed=4)
+    want = ref.matmul(a, b)
+    for bm, bk, bn in [(16, 8, 8), (32, 32, 32), (128, 96, 64), (64, 48, 16)]:
+        got = matmul(a, b, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL, err_msg=f"{bm},{bk},{bn}")
+
+
+def test_matmul_identity():
+    a = _rand((64, 64), seed=5)
+    np.testing.assert_allclose(matmul(a, jnp.eye(64)), a, rtol=RTOL)
+
+
+def test_matmul_zeros():
+    a = _rand((32, 16), seed=6)
+    assert jnp.all(matmul(a, jnp.zeros((16, 8))) == 0.0)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 8, 8), (64, 64, 64), (48, 24, 40)])
+def test_matmul_int8_exact(m, k, n):
+    a, b = _rand((m, k), jnp.int8, seed=7), _rand((k, n), jnp.int8, seed=8)
+    got = matmul_int8(a, b)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.matmul(a, b)))
+
+
+def test_matmul_int8_saturating_inputs():
+    # Extremes: full-scale +/- int8 values must accumulate exactly in int32.
+    a = jnp.full((16, 64), -128, jnp.int8)
+    b = jnp.full((64, 16), 127, jnp.int8)
+    got = matmul_int8(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.full((16, 16), -128 * 127 * 64))
+
+
+@pytest.mark.parametrize("batch", [1, 16, 64, 200])
+def test_decode_matvec(batch):
+    x, w = _rand((batch, 64), seed=9), _rand((64, 16), seed=10)
+    np.testing.assert_allclose(decode_matvec(x, w), ref.matmul(x, w), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 12).map(lambda v: v * 8),
+    k=st.integers(1, 12).map(lambda v: v * 8),
+    n=st.integers(1, 12).map(lambda v: v * 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_f32(m, k, n, seed):
+    """Hypothesis sweep: tile-aligned shapes, arbitrary seeds."""
+    a, b = _rand((m, k), seed=seed), _rand((k, n), seed=seed + 1)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_ragged(m, k, n, seed):
+    """Non-aligned shapes must still be exact (block fallback path)."""
+    a, b = _rand((m, k), seed=seed), _rand((k, n), seed=seed + 1)
+    np.testing.assert_allclose(matmul(a, b), ref.matmul(a, b), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 8).map(lambda v: v * 16),
+    k=st.integers(1, 8).map(lambda v: v * 8),
+    n=st.integers(1, 8).map(lambda v: v * 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_int8_hypothesis(m, k, n, seed):
+    a = _rand((m, k), jnp.int8, seed=seed)
+    b = _rand((k, n), jnp.int8, seed=seed + 1)
+    np.testing.assert_array_equal(
+        np.asarray(matmul_int8(a, b)), np.asarray(ref.matmul(a, b))
+    )

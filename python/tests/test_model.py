@@ -1,0 +1,82 @@
+"""L2 model entry points vs oracles: shapes, numerics, layout chains."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def test_attention_prefill_matches_ref():
+    q, k, v = _rand((128, 64), 1), _rand((128, 64), 2), _rand((128, 64), 3)
+    (got,) = model.attention_prefill(q, k, v)
+    want = ref.attention_prefill(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_attention_decode_matches_ref():
+    q = _rand((1, 64), 4)
+    kc, vc = _rand((512, 64), 5), _rand((512, 64), 6)
+    (got,) = model.attention_decode(q, kc, vc)
+    want = ref.attention_decode(q, kc, vc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_attention_rows_are_convex_combinations():
+    # Each output row is a convex combination of V rows: bounded by V's extrema.
+    q, k, v = _rand((64, 32), 7), _rand((64, 32), 8), _rand((64, 32), 9)
+    (o,) = model.attention_prefill(q, k, v)
+    assert bool(jnp.all(o <= jnp.max(v, axis=0) + 1e-5))
+    assert bool(jnp.all(o >= jnp.min(v, axis=0) - 1e-5))
+
+
+def test_kv_recovery_matches_ref():
+    c = _rand((256, 128), 10)
+    wk, wv = _rand((128, 64), 11), _rand((128, 64), 12)
+    gk, gv = model.kv_recovery(c, wk, wv)
+    wk_ref, wv_ref = ref.kv_recovery(c, wk, wv)
+    np.testing.assert_allclose(gk, wk_ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gv, wv_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_gemm_entry_points():
+    a, b = _rand((256, 64), 13), _rand((64, 128), 14)
+    (g,) = model.gemm_prefill(a, b)
+    np.testing.assert_allclose(g, ref.matmul(a, b), rtol=1e-4, atol=1e-6)
+    x, w = _rand((64, 64), 15), _rand((64, 16), 16)
+    (g2,) = model.gemm_decode(x, w)
+    np.testing.assert_allclose(g2, ref.matmul(x, w), rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "fn,tout",
+    [
+        (model.relayout_16x8_to_8x8, (8, 8)),
+        (model.relayout_16x8_to_64x16, (64, 16)),
+    ],
+)
+def test_relayout_entry_points(fn, tout):
+    x = _rand((128, 64), 17)
+    xb = ref.to_blocked(x, 16, 8)
+    (got,) = fn(xb)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.relayout(xb, *tout))
+    )
+
+
+def test_prefill_to_decode_pipeline():
+    """Chained workload P1->P2 with the layout hop in between (Table II)."""
+    q, k, v = _rand((128, 64), 18), _rand((128, 64), 19), _rand((128, 64), 20)
+    (o,) = model.attention_prefill(q, k, v)
+    # the accelerator emits MNM16N8; the next consumer wants MNM8N8
+    ob = ref.to_blocked(o, 16, 8)
+    (ob2,) = model.relayout_16x8_to_8x8(ob)
+    np.testing.assert_allclose(
+        np.asarray(ref.from_blocked(ob2)), np.asarray(o), rtol=1e-6
+    )

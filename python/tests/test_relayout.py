@@ -1,0 +1,71 @@
+"""Pallas relayout kernel vs jnp oracle — Table II's MNMxNy transforms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, relayout
+
+
+def _blocked(m, n, tm, tn, seed=0, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n), dtype)
+    return x, ref.to_blocked(x, tm, tn)
+
+
+def test_blocked_roundtrip_ref():
+    x, xb = _blocked(64, 32, 16, 8)
+    np.testing.assert_array_equal(np.asarray(ref.from_blocked(xb)), np.asarray(x))
+
+
+def test_blocked_layout_is_papers_order():
+    # Element (i, j) lives at tile (i//tm, j//tn), offset (i%tm, j%tn).
+    x = jnp.arange(32 * 16, dtype=jnp.float32).reshape(32, 16)
+    xb = ref.to_blocked(x, 16, 8)
+    assert xb[1, 1, 3, 5] == x[16 + 3, 8 + 5]
+
+
+@pytest.mark.parametrize(
+    "m,n,tin,tout",
+    [
+        (64, 32, (16, 8), (8, 8)),  # MNM16N8 -> MNM8N8  (P1/P2)
+        (64, 32, (16, 8), (16, 8)),  # identity re-tile    (P3/D3)
+        (128, 64, (16, 8), (64, 16)),  # MNM16N8 -> MNM64N16 (D1/D2)
+        (128, 64, (64, 16), (16, 8)),  # inverse direction
+        (256, 64, (16, 8), (8, 8)),
+    ],
+)
+def test_relayout_matches_ref(m, n, tin, tout):
+    x, xb = _blocked(m, n, *tin)
+    got = relayout(xb, *tout)
+    want = ref.relayout(xb, *tout)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the logical matrix is unchanged
+    np.testing.assert_array_equal(np.asarray(ref.from_blocked(got)), np.asarray(x))
+
+
+def test_relayout_roundtrip_through_other_geometry():
+    x, xb = _blocked(128, 64, 16, 8, seed=3)
+    back = relayout(relayout(xb, 64, 16), 16, 8)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(xb))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    tin=st.sampled_from([(16, 8), (8, 8), (64, 16), (16, 16)]),
+    tout=st.sampled_from([(16, 8), (8, 8), (64, 16), (8, 16)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_relayout_hypothesis(mt, nt, tin, tout, seed):
+    import math
+
+    m = mt * math.lcm(tin[0], tout[0])
+    n = nt * math.lcm(tin[1], tout[1])
+    x, xb = _blocked(m, n, *tin, seed=seed)
+    got = relayout(xb, *tout)
+    np.testing.assert_array_equal(
+        np.asarray(ref.from_blocked(got)), np.asarray(x)
+    )

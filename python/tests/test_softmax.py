@@ -1,0 +1,49 @@
+"""Pallas softmax kernel vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, softmax
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("m,n", [(1, 8), (64, 64), (100, 256), (256, 2048)])
+def test_softmax_matches_ref(m, n):
+    x = _rand((m, n), seed=m + n)
+    np.testing.assert_allclose(softmax(x), ref.softmax(x), rtol=1e-5, atol=1e-7)
+
+
+def test_softmax_rows_sum_to_one():
+    x = _rand((32, 128), seed=1)
+    np.testing.assert_allclose(jnp.sum(softmax(x), axis=-1), jnp.ones(32), rtol=1e-5)
+
+
+def test_softmax_large_magnitudes_stable():
+    # Without the max-subtraction this overflows to nan.
+    x = _rand((16, 64), seed=2, scale=200.0)
+    y = softmax(x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(y, ref.softmax(x), rtol=1e-5, atol=1e-7)
+
+
+def test_softmax_constant_row_is_uniform():
+    x = jnp.full((4, 10), 3.5)
+    np.testing.assert_allclose(softmax(x), jnp.full((4, 10), 0.1), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 30.0]),
+)
+def test_softmax_hypothesis(m, n, seed, scale):
+    x = _rand((m, n), seed=seed, scale=scale)
+    np.testing.assert_allclose(softmax(x), ref.softmax(x), rtol=1e-4, atol=1e-6)

@@ -1,0 +1,32 @@
+//! Minimal bench harness (criterion is not vendored in this image; see
+//! DESIGN.md §3): warmup + timed iterations + a stats summary, printed in
+//! a stable format that `bench_output.txt` captures.
+#![allow(dead_code)] // each bench binary uses a subset of the harness
+
+use std::time::Instant;
+
+use torrent::util::stats::Summary;
+
+/// Time `f` for `iters` iterations after `warmup` runs; print a summary.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "bench {name}: mean {:.3} ms  p50 {:.3}  p99 {:.3}  min {:.3}  max {:.3}  (n={})",
+        s.mean, s.p50, s.p99, s.min, s.max, s.n
+    );
+    s
+}
+
+/// Banner separating experiment output inside bench logs.
+pub fn banner(title: &str) {
+    println!("\n==================== {title} ====================");
+}

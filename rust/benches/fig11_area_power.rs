@@ -1,0 +1,15 @@
+//! Regenerates paper Fig 11 (+ Fig 1(d)): 16 nm area breakdowns, the
+//! area-vs-N_dst,max scaling of the initiator Torrent against a
+//! multicast router, and the activity-derived cluster power of the 64 KB
+//! 3-destination post-synthesis Chainwrite.
+mod common;
+
+fn main() {
+    common::banner("Fig 11 / Fig 1(d): ASIC area & power");
+    for t in torrent::analysis::experiments::fig11() {
+        t.print();
+        println!();
+    }
+    println!("paper anchors: 2.8mm^2 SoC; Torrent 5.3% of cluster; 207 um^2/dest;");
+    println!("initiator cluster 175.7 mW; middle followers > tail follower; 4.68 pJ/B/hop");
+}

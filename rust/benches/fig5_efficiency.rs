@@ -1,0 +1,28 @@
+//! Regenerates paper Fig 5: η_P2MP heatmaps for iDMA (unicast), ESP
+//! (network-layer multicast) and Torrent (Chainwrite) over data sizes
+//! 1–128 KB and 2–16 destinations on the 4×5 evaluation SoC (192 points
+//! per mechanism). Pass --quick for the subsampled grid.
+mod common;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    common::banner("Fig 5: P2MP copy efficiency (eta_P2MP)");
+    let t0 = std::time::Instant::now();
+    let (points, tables) = torrent::analysis::experiments::fig5(quick);
+    for t in tables {
+        t.print();
+        println!();
+    }
+    // Paper-shape assertions: who wins where.
+    let eta = |mech: &str, kb: usize, n: usize| {
+        points
+            .iter()
+            .find(|p| p.mechanism.starts_with(mech) && p.bytes == kb * 1024 && p.n_dst == n)
+            .map(|p| p.eta)
+    };
+    if let (Some(i), Some(m), Some(t)) = (eta("iDMA", 64, 8), eta("ESP", 64, 8), eta("Torrent", 64, 8)) {
+        println!("check @64KB/8dst: idma {i:.2} <= 1.1: {}", i <= 1.1);
+        println!("check @64KB/8dst: torrent {t:.2} and mcast {m:.2} > 4: {}", t > 4.0 && m > 4.0);
+    }
+    println!("fig5 total wall time: {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Fig 6: average hops per destination on an 8×8 mesh
+//! for unicast, multicast and Chainwrite (naive / greedy / TSP orders),
+//! 128 random destination sets per N_dst group (1024 points).
+mod common;
+
+fn main() {
+    common::banner("Fig 6: average hops per destination");
+    let table = torrent::analysis::experiments::fig6(2025, 128);
+    table.print();
+    println!("(paper: naive chain worst; greedy ~ multicast; TSP surpasses multicast at scale;");
+    println!(" all optimized mechanisms approach 1 hop/destination at N_dst=63)");
+    common::bench("fig6_hop_study_128trials", 1, 3, || {
+        let _ = torrent::analysis::experiments::fig6(7, 128);
+    });
+}

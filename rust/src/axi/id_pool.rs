@@ -1,0 +1,80 @@
+//! AXI transaction-ID pool: bounds outstanding transactions per master.
+//!
+//! The DMA engines pipeline several bursts; IDs are recycled when the
+//! matching B/R response returns. Pool exhaustion is the AXI-level
+//! backpressure that bounds a master's in-flight window.
+
+/// Fixed-capacity ID pool.
+#[derive(Debug, Clone)]
+pub struct IdPool {
+    free: Vec<u16>,
+    capacity: usize,
+}
+
+impl IdPool {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0 && capacity <= u16::MAX as usize);
+        IdPool { free: (0..capacity as u16).rev().collect(), capacity }
+    }
+
+    pub fn acquire(&mut self) -> Option<u16> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, id: u16) {
+        assert!(
+            !self.free.contains(&id) && (id as usize) < self.capacity,
+            "double release of AXI id {id}"
+        );
+        self.free.push(id);
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    pub fn all_free(&self) -> bool {
+        self.free.len() == self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut p = IdPool::new(2);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(p.acquire().is_none());
+        assert!(p.is_exhausted());
+        p.release(a);
+        assert_eq!(p.outstanding(), 1);
+        assert!(p.acquire().is_some());
+    }
+
+    #[test]
+    fn all_free_after_full_release() {
+        let mut p = IdPool::new(4);
+        let ids: Vec<u16> = (0..4).map(|_| p.acquire().unwrap()).collect();
+        for id in ids {
+            p.release(id);
+        }
+        assert!(p.all_free());
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_asserts() {
+        let mut p = IdPool::new(2);
+        let a = p.acquire().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+}

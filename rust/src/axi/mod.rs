@@ -1,0 +1,17 @@
+//! AXI4 transport layer: burst rules, ID management, and the memory-side
+//! slave that services requests arriving over the NoC.
+//!
+//! FlooNoC-style mapping (paper §IV-A): one AXI write burst travels as a
+//! single NoC packet — head flit = AW channel beat, body flits = W beats
+//! (64 B data width), and the B response returns as a one-flit packet.
+//! Reads are a one-flit AR request and a multi-flit R response. Torrent's
+//! Backend builds exactly these packets, which is why Chainwrite needs no
+//! protocol changes.
+
+pub mod id_pool;
+pub mod slave;
+pub mod split;
+
+pub use id_pool::IdPool;
+pub use slave::AxiSlave;
+pub use split::{split_bursts, Burst, AXI_4K, MAX_BURST_BYTES};

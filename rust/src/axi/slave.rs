@@ -1,0 +1,185 @@
+//! Memory-side AXI slave: services write/read bursts arriving over the
+//! NoC against the node's scratchpad and returns B/R responses.
+//!
+//! The SoC endpoint demultiplexes its inbox; packets with AXI request
+//! messages are handed here. A fixed SRAM access latency is charged
+//! before the response packet is injected.
+
+use std::collections::VecDeque;
+
+use crate::mem::Scratchpad;
+use crate::noc::{Message, Network, NodeId, Packet};
+
+/// SRAM pipeline latency from request tail to response injection.
+pub const MEM_LATENCY: u64 = 2;
+
+/// Pending response.
+#[derive(Debug)]
+struct Pending {
+    ready_at: u64,
+    dst: NodeId,
+    msg: Message,
+    payload: Option<Vec<u8>>,
+}
+
+/// Per-node AXI slave.
+#[derive(Debug, Default)]
+pub struct AxiSlave {
+    queue: VecDeque<Pending>,
+    /// Served write bytes (activity counter for the power model).
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl AxiSlave {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Try to consume `pkt`; returns `false` if it is not an AXI request.
+    pub fn handle(
+        &mut self,
+        node: NodeId,
+        pkt: &Packet,
+        mem: &mut Scratchpad,
+        now: u64,
+    ) -> bool {
+        match pkt.msg {
+            Message::AxiWriteReq { addr, bytes, axi_id } => {
+                let ok = mem.contains(addr, bytes);
+                if ok {
+                    if let Some(data) = &pkt.payload {
+                        mem.write(addr, &data[..bytes.min(data.len())]);
+                    }
+                    self.bytes_written += bytes as u64;
+                }
+                self.queue.push_back(Pending {
+                    ready_at: now + MEM_LATENCY,
+                    dst: pkt.src,
+                    msg: Message::AxiWriteResp { axi_id, ok },
+                    payload: None,
+                });
+                true
+            }
+            Message::AxiReadReq { addr, bytes, axi_id } => {
+                let ok = mem.contains(addr, bytes);
+                let payload = ok.then(|| mem.read(addr, bytes));
+                if ok {
+                    self.bytes_read += bytes as u64;
+                }
+                self.queue.push_back(Pending {
+                    ready_at: now + MEM_LATENCY,
+                    dst: pkt.src,
+                    msg: Message::AxiReadResp { axi_id, ok },
+                    payload,
+                });
+                let _ = node;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Inject ready responses.
+    pub fn tick(&mut self, node: NodeId, net: &mut Network) {
+        while let Some(p) = self.queue.front() {
+            if p.ready_at > net.cycle {
+                break;
+            }
+            let p = self.queue.pop_front().unwrap();
+            let mut pkt = Packet::new(0, node, p.dst, p.msg);
+            if let Some(data) = p.payload {
+                pkt = pkt.with_payload(data);
+            }
+            net.send(node, pkt);
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::Mesh;
+
+    fn setup() -> (Network, Scratchpad, AxiSlave) {
+        (
+            Network::new(Mesh::new(2, 1)),
+            Scratchpad::new(1 << 20, 4096),
+            AxiSlave::new(),
+        )
+    }
+
+    #[test]
+    fn write_req_applies_and_responds() {
+        let (mut net, mut mem, mut slave) = setup();
+        let req = Packet::new(
+            0,
+            NodeId(0),
+            NodeId(1),
+            Message::AxiWriteReq { addr: (1 << 20) + 64, bytes: 4, axi_id: 3 },
+        )
+        .with_payload(vec![9, 8, 7, 6]);
+        assert!(slave.handle(NodeId(1), &req, &mut mem, 0));
+        assert_eq!(mem.peek((1 << 20) + 64, 4), &[9, 8, 7, 6]);
+        // Response appears after MEM_LATENCY.
+        for _ in 0..(MEM_LATENCY + 1) {
+            net.tick();
+            slave.tick(NodeId(1), &mut net);
+        }
+        net.run_until_idle(1_000);
+        match &net.recv(NodeId(0)).expect("B response").msg {
+            Message::AxiWriteResp { axi_id: 3, ok: true } => {}
+            m => panic!("unexpected {m:?}"),
+        }
+    }
+
+    #[test]
+    fn read_req_returns_data() {
+        let (mut net, mut mem, mut slave) = setup();
+        mem.write((1 << 20) + 8, &[1, 2, 3, 4, 5]);
+        let req = Packet::new(
+            0,
+            NodeId(0),
+            NodeId(1),
+            Message::AxiReadReq { addr: (1 << 20) + 8, bytes: 5, axi_id: 1 },
+        );
+        assert!(slave.handle(NodeId(1), &req, &mut mem, 0));
+        for _ in 0..50 {
+            net.tick();
+            slave.tick(NodeId(1), &mut net);
+        }
+        let resp = net.recv(NodeId(0)).expect("R response");
+        assert!(matches!(resp.msg, Message::AxiReadResp { axi_id: 1, ok: true }));
+        assert_eq!(&**resp.payload.as_ref().unwrap(), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn out_of_range_write_errs() {
+        let (_, mut mem, mut slave) = setup();
+        let req = Packet::new(
+            0,
+            NodeId(0),
+            NodeId(1),
+            Message::AxiWriteReq { addr: 0, bytes: 8, axi_id: 0 }, // below base
+        )
+        .with_payload(vec![0; 8]);
+        assert!(slave.handle(NodeId(1), &req, &mut mem, 0));
+        // Error response queued with ok=false.
+        assert!(matches!(
+            slave.queue.front().unwrap().msg,
+            Message::AxiWriteResp { ok: false, .. }
+        ));
+    }
+
+    #[test]
+    fn non_axi_messages_rejected() {
+        let (_, mut mem, mut slave) = setup();
+        let pkt = Packet::new(0, NodeId(0), NodeId(1), Message::Raw(1));
+        assert!(!slave.handle(NodeId(1), &pkt, &mut mem, 0));
+        assert!(slave.is_idle());
+    }
+}

@@ -1,0 +1,94 @@
+//! AXI4 burst decomposition.
+//!
+//! A transfer `[addr, addr+len)` is split into INCR bursts that (a) never
+//! cross a 4 KB boundary (AXI A3.4.1) and (b) never exceed 256 beats of
+//! the 64 B data width — though the 4 KB rule binds first at this width
+//! (4096 / 64 = 64 beats).
+
+/// AXI 4 KB boundary.
+pub const AXI_4K: u64 = 4096;
+/// 256-beat INCR limit × 64 B beats.
+pub const MAX_BURST_BYTES: usize = 256 * 64;
+
+/// One AXI burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Burst {
+    pub addr: u64,
+    pub bytes: usize,
+}
+
+impl Burst {
+    /// Beats at the 64 B data width (AWLEN+1).
+    pub fn beats(&self) -> usize {
+        self.bytes.div_ceil(64)
+    }
+}
+
+/// Split `[addr, addr+len)` into legal AXI bursts, in address order.
+pub fn split_bursts(addr: u64, len: usize) -> Vec<Burst> {
+    let mut out = Vec::new();
+    let mut cur = addr;
+    let end = addr + len as u64;
+    while cur < end {
+        let to_4k = AXI_4K - (cur % AXI_4K);
+        let bytes = (end - cur).min(to_4k).min(MAX_BURST_BYTES as u64) as usize;
+        out.push(Burst { addr: cur, bytes });
+        cur += bytes as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_transfer_splits_at_4k() {
+        let b = split_bursts(0, 10 * 1024);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0], Burst { addr: 0, bytes: 4096 });
+        assert_eq!(b[1], Burst { addr: 4096, bytes: 4096 });
+        assert_eq!(b[2], Burst { addr: 8192, bytes: 2048 });
+    }
+
+    #[test]
+    fn unaligned_start_trims_first_burst() {
+        let b = split_bursts(4000, 200);
+        assert_eq!(b[0], Burst { addr: 4000, bytes: 96 });
+        assert_eq!(b[1], Burst { addr: 4096, bytes: 104 });
+    }
+
+    #[test]
+    fn no_burst_crosses_4k() {
+        for (addr, len) in [(0u64, 64 * 1024usize), (123, 9999), (4090, 20), (8191, 2)] {
+            for b in split_bursts(addr, len) {
+                let last = b.addr + b.bytes as u64 - 1;
+                assert_eq!(b.addr / AXI_4K, last / AXI_4K, "burst {b:?} crosses 4K");
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_cover_exactly() {
+        let (addr, len) = (777u64, 12345usize);
+        let bs = split_bursts(addr, len);
+        assert_eq!(bs[0].addr, addr);
+        let total: usize = bs.iter().map(|b| b.bytes).sum();
+        assert_eq!(total, len);
+        for w in bs.windows(2) {
+            assert_eq!(w[0].addr + w[0].bytes as u64, w[1].addr);
+        }
+    }
+
+    #[test]
+    fn zero_length_yields_no_bursts() {
+        assert!(split_bursts(100, 0).is_empty());
+    }
+
+    #[test]
+    fn beats_at_64b_width() {
+        assert_eq!(Burst { addr: 0, bytes: 4096 }.beats(), 64);
+        assert_eq!(Burst { addr: 0, bytes: 65 }.beats(), 2);
+        assert_eq!(Burst { addr: 0, bytes: 1 }.beats(), 1);
+    }
+}

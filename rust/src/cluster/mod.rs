@@ -1,0 +1,142 @@
+//! Compute cluster model (paper §IV-A): two RV32I control cores, a GeMM
+//! accelerator with 1024 8-bit MACs, hardware performance counters.
+//!
+//! The accelerator has two operating modes:
+//! * **prefill** — multiplies 16×8 by 8×8 operand tiles (one tile-op =
+//!   16·8·8 = 1024 MACs = 1 cycle at full utilisation);
+//! * **decode** — multiplies a 1×64 vector by a 64×16 matrix (also 1024
+//!   MACs/op).
+//!
+//! The cycle model charges `ceil(M·K·N / 1024)` active cycles plus a
+//! fixed launch overhead; the *numerics* of the same GeMM run through the
+//! PJRT artifacts (`crate::runtime`) in the end-to-end example — the
+//! simulator times the movement, XLA computes the math.
+
+/// MACs retired per cycle.
+pub const MACS_PER_CYCLE: u64 = 1024;
+/// Accelerator launch overhead (descriptor + pipeline fill).
+pub const LAUNCH_CYCLES: u64 = 16;
+
+/// Accelerator operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmMode {
+    /// 16×8 · 8×8 operand tiles.
+    Prefill,
+    /// 1×64 · 64×16 vector-matrix.
+    Decode,
+}
+
+impl GemmMode {
+    /// Native tile geometry (m, k, n).
+    pub fn tile(&self) -> (usize, usize, usize) {
+        match self {
+            GemmMode::Prefill => (16, 8, 8),
+            GemmMode::Decode => (1, 64, 16),
+        }
+    }
+}
+
+/// Hardware counters (the paper reads latency from these, §IV-B).
+#[derive(Debug, Default, Clone)]
+pub struct HwCounters {
+    pub busy_cycles: u64,
+    pub tile_ops: u64,
+    pub macs: u64,
+    pub launches: u64,
+}
+
+/// The GeMM accelerator's timing model.
+#[derive(Debug, Default)]
+pub struct GemmAccel {
+    pub counters: HwCounters,
+    busy_until: u64,
+}
+
+impl GemmAccel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cycles for an (M, K, N) matmul in `mode`, padding partial tiles to
+    /// the native geometry (the RTL pads too).
+    pub fn gemm_cycles(&self, mode: GemmMode, m: usize, k: usize, n: usize) -> u64 {
+        let (tm, tk, tn) = mode.tile();
+        let tiles = m.div_ceil(tm) * k.div_ceil(tk) * n.div_ceil(tn);
+        LAUNCH_CYCLES + tiles as u64 * (tm * tk * tn) as u64 / MACS_PER_CYCLE
+    }
+
+    /// Issue a matmul at `now`; returns the completion cycle.
+    pub fn launch(&mut self, mode: GemmMode, m: usize, k: usize, n: usize, now: u64) -> u64 {
+        let cycles = self.gemm_cycles(mode, m, k, n);
+        let start = self.busy_until.max(now);
+        self.busy_until = start + cycles;
+        let (tm, tk, tn) = mode.tile();
+        let tiles = (m.div_ceil(tm) * k.div_ceil(tk) * n.div_ceil(tn)) as u64;
+        self.counters.busy_cycles += cycles;
+        self.counters.tile_ops += tiles;
+        self.counters.macs += tiles * (tm * tk * tn) as u64;
+        self.counters.launches += 1;
+        self.busy_until
+    }
+
+    pub fn busy_at(&self, cycle: u64) -> bool {
+        cycle < self.busy_until
+    }
+
+    /// MAC utilisation over `elapsed` cycles.
+    pub fn utilisation(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        self.counters.macs as f64 / (elapsed as f64 * MACS_PER_CYCLE as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_op_is_one_cycle() {
+        let a = GemmAccel::new();
+        assert_eq!(a.gemm_cycles(GemmMode::Prefill, 16, 8, 8), LAUNCH_CYCLES + 1);
+        assert_eq!(a.gemm_cycles(GemmMode::Decode, 1, 64, 16), LAUNCH_CYCLES + 1);
+    }
+
+    #[test]
+    fn big_gemm_scales_with_macs() {
+        let a = GemmAccel::new();
+        // 2048x192x128 int8 on prefill tiles: 128*24*16 tiles, 1 CC each.
+        let c = a.gemm_cycles(GemmMode::Prefill, 2048, 192, 128);
+        assert_eq!(c, LAUNCH_CYCLES + (2048 / 16 * 192 / 8 * 128 / 8) as u64);
+    }
+
+    #[test]
+    fn partial_tiles_are_padded() {
+        let a = GemmAccel::new();
+        assert_eq!(
+            a.gemm_cycles(GemmMode::Prefill, 17, 9, 9),
+            a.gemm_cycles(GemmMode::Prefill, 32, 16, 16)
+        );
+    }
+
+    #[test]
+    fn launch_serializes_back_to_back_ops() {
+        let mut a = GemmAccel::new();
+        let t1 = a.launch(GemmMode::Prefill, 16, 8, 8, 0);
+        let t2 = a.launch(GemmMode::Prefill, 16, 8, 8, 0);
+        assert_eq!(t2, 2 * t1);
+        assert!(a.busy_at(t2 - 1));
+        assert!(!a.busy_at(t2));
+        assert_eq!(a.counters.launches, 2);
+    }
+
+    #[test]
+    fn utilisation_counts_macs() {
+        let mut a = GemmAccel::new();
+        let done = a.launch(GemmMode::Prefill, 256, 64, 64, 0);
+        let util = a.utilisation(done);
+        assert!(util > 0.9, "util {util}");
+        assert!(util <= 1.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! iDMA baseline: a monolithic P2P DMA engine (Benz et al., TC'23).
+//!
+//! P2MP is software-emulated: one full P2P copy per destination, strictly
+//! sequential ("cycles equal the sum of all P2P transfers", §IV-B). The
+//! engine gathers the source pattern through its local DSE-equivalent and
+//! pushes AXI write bursts; because the *destination* has no DSE, a
+//! patterned destination layout must be expressed as one burst per
+//! contiguous run — short runs mean short bursts and poor link
+//! utilisation, which is exactly the gap Table I's "Addr. Gen" column
+//! shows against distributed DMAs.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::axi::{split_bursts, IdPool};
+use crate::mem::Scratchpad;
+use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
+
+use super::torrent::dse::AffinePattern;
+use super::TaskResult;
+
+/// Descriptor-processing cycles per issued burst.
+pub const IDMA_DESC_CYCLES: u64 = 2;
+/// Outstanding AXI write window.
+pub const IDMA_OUTSTANDING: usize = 8;
+
+/// One P2MP job for the iDMA: same stream to every destination pattern.
+#[derive(Debug, Clone)]
+pub struct IdmaTask {
+    pub task: u32,
+    pub read: AffinePattern,
+    pub dests: Vec<(NodeId, AffinePattern)>,
+    pub with_data: bool,
+}
+
+#[derive(Debug)]
+struct Active {
+    task: IdmaTask,
+    submitted_at: u64,
+    /// Flattened (dest index, burst addr, stream offset, len) work list.
+    bursts: VecDeque<(usize, u64, usize, usize)>,
+    stream: Option<Rc<Vec<u8>>>,
+    ids: IdPool,
+    /// Read-side DSE budget in bytes.
+    budget: f64,
+    rate: f64,
+    next_issue_at: u64,
+    /// Index of the destination currently being served (sequential P2P).
+    cur_dest: usize,
+    /// Outstanding bursts of the current destination.
+    inflight: usize,
+    issued_bytes: usize,
+}
+
+/// The engine.
+#[derive(Debug)]
+pub struct Idma {
+    pub node: NodeId,
+    queue: VecDeque<(IdmaTask, u64)>,
+    active: Option<Active>,
+    pub results: Vec<TaskResult>,
+}
+
+impl Idma {
+    pub fn new(node: NodeId) -> Self {
+        Idma { node, queue: VecDeque::new(), active: None, results: Vec::new() }
+    }
+
+    pub fn submit(&mut self, task: IdmaTask, now: u64) {
+        assert!(!task.dests.is_empty());
+        for (_, p) in &task.dests {
+            assert_eq!(p.total_bytes(), task.read.total_bytes());
+        }
+        self.queue.push_back((task, now));
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none() && self.queue.is_empty()
+    }
+
+    /// Handle an AXI write response addressed to this engine.
+    pub fn handle(&mut self, pkt: &Packet, now: u64) -> bool {
+        let Message::AxiWriteResp { axi_id, ok } = pkt.msg else { return false };
+        assert!(ok, "iDMA write burst failed");
+        let Some(a) = self.active.as_mut() else { return true };
+        a.ids.release(axi_id);
+        a.inflight -= 1;
+        // Transfer to the current destination completes when its bursts
+        // are done; completion of the whole task when the work list and
+        // windows drain.
+        if a.bursts.is_empty() && a.inflight == 0 && a.issued_bytes == a.total_bytes() {
+            let r = TaskResult {
+                task: a.task.task,
+                submitted_at: a.submitted_at,
+                finished_at: now,
+                bytes: a.task.read.total_bytes(),
+                n_dests: a.task.dests.len(),
+            };
+            self.results.push(r);
+            self.active = None;
+        }
+        true
+    }
+
+    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
+        let now = net.cycle;
+        if self.active.is_none() {
+            if let Some((task, submitted_at)) = self.queue.pop_front() {
+                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let mut bursts = VecDeque::new();
+                for (di, (_, pat)) in task.dests.iter().enumerate() {
+                    let mut off = 0;
+                    for (addr, len) in pat.runs() {
+                        for b in split_bursts(addr, len) {
+                            bursts.push_back((di, b.addr, off, b.bytes));
+                            off += b.bytes;
+                        }
+                    }
+                }
+                let rate = task.read.rate_per_cycle();
+                self.active = Some(Active {
+                    submitted_at: submitted_at.max(now),
+                    bursts,
+                    stream,
+                    ids: IdPool::new(IDMA_OUTSTANDING),
+                    budget: 0.0,
+                    rate,
+                    next_issue_at: now,
+                    cur_dest: 0,
+                    inflight: 0,
+                    issued_bytes: 0,
+                    task,
+                });
+            }
+        }
+        let Some(a) = self.active.as_mut() else { return };
+        a.budget += a.rate;
+        // Issue bursts: sequential per destination, windowed within one.
+        while let Some(&(di, addr, off, len)) = a.bursts.front() {
+            if now < a.next_issue_at || a.ids.is_exhausted() {
+                break;
+            }
+            if di != a.cur_dest {
+                // Next destination starts only when the previous fully
+                // drained (sequential P2P semantics).
+                if a.inflight > 0 {
+                    break;
+                }
+                a.cur_dest = di;
+            }
+            if a.budget < len as f64 {
+                break; // source read hasn't produced the bytes yet
+            }
+            a.budget -= len as f64;
+            a.bursts.pop_front();
+            let axi_id = a.ids.acquire().unwrap();
+            let payload = a.stream.as_ref().map(|s| s[off..off + len].to_vec());
+            let dst = a.task.dests[di].0;
+            let mut pkt = Packet::new(
+                0,
+                self.node,
+                dst,
+                Message::AxiWriteReq { addr, bytes: len, axi_id },
+            );
+            pkt = match payload {
+                Some(p) => pkt.with_payload(p),
+                None => pkt.with_phantom_payload(len),
+            };
+            net.send(self.node, pkt);
+            a.inflight += 1;
+            a.issued_bytes += len;
+            a.next_issue_at = now + IDMA_DESC_CYCLES + (len as u64).div_ceil(FLIT_BYTES as u64);
+        }
+    }
+}
+
+impl Active {
+    fn total_bytes(&self) -> usize {
+        self.task.read.total_bytes() * self.task.dests.len()
+    }
+}

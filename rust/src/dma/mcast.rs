@@ -1,0 +1,205 @@
+//! ESP-style network-layer multicast source engine + destination sink
+//! (the paper's primary comparison baseline, §IV-A/B).
+//!
+//! The source programs the routers' multicast destination sets (a
+//! configuration cost that grows faster than Torrent's per-destination
+//! cfg — the paper observes ESP's "configuration complexity grows faster
+//! with N_dst"), then streams burst-sized segments with a destination-set
+//! header; the mesh routers replicate flits along the XY tree
+//! ([`crate::noc::multicast`]). Every destination writes the payload at
+//! its drop address and acknowledges the final segment; the source
+//! timestamps completion at the last ack.
+
+use std::collections::{HashSet, VecDeque};
+use std::rc::Rc;
+
+use crate::mem::Scratchpad;
+use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
+
+use super::torrent::dse::AffinePattern;
+use super::torrent::timing::SEG_BYTES;
+use super::TaskResult;
+
+/// Router-programming cost model: `BASE + PER_DEST·N + QUAD·N²` cycles.
+/// The quadratic term reflects per-router destination-set table updates
+/// along the (growing) tree — the super-linear setup the paper contrasts
+/// with Chainwrite's linear 82 CC/destination.
+pub const ESP_CFG_BASE: u64 = 40;
+pub const ESP_CFG_PER_DEST: u64 = 10;
+pub const ESP_CFG_QUAD: u64 = 8;
+
+/// Multicast configuration cycles for `n` destinations.
+pub fn esp_cfg_cycles(n: usize) -> u64 {
+    ESP_CFG_BASE + ESP_CFG_PER_DEST * n as u64 + ESP_CFG_QUAD * (n * n) as u64
+}
+
+/// A network-layer multicast job: the same contiguous block is dropped at
+/// window-local offset `drop_offset` of every destination's scratchpad
+/// (ESP multicasts to accelerator queues; patterned local writes are a
+/// distributed-DMA capability).
+#[derive(Debug, Clone)]
+pub struct McastTask {
+    pub task: u32,
+    pub read: AffinePattern,
+    pub dests: Vec<NodeId>,
+    /// Offset within each destination's local window.
+    pub drop_offset: u64,
+    pub with_data: bool,
+}
+
+#[derive(Debug)]
+struct Active {
+    task: McastTask,
+    submitted_at: u64,
+    cfg_done_at: u64,
+    stream: Option<Rc<Vec<u8>>>,
+    segs: Vec<(usize, usize)>,
+    next_seg: usize,
+    budget: f64,
+    rate: f64,
+    /// Destinations that acked the last segment.
+    acked: HashSet<NodeId>,
+    sent_all: bool,
+}
+
+/// Source-side engine.
+#[derive(Debug)]
+pub struct McastEngine {
+    pub node: NodeId,
+    queue: VecDeque<(McastTask, u64)>,
+    active: Option<Active>,
+    pub results: Vec<TaskResult>,
+}
+
+impl McastEngine {
+    pub fn new(node: NodeId) -> Self {
+        McastEngine { node, queue: VecDeque::new(), active: None, results: Vec::new() }
+    }
+
+    pub fn submit(&mut self, task: McastTask, now: u64) {
+        assert!(!task.dests.is_empty());
+        self.queue.push_back((task, now));
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none() && self.queue.is_empty()
+    }
+
+    /// Consume ack messages addressed to the source.
+    pub fn handle(&mut self, pkt: &Packet, now: u64) -> bool {
+        let Message::McastAck { task, .. } = pkt.msg else { return false };
+        let Some(a) = self.active.as_mut() else { return true };
+        if a.task.task != task {
+            return true;
+        }
+        a.acked.insert(pkt.src);
+        if a.sent_all && a.acked.len() == a.task.dests.len() {
+            self.results.push(TaskResult {
+                task,
+                submitted_at: a.submitted_at,
+                finished_at: now,
+                bytes: a.task.read.total_bytes(),
+                n_dests: a.task.dests.len(),
+            });
+            self.active = None;
+        }
+        true
+    }
+
+    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
+        let now = net.cycle;
+        if self.active.is_none() {
+            if let Some((task, submitted_at)) = self.queue.pop_front() {
+                let total = task.read.total_bytes();
+                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let mut segs = Vec::new();
+                let mut off = 0;
+                while off < total {
+                    let len = SEG_BYTES.min(total - off);
+                    segs.push((off, len));
+                    off += len;
+                }
+                let rate = task.read.rate_per_cycle();
+                self.active = Some(Active {
+                    submitted_at: submitted_at.max(now),
+                    cfg_done_at: now + esp_cfg_cycles(task.dests.len()),
+                    stream,
+                    segs,
+                    next_seg: 0,
+                    budget: 0.0,
+                    rate,
+                    acked: HashSet::new(),
+                    sent_all: false,
+                    task,
+                });
+            }
+        }
+        let Some(a) = self.active.as_mut() else { return };
+        if now < a.cfg_done_at || a.sent_all {
+            return;
+        }
+        a.budget += a.rate;
+        while a.next_seg < a.segs.len() {
+            let (off, len) = a.segs[a.next_seg];
+            if a.budget < len as f64 {
+                break;
+            }
+            a.budget -= len as f64;
+            let payload = a.stream.as_ref().map(|s| Rc::new(s[off..off + len].to_vec()));
+            let last = a.next_seg == a.segs.len() - 1;
+            let pkt = Packet::new(
+                0,
+                self.node,
+                a.task.dests[0],
+                Message::McastData {
+                    task: a.task.task,
+                    seq: a.next_seg as u32,
+                    last,
+                    addr: a.task.drop_offset + off as u64,
+                },
+            )
+            .with_shared_payload(payload, len)
+            .with_mcast(a.task.dests.clone());
+            net.send(self.node, pkt);
+            a.next_seg += 1;
+        }
+        if a.next_seg == a.segs.len() {
+            a.sent_all = true;
+        }
+        let _ = FLIT_BYTES;
+    }
+}
+
+/// Destination-side sink: writes multicast payloads into the local
+/// scratchpad and acks the final segment. Lives in every SoC node.
+#[derive(Debug, Default)]
+pub struct McastSink {
+    pub bytes_received: u64,
+}
+
+impl McastSink {
+    pub fn handle(
+        &mut self,
+        node: NodeId,
+        pkt: &Packet,
+        mem: &mut Scratchpad,
+        net: &mut Network,
+    ) -> bool {
+        let Message::McastData { task, seq, last, addr } = pkt.msg else { return false };
+        // `addr` is a window-local offset: resolve against this node's base.
+        let local = mem.base + addr;
+        if let Some(data) = &pkt.payload {
+            if mem.contains(local, data.len()) {
+                mem.write(local, data);
+            }
+        }
+        self.bytes_received += pkt.payload_bytes as u64;
+        if last {
+            net.send(
+                node,
+                Packet::new(0, node, pkt.src, Message::McastAck { task, seq }),
+            );
+        }
+        true
+    }
+}

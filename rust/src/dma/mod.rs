@@ -1,0 +1,42 @@
+//! Application-layer DMA engines — the paper's contribution and its two
+//! baselines.
+//!
+//! * [`torrent`] — the Torrent distributed DMA: DSE (ND-affine address
+//!   generation), data switch (stream duplication / cut-through
+//!   forwarding), backend (AXI/cfg packet construction) and the
+//!   four-phase **Chainwrite** orchestration of Fig 4.
+//! * [`idma`] — monolithic P2P DMA (iDMA baseline): P2MP = repeated
+//!   unicast, sequential per destination.
+//! * [`xdma`] — the distributed XDMA predecessor (the paper's FPGA
+//!   baseline): remote-configured P2P transfers, software P2MP, per-run
+//!   descriptor overhead on non-contiguous patterns.
+//! * [`mcast`] — source engine for the ESP-style network-layer multicast
+//!   baseline (replication in the routers, §II-B).
+
+pub mod idma;
+pub mod mcast;
+pub mod torrent;
+pub mod xdma;
+
+pub use torrent::{ChainTask, ChainDest, Torrent};
+
+/// Completion record every engine produces for a finished task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: u32,
+    /// Cycle the task was submitted to the engine.
+    pub submitted_at: u64,
+    /// Cycle the engine observed completion (initiator-side, matching the
+    /// paper's "from task dispatch to the DSE until the initiator Torrent
+    /// receives the finish signal").
+    pub finished_at: u64,
+    /// Payload bytes moved per destination.
+    pub bytes: usize,
+    pub n_dests: usize,
+}
+
+impl TaskResult {
+    pub fn latency(&self) -> u64 {
+        self.finished_at - self.submitted_at
+    }
+}

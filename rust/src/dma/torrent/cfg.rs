@@ -1,0 +1,237 @@
+//! Cross-Torrent configuration packets (paper Fig 4(c)).
+//!
+//! A cfg packet carries: a Type Identifier (read/write), a Frame
+//! Identifier (total frame count / current frame id — the cfg is split
+//! into frame bodies so it can ride interconnects of any width), and per
+//! frame body the six fields A–F: A/B the previous/next chain node, C the
+//! chain position, D the task id, E the AXI burst size for the Backend,
+//! and F the DSE access pattern. The byte encoding below is what the
+//! simulator puts on the wire, so cfg dispatch cost scales with pattern
+//! complexity exactly as in the RTL.
+
+use crate::noc::NodeId;
+
+use super::dse::AffinePattern;
+
+/// Chainwrite role this cfg assigns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CfgType {
+    /// Remote reads from us (P2P read tunnel).
+    Read = 0,
+    /// We write into the chain / remote memory.
+    Write = 1,
+}
+
+/// Decoded configuration for one participating Torrent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TorrentCfg {
+    pub task: u32,
+    pub cfg_type: CfgType,
+    /// Previous node in the chain (None for the first follower: the
+    /// initiator itself precedes it).
+    pub prev: Option<NodeId>,
+    /// Next node in the chain (None for the tail).
+    pub next: Option<NodeId>,
+    /// 0-based position among the followers.
+    pub position: u16,
+    /// Follower count of the chain.
+    pub chain_len: u16,
+    /// AXI burst size the Backend should use (field E).
+    pub axi_burst_bytes: u32,
+    /// Local DSE write pattern (field F).
+    pub pattern: AffinePattern,
+}
+
+const MAGIC: u16 = 0x70C7; // "TOrrent Cfg"
+
+fn put_u16(v: &mut Vec<u8>, x: u16) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_i64(v: &mut Vec<u8>, x: i64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+struct Reader<'a>(&'a [u8], usize);
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.1 + n > self.0.len() {
+            return Err(format!("cfg truncated at byte {}", self.1));
+        }
+        let s = &self.0[self.1..self.1 + n];
+        self.1 += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Sentinel for "no node" in the prev/next fields.
+const NONE_NODE: u32 = u32::MAX;
+
+impl TorrentCfg {
+    /// Wire encoding (little-endian, variable length with the pattern).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(64);
+        put_u16(&mut v, MAGIC);
+        put_u16(&mut v, self.cfg_type as u16);
+        put_u32(&mut v, self.task);
+        put_u32(&mut v, self.prev.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
+        put_u32(&mut v, self.next.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
+        put_u16(&mut v, self.position);
+        put_u16(&mut v, self.chain_len);
+        put_u32(&mut v, self.axi_burst_bytes);
+        // Field F: the DSE pattern.
+        put_u64(&mut v, self.pattern.base);
+        put_u32(&mut v, self.pattern.elem_bytes as u32);
+        put_u16(&mut v, self.pattern.dims.len() as u16);
+        for &(count, stride) in &self.pattern.dims {
+            put_u32(&mut v, count as u32);
+            put_i64(&mut v, stride);
+        }
+        v
+    }
+
+    /// Decode one cfg from the front of `bytes`; returns the cfg and the
+    /// bytes consumed. A packet may carry several concatenated cfgs (the
+    /// read-tunnel request carries the remote read cfg followed by the
+    /// requester's write-back cfg).
+    pub fn decode_prefix(bytes: &[u8]) -> Result<(Self, usize), String> {
+        let mut r = Reader(bytes, 0);
+        let cfg = Self::decode_reader(&mut r)?;
+        Ok((cfg, r.1))
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self, String> {
+        Ok(Self::decode_prefix(bytes)?.0)
+    }
+
+    fn decode_reader(r: &mut Reader) -> Result<Self, String> {
+        if r.u16()? != MAGIC {
+            return Err("bad cfg magic".into());
+        }
+        let cfg_type = match r.u16()? {
+            0 => CfgType::Read,
+            1 => CfgType::Write,
+            t => return Err(format!("bad cfg type {t}")),
+        };
+        let task = r.u32()?;
+        let prev = match r.u32()? {
+            NONE_NODE => None,
+            n => Some(NodeId(n as usize)),
+        };
+        let next = match r.u32()? {
+            NONE_NODE => None,
+            n => Some(NodeId(n as usize)),
+        };
+        let position = r.u16()?;
+        let chain_len = r.u16()?;
+        let axi_burst_bytes = r.u32()?;
+        let base = r.u64()?;
+        let elem_bytes = r.u32()? as usize;
+        let ndims = r.u16()? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let count = r.u32()? as usize;
+            let stride = r.i64()?;
+            dims.push((count, stride));
+        }
+        Ok(TorrentCfg {
+            task,
+            cfg_type,
+            prev,
+            next,
+            position,
+            chain_len,
+            axi_burst_bytes,
+            pattern: AffinePattern { base, elem_bytes, dims },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TorrentCfg {
+        TorrentCfg {
+            task: 42,
+            cfg_type: CfgType::Write,
+            prev: Some(NodeId(3)),
+            next: None,
+            position: 2,
+            chain_len: 3,
+            axi_burst_bytes: 4096,
+            pattern: AffinePattern {
+                base: 0x20_0040,
+                elem_bytes: 8,
+                dims: vec![(16, 128), (4, 2048)],
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        assert_eq!(TorrentCfg::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn roundtrip_no_prev_no_dims() {
+        let c = TorrentCfg {
+            task: 0,
+            cfg_type: CfgType::Read,
+            prev: None,
+            next: Some(NodeId(7)),
+            position: 0,
+            chain_len: 1,
+            axi_burst_bytes: 64,
+            pattern: AffinePattern::contiguous(0, 64),
+        };
+        assert_eq!(TorrentCfg::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn encoded_size_grows_with_pattern_dims() {
+        let mut c = sample();
+        let s2 = c.encode().len();
+        c.pattern.dims.push((2, 4096));
+        assert_eq!(c.encode().len(), s2 + 12);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let bytes = sample().encode();
+        assert!(TorrentCfg::decode(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] ^= 0xFF;
+        assert!(TorrentCfg::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn negative_stride_survives() {
+        let mut c = sample();
+        c.pattern.dims[0].1 = -512;
+        assert_eq!(TorrentCfg::decode(&c.encode()).unwrap(), c);
+    }
+}

@@ -1,0 +1,207 @@
+//! Data Streaming Engine: ND-affine address generation.
+//!
+//! The Torrent frontend reuses the XDMA/DataMaestro DSE (paper Fig 3): an
+//! n-deep affine loop nest `base + Σ i_k · stride_k` that both gathers a
+//! source stream and scatters an incoming stream, enabling on-the-fly
+//! layout transforms (Table II's MNMxNy re-tilings) without staging
+//! buffers.
+//!
+//! Timing: the DSE emits one *run* (maximal contiguous byte span) per
+//! iteration of the inner non-contiguous loop. Runs ≥ 64 B stream at the
+//! full 64 B/cycle port rate; shorter runs waste port slots, so the
+//! effective rate is `min(run_bytes, 64)` per cycle — the fraction
+//! [`AffinePattern::rate_per_cycle`] feeds the engines' injection gates.
+
+use crate::mem::Scratchpad;
+
+/// An n-D affine access pattern. `dims` are (count, stride_bytes) pairs,
+/// innermost first. A contiguous transfer of `len` bytes is
+/// `AffinePattern::contiguous(base, len)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffinePattern {
+    pub base: u64,
+    /// Contiguous bytes moved per innermost iteration.
+    pub elem_bytes: usize,
+    /// (count, stride) per dimension, innermost first. Empty = one element.
+    pub dims: Vec<(usize, i64)>,
+}
+
+impl AffinePattern {
+    /// 1-D contiguous pattern.
+    pub fn contiguous(base: u64, len: usize) -> Self {
+        AffinePattern { base, elem_bytes: len, dims: vec![] }
+    }
+
+    /// 2-D strided pattern: `rows` runs of `run_bytes` every `pitch` bytes.
+    pub fn strided(base: u64, rows: usize, run_bytes: usize, pitch: i64) -> Self {
+        AffinePattern { base, elem_bytes: run_bytes, dims: vec![(rows, pitch)] }
+    }
+
+    /// Total payload bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.elem_bytes * self.dims.iter().map(|(c, _)| *c).product::<usize>().max(1)
+    }
+
+    /// Iterate `(addr, len)` runs in stream order, merging adjacent
+    /// contiguous runs (the DSE's run coalescer).
+    pub fn runs(&self) -> Vec<(u64, usize)> {
+        let mut out: Vec<(u64, usize)> = Vec::new();
+        let counts: Vec<usize> = self.dims.iter().map(|(c, _)| *c).collect();
+        let total: usize = counts.iter().product::<usize>().max(1);
+        let mut idx = vec![0usize; self.dims.len()];
+        for _ in 0..total {
+            let off: i64 = idx
+                .iter()
+                .zip(&self.dims)
+                .map(|(&i, &(_, s))| i as i64 * s)
+                .sum();
+            let addr = (self.base as i64 + off) as u64;
+            match out.last_mut() {
+                Some((a, l)) if *a + *l as u64 == addr => *l += self.elem_bytes,
+                _ => out.push((addr, self.elem_bytes)),
+            }
+            // Odometer increment, innermost first.
+            for k in 0..idx.len() {
+                idx[k] += 1;
+                if idx[k] < counts[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        if self.dims.is_empty() {
+            // single contiguous element
+            return vec![(self.base, self.elem_bytes)];
+        }
+        out
+    }
+
+    /// Effective port utilisation in bytes/cycle (≤ 64): short runs waste
+    /// slots on the 64 B port.
+    pub fn rate_per_cycle(&self) -> f64 {
+        let runs = self.runs();
+        if runs.is_empty() {
+            return 64.0;
+        }
+        let total: usize = runs.iter().map(|(_, l)| l).sum();
+        let cycles: u64 = runs
+            .iter()
+            .map(|(_, l)| (*l as u64).div_ceil(crate::noc::FLIT_BYTES as u64))
+            .sum();
+        (total as f64 / cycles as f64).min(64.0)
+    }
+
+    /// Cycles for the DSE to stream this pattern through its port.
+    pub fn stream_cycles(&self) -> u64 {
+        self.runs()
+            .iter()
+            .map(|(_, l)| (*l as u64).div_ceil(crate::noc::FLIT_BYTES as u64))
+            .sum()
+    }
+
+    /// Gather the pattern's bytes from `mem` into a stream buffer.
+    pub fn gather(&self, mem: &mut Scratchpad) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_bytes());
+        for (addr, len) in self.runs() {
+            out.extend_from_slice(&mem.read(addr, len));
+        }
+        out
+    }
+
+    /// Scatter `stream` into `mem` following the pattern. Returns bytes
+    /// consumed (= total_bytes; panics if the stream is short).
+    pub fn scatter(&self, stream: &[u8], mem: &mut Scratchpad) -> usize {
+        let mut off = 0;
+        for (addr, len) in self.runs() {
+            mem.write(addr, &stream[off..off + len]);
+            off += len;
+        }
+        off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spm() -> Scratchpad {
+        let mut s = Scratchpad::new(0, 1 << 16);
+        s.fill_pattern(0x5A);
+        s
+    }
+
+    #[test]
+    fn contiguous_is_one_run() {
+        let p = AffinePattern::contiguous(0x100, 4096);
+        assert_eq!(p.runs(), vec![(0x100, 4096)]);
+        assert_eq!(p.total_bytes(), 4096);
+        assert!((p.rate_per_cycle() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strided_rows() {
+        let p = AffinePattern::strided(0, 4, 8, 128);
+        assert_eq!(p.runs(), vec![(0, 8), (128, 8), (256, 8), (384, 8)]);
+        assert_eq!(p.total_bytes(), 32);
+        assert!((p.rate_per_cycle() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adjacent_runs_coalesce() {
+        // stride == elem_bytes -> fully contiguous despite 2 dims
+        let p = AffinePattern { base: 0, elem_bytes: 8, dims: vec![(16, 8)] };
+        assert_eq!(p.runs(), vec![(0, 128)]);
+        assert!((p.rate_per_cycle() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn three_level_nest() {
+        // 2 tiles of 2 rows of 4 bytes; row pitch 16, tile pitch 64.
+        let p = AffinePattern { base: 0, elem_bytes: 4, dims: vec![(2, 16), (2, 64)] };
+        assert_eq!(p.runs(), vec![(0, 4), (16, 4), (64, 4), (80, 4)]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut src = spm();
+        let mut dst = Scratchpad::new(0, 1 << 16);
+        let read = AffinePattern::strided(0x40, 8, 16, 256);
+        let stream = read.gather(&mut src);
+        assert_eq!(stream.len(), 128);
+        // Write it compacted at 0x1000 (a layout transform!).
+        let write = AffinePattern::contiguous(0x1000, 128);
+        assert_eq!(write.scatter(&stream, &mut dst), 128);
+        // Verify element by element.
+        for row in 0..8 {
+            let want = src.peek(0x40 + row * 256, 16);
+            let got = dst.peek(0x1000 + row * 16, 16);
+            assert_eq!(want, got, "row {row}");
+        }
+    }
+
+    #[test]
+    fn stream_cycles_counts_port_slots() {
+        assert_eq!(AffinePattern::contiguous(0, 128).stream_cycles(), 2);
+        // 4 runs of 8B: one port slot each.
+        assert_eq!(AffinePattern::strided(0, 4, 8, 128).stream_cycles(), 4);
+        // run of 100 B: 2 slots.
+        assert_eq!(AffinePattern::strided(0, 2, 100, 512).stream_cycles(), 4);
+    }
+
+    #[test]
+    fn negative_stride_walks_backward() {
+        let p = AffinePattern { base: 1024, elem_bytes: 8, dims: vec![(3, -64)] };
+        assert_eq!(p.runs(), vec![(1024, 8), (960, 8), (896, 8)]);
+    }
+
+    #[test]
+    fn mnm16n8_relayout_pattern() {
+        // Read a 32x16 int8 matrix stored MNM16N8 (tiles 16x8, 128 B each,
+        // tile-row-major) as logical rows: per logical row, 2 runs of 8 B
+        // at tile-local offsets.
+        // Tile (ti, tj) base = (ti * 2 + tj) * 128; row r within tile at +r*8.
+        // Logical row 17 = tile row 1, local row 1: runs at 256+8, 384+8.
+        let row17 = AffinePattern { base: (2 * 128) + 8, elem_bytes: 8, dims: vec![(2, 128)] };
+        assert_eq!(row17.runs(), vec![(264, 8), (392, 8)]);
+    }
+}

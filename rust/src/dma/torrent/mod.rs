@@ -1,0 +1,582 @@
+//! The Torrent distributed DMA engine (paper §III).
+//!
+//! One `Torrent` instance sits at every mesh node (Fig 1(c)). A P2MP task
+//! submitted to the *initiator* Torrent runs the four-phase Chainwrite of
+//! Fig 4:
+//!
+//! 1. **Configuration dispatch** — the initiator encodes one
+//!    [`cfg::TorrentCfg`] per follower (prev/next chain neighbours, AXI
+//!    burst size, DSE write pattern) and sends them out in parallel;
+//! 2. **Grant back-propagation** — the tail follower generates Grant on
+//!    cfg decode; every intermediate follower forwards it to its
+//!    predecessor once it is itself ready;
+//! 3. **Data transfer** — the initiator's DSE streams the source pattern
+//!    into the chain as burst-sized segments; every follower's data
+//!    switch duplicates the incoming stream — one copy scattered into
+//!    local memory by its DSE, one copy *cut-through forwarded* to the
+//!    next hop (flits leave [`timing::FWD_LATENCY_CYCLES`] after they
+//!    arrive, no store-and-wait);
+//! 4. **Finish back-propagation** — the tail signals Finish when its
+//!    local write completes; intermediates forward it once their own
+//!    writes are done; the initiator timestamps completion.
+//!
+//! P2P copy is the same flow with a single follower; local loopback
+//! (src/dst in the same scratchpad) degenerates to a DSE-only reshuffle.
+
+pub mod cfg;
+pub mod dse;
+pub mod timing;
+
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+use crate::mem::Scratchpad;
+use crate::noc::{Gate, Message, Network, NodeId, Packet, PacketId, FLIT_BYTES};
+
+use self::cfg::{CfgType, TorrentCfg};
+use self::dse::AffinePattern;
+use self::timing::*;
+use super::TaskResult;
+
+/// One Chainwrite destination: node + local DSE write pattern.
+#[derive(Debug, Clone)]
+pub struct ChainDest {
+    pub node: NodeId,
+    pub pattern: AffinePattern,
+}
+
+/// A P2MP (or P2P when `dests.len() == 1`) task for an initiator Torrent.
+/// `dests` is already in chain order — the coordinator applies a
+/// `sched::Strategy` before submission.
+#[derive(Debug, Clone)]
+pub struct ChainTask {
+    pub task: u32,
+    /// Source DSE read pattern (in the initiator's scratchpad).
+    pub read: AffinePattern,
+    pub dests: Vec<ChainDest>,
+    /// Move real bytes (integrity-checked runs) or phantom timing-only.
+    pub with_data: bool,
+}
+
+/// Initiator progress.
+#[derive(Debug)]
+enum InitPhase {
+    /// Sending cfg i at/after the embedded cycle.
+    Dispatch { next_cfg: usize, ready_at: u64 },
+    WaitGrant,
+    /// Streaming data segments.
+    SendData { next_seg: usize, sent_all: bool },
+    WaitFinish,
+}
+
+#[derive(Debug)]
+struct InitiatorState {
+    task: ChainTask,
+    submitted_at: u64,
+    phase: InitPhase,
+    /// Gathered source stream (None for phantom runs).
+    stream: Option<Rc<Vec<u8>>>,
+    /// Segment boundaries (byte offsets).
+    segs: Vec<(usize, usize)>,
+    /// DSE rate limiter: fractional flits of injection budget.
+    dse_budget: f64,
+    dse_rate_flits: f64,
+    /// Gate of the segment currently being streamed.
+    cur_gate: Option<Gate>,
+    cur_gate_total: u32,
+}
+
+/// Follower-side per-task state.
+#[derive(Debug)]
+struct FollowerState {
+    cfg: TorrentCfg,
+    initiator: NodeId,
+    cfg_ready_at: u64,
+    grant_from_next: bool,
+    grant_sent: bool,
+    grant_ready_at: Option<u64>,
+    /// Bytes of the expected stream that have fully arrived (delivered).
+    bytes_arrived: usize,
+    expected_bytes: usize,
+    /// Local DSE write completion frontier.
+    write_done_at: u64,
+    /// Arrived stream segments awaiting enough bytes to scatter.
+    stream_buf: Vec<u8>,
+    scattered: bool,
+    finish_from_next: bool,
+    finish_sent: bool,
+    finish_ready_at: Option<u64>,
+    /// Cut-through forwarding gates keyed by incoming packet id.
+    forwards: HashMap<PacketId, Gate>,
+    /// Incoming packet ids already forwarded (guards the delivered path).
+    forwarded: std::collections::HashSet<PacketId>,
+}
+
+/// Activity counters (power model inputs, Fig 11(d–f)).
+#[derive(Debug, Default, Clone)]
+pub struct TorrentStats {
+    pub cfgs_sent: u64,
+    pub cfgs_received: u64,
+    pub bytes_streamed_out: u64,
+    pub bytes_forwarded: u64,
+    pub bytes_written_local: u64,
+    pub grants_relayed: u64,
+    pub finishes_relayed: u64,
+    pub tasks_completed: u64,
+}
+
+/// A Torrent DMA endpoint.
+#[derive(Debug)]
+pub struct Torrent {
+    pub node: NodeId,
+    queue: VecDeque<(ChainTask, u64)>,
+    active: Option<InitiatorState>,
+    followers: HashMap<u32, FollowerState>,
+    /// Outstanding read-tunnel requests we initiated: task -> submit time.
+    /// The remote Torrent streams the data back as a 1-node chain; we
+    /// record a local TaskResult when our follower role completes.
+    pending_reads: HashMap<u32, u64>,
+    pub results: Vec<TaskResult>,
+    pub stats: TorrentStats,
+}
+
+impl Torrent {
+    pub fn new(node: NodeId) -> Self {
+        Torrent {
+            node,
+            queue: VecDeque::new(),
+            active: None,
+            followers: HashMap::new(),
+            pending_reads: HashMap::new(),
+            results: Vec::new(),
+            stats: TorrentStats::default(),
+        }
+    }
+
+    /// Submit a Chainwrite / P2P task (initiator side).
+    pub fn submit(&mut self, task: ChainTask, now: u64) {
+        assert!(!task.dests.is_empty(), "task needs at least one destination");
+        for d in &task.dests {
+            assert_eq!(
+                d.pattern.total_bytes(),
+                task.read.total_bytes(),
+                "destination pattern size mismatch"
+            );
+        }
+        self.queue.push_back((task, now));
+    }
+
+    /// Local loopback (src and dst in the same scratchpad): the Torrent
+    /// acts as a data reshuffling engine; returns the completion cycle.
+    pub fn local_loopback(
+        &mut self,
+        read: &AffinePattern,
+        write: &AffinePattern,
+        mem: &mut Scratchpad,
+        now: u64,
+    ) -> u64 {
+        assert_eq!(read.total_bytes(), write.total_bytes());
+        let stream = read.gather(mem);
+        write.scatter(&stream, mem);
+        self.stats.bytes_written_local += stream.len() as u64;
+        // Read and write DSEs run concurrently; the slower side dominates.
+        now + read.stream_cycles().max(write.stream_cycles())
+    }
+
+    /// Remote read (pull tunnel, paper Fig 4(c) Type Identifier = read):
+    /// ask the Torrent at `remote` to stream `remote_read` back to us; our
+    /// DSE scatters it with `local_write`. The data returns as a regular
+    /// 1-destination Chainwrite initiated by the remote, so it reuses the
+    /// whole grant/finish machinery. Always moves real bytes.
+    pub fn submit_read(
+        &mut self,
+        task: u32,
+        remote: NodeId,
+        remote_read: AffinePattern,
+        local_write: AffinePattern,
+        net: &mut Network,
+        now: u64,
+    ) {
+        assert_eq!(remote_read.total_bytes(), local_write.total_bytes());
+        let cfg_remote = TorrentCfg {
+            task,
+            cfg_type: CfgType::Read,
+            prev: None,
+            next: Some(self.node),
+            position: 0,
+            chain_len: 1,
+            axi_burst_bytes: SEG_BYTES as u32,
+            pattern: remote_read,
+        };
+        let cfg_back = TorrentCfg {
+            task,
+            cfg_type: CfgType::Write,
+            prev: Some(remote),
+            next: None,
+            position: 0,
+            chain_len: 1,
+            axi_burst_bytes: SEG_BYTES as u32,
+            pattern: local_write,
+        };
+        let mut payload = cfg_remote.encode();
+        payload.extend_from_slice(&cfg_back.encode());
+        net.send(
+            self.node,
+            Packet::new(0, self.node, remote, Message::TorrentCfg { task })
+                .with_payload(payload),
+        );
+        self.stats.cfgs_sent += 1;
+        self.pending_reads.insert(task, now);
+    }
+
+    /// True when nothing is in flight on this engine.
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none()
+            && self.queue.is_empty()
+            && self.followers.is_empty()
+            && self.pending_reads.is_empty()
+    }
+
+    /// Number of in-flight follower roles (used by tests/failure injection).
+    pub fn follower_count(&self) -> usize {
+        self.followers.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Inbox handling
+    // ------------------------------------------------------------------
+
+    /// Consume a packet addressed to this Torrent. Returns `false` if the
+    /// message is not Torrent traffic.
+    pub fn handle(&mut self, pkt: &Packet, mem: &mut Scratchpad, now: u64) -> bool {
+        match &pkt.msg {
+            Message::TorrentCfg { task } => {
+                let bytes = pkt.payload.as_ref().expect("cfg carries its encoding");
+                let (cfg, consumed) =
+                    TorrentCfg::decode_prefix(bytes).expect("malformed cfg frame");
+                debug_assert_eq!(cfg.task, *task);
+                self.stats.cfgs_received += 1;
+                if cfg.cfg_type == CfgType::Read {
+                    // Read tunnel: the requester's write-back cfg follows in
+                    // the same payload; serve it as a 1-node Chainwrite from
+                    // our memory back to the requester.
+                    let back = TorrentCfg::decode(&bytes[consumed..])
+                        .expect("read request missing write-back cfg");
+                    self.submit(
+                        ChainTask {
+                            task: cfg.task,
+                            read: cfg.pattern,
+                            dests: vec![ChainDest { node: pkt.src, pattern: back.pattern }],
+                            with_data: true,
+                        },
+                        now,
+                    );
+                    return true;
+                }
+                let expected = cfg.pattern.total_bytes();
+                self.followers.insert(
+                    cfg.task,
+                    FollowerState {
+                        initiator: pkt.src,
+                        cfg_ready_at: now + CFG_DECODE_CYCLES,
+                        cfg,
+                        grant_from_next: false,
+                        grant_sent: false,
+                        grant_ready_at: None,
+                        bytes_arrived: 0,
+                        expected_bytes: expected,
+                        write_done_at: 0,
+                        stream_buf: Vec::new(),
+                        scattered: false,
+                        finish_from_next: false,
+                        finish_sent: false,
+                        finish_ready_at: None,
+                        forwards: HashMap::new(),
+                        forwarded: Default::default(),
+                    },
+                );
+                true
+            }
+            Message::TorrentGrant { task } => {
+                if let Some(init) = self.active.as_mut() {
+                    if init.task.task == *task {
+                        debug_assert!(matches!(init.phase, InitPhase::WaitGrant));
+                        init.phase = InitPhase::SendData { next_seg: 0, sent_all: false };
+                        return true;
+                    }
+                }
+                if let Some(f) = self.followers.get_mut(task) {
+                    f.grant_from_next = true;
+                    return true;
+                }
+                true // stale grant for a finished task
+            }
+            Message::TorrentFinish { task } => {
+                if let Some(init) = self.active.as_mut() {
+                    if init.task.task == *task {
+                        let r = TaskResult {
+                            task: *task,
+                            submitted_at: init.submitted_at,
+                            finished_at: now,
+                            bytes: init.task.read.total_bytes(),
+                            n_dests: init.task.dests.len(),
+                        };
+                        self.results.push(r);
+                        self.stats.tasks_completed += 1;
+                        self.active = None;
+                        return true;
+                    }
+                }
+                if let Some(f) = self.followers.get_mut(task) {
+                    f.finish_from_next = true;
+                    return true;
+                }
+                true
+            }
+            Message::ChainData { task, last, .. } => {
+                let node = self.node;
+                let Some(f) = self.followers.get_mut(task) else {
+                    panic!("ChainData for unknown task {task} at {node:?}");
+                };
+                f.bytes_arrived += pkt.payload_bytes;
+                if let Some(data) = &pkt.payload {
+                    f.stream_buf.extend_from_slice(data);
+                }
+                self.stats.bytes_written_local += pkt.payload_bytes as u64;
+                // Local DSE write: charge pattern-rate cycles per segment.
+                let rate = f.cfg.pattern.rate_per_cycle().max(1.0);
+                let seg_cycles = (pkt.payload_bytes as f64 / rate).ceil() as u64;
+                f.write_done_at = f.write_done_at.max(now) + seg_cycles;
+                if *last {
+                    debug_assert!(
+                        f.bytes_arrived >= f.expected_bytes,
+                        "short stream: {} < {}",
+                        f.bytes_arrived,
+                        f.expected_bytes
+                    );
+                    if !f.stream_buf.is_empty() && !f.scattered {
+                        // Materialized run: scatter the full stream now
+                        // (timing already charged incrementally).
+                        f.scattered = true;
+                        let buf = std::mem::take(&mut f.stream_buf);
+                        f.cfg.pattern.scatter(&buf, mem);
+                    }
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Per-cycle engine logic
+    // ------------------------------------------------------------------
+
+    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
+        let now = net.cycle;
+        self.tick_initiator(net, mem, now);
+        self.tick_followers(net, now);
+    }
+
+    fn tick_initiator(&mut self, net: &mut Network, mem: &mut Scratchpad, now: u64) {
+        if self.active.is_none() {
+            if let Some((task, submitted_at)) = self.queue.pop_front() {
+                let total = task.read.total_bytes();
+                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let mut segs = Vec::new();
+                let mut off = 0;
+                while off < total {
+                    let len = SEG_BYTES.min(total - off);
+                    segs.push((off, len));
+                    off += len;
+                }
+                let rate = task.read.rate_per_cycle();
+                self.active = Some(InitiatorState {
+                    submitted_at: submitted_at.max(now),
+                    phase: InitPhase::Dispatch { next_cfg: 0, ready_at: now },
+                    stream,
+                    segs,
+                    dse_budget: 0.0,
+                    dse_rate_flits: rate / FLIT_BYTES as f64,
+                    cur_gate: None,
+                    cur_gate_total: 0,
+                    task,
+                });
+            }
+        }
+        let Some(init) = self.active.as_mut() else { return };
+
+        match &mut init.phase {
+            InitPhase::Dispatch { next_cfg, ready_at } => {
+                // Issue one cfg per CFG_ISSUE_CYCLES (descriptor build),
+                // serialized out of the NI.
+                while *next_cfg < init.task.dests.len() && *ready_at <= now {
+                    let i = *next_cfg;
+                    let d = &init.task.dests[i];
+                    let cfg = TorrentCfg {
+                        task: init.task.task,
+                        cfg_type: CfgType::Write,
+                        prev: Some(if i == 0 { self.node } else { init.task.dests[i - 1].node }),
+                        next: (i + 1 < init.task.dests.len())
+                            .then(|| init.task.dests[i + 1].node),
+                        position: i as u16,
+                        chain_len: init.task.dests.len() as u16,
+                        axi_burst_bytes: SEG_BYTES as u32,
+                        pattern: d.pattern.clone(),
+                    };
+                    let pkt = Packet::new(
+                        0,
+                        self.node,
+                        d.node,
+                        Message::TorrentCfg { task: init.task.task },
+                    )
+                    .with_payload(cfg.encode());
+                    net.send(self.node, pkt);
+                    self.stats.cfgs_sent += 1;
+                    *next_cfg += 1;
+                    *ready_at = now + CFG_ISSUE_CYCLES;
+                }
+                if *next_cfg == init.task.dests.len() {
+                    init.phase = InitPhase::WaitGrant;
+                }
+            }
+            InitPhase::WaitGrant => {} // flips on TorrentGrant
+            InitPhase::SendData { next_seg, sent_all } => {
+                // Refill the DSE budget and open the current segment's gate.
+                init.dse_budget += init.dse_rate_flits;
+                if let Some(g) = &init.cur_gate {
+                    let open = g.get();
+                    if open < init.cur_gate_total && init.dse_budget >= 1.0 {
+                        let add = (init.dse_budget as u32).min(init.cur_gate_total - open);
+                        g.set(open + add);
+                        init.dse_budget -= add as f64;
+                        self.stats.bytes_streamed_out += add as u64 * FLIT_BYTES as u64;
+                    }
+                    if g.get() < init.cur_gate_total {
+                        return; // still streaming this segment
+                    }
+                }
+                if *next_seg < init.segs.len() {
+                    let (off, len) = init.segs[*next_seg];
+                    let seg_payload = init
+                        .stream
+                        .as_ref()
+                        .map(|s| Rc::new(s[off..off + len].to_vec()));
+                    let last = *next_seg == init.segs.len() - 1;
+                    let msg = Message::ChainData {
+                        task: init.task.task,
+                        seq: *next_seg as u32,
+                        last,
+                    };
+                    let pkt = Packet::new(0, self.node, init.task.dests[0].node, msg)
+                        .with_shared_payload(seg_payload, len);
+                    let n_flits = pkt.len_flits() as u32;
+                    let gate: Gate = Rc::new(std::cell::Cell::new(1)); // head free
+                    net.send_gated(self.node, pkt, gate.clone());
+                    init.cur_gate = Some(gate);
+                    init.cur_gate_total = n_flits;
+                    *next_seg += 1;
+                } else if !*sent_all {
+                    *sent_all = true;
+                    init.phase = InitPhase::WaitFinish;
+                }
+            }
+            InitPhase::WaitFinish => {} // flips on TorrentFinish
+        }
+    }
+
+    fn tick_followers(&mut self, net: &mut Network, now: u64) {
+        if self.followers.is_empty() {
+            return; // §Perf: skip the per-cycle NI scan on idle endpoints
+        }
+        let node = self.node;
+        let mut done: Vec<u32> = Vec::new();
+        // 1. Cut-through forwarding: scan in-progress ejections.
+        let in_progress = net.eject_in_progress(node);
+        for (id, pkt, arrived) in in_progress {
+            let Message::ChainData { task, seq, last } = pkt.msg else { continue };
+            let Some(f) = self.followers.get_mut(&task) else { continue };
+            let Some(next) = f.cfg.next else { continue };
+            // The duplicator releases flit i of the forwarded copy
+            // FWD_LATENCY_CYCLES after flit i of the incoming stream
+            // arrived: the gate trails the arrival count by that many
+            // flit-times (1 flit/cycle at link rate).
+            let allowed = arrived.saturating_sub(FWD_LATENCY_CYCLES as u32).max(1);
+            if let Some(gate) = f.forwards.get(&id) {
+                gate.set(gate.get().max(allowed));
+                continue;
+            }
+            if f.forwarded.contains(&id) {
+                continue;
+            }
+            // New incoming segment: start the forwarded copy, gated.
+            let fwd = Packet::new(0, node, next, Message::ChainData { task, seq, last })
+                .with_shared_payload(pkt.payload.clone(), pkt.payload_bytes);
+            let gate: Gate = Rc::new(std::cell::Cell::new(allowed));
+            net.send_gated(node, fwd, gate.clone());
+            f.forwards.insert(id, gate);
+            f.forwarded.insert(id);
+            self.stats.bytes_forwarded += pkt.payload_bytes as u64;
+        }
+        // 2. Open gates fully for packets whose tail has been delivered.
+        for f in self.followers.values_mut() {
+            f.forwards.retain(|id, gate| {
+                if net.progress_of(node, *id).is_none() {
+                    gate.set(u32::MAX); // delivered: release remaining flits
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // 3. Grant + finish propagation.
+        for (task, f) in self.followers.iter_mut() {
+            let is_tail = f.cfg.next.is_none();
+            let ready = now >= f.cfg_ready_at;
+            // Grant: tail generates; intermediates need next's grant.
+            if ready && !f.grant_sent && (is_tail || f.grant_from_next) {
+                let at = *f.grant_ready_at.get_or_insert(now + GRANT_PROC_CYCLES);
+                if now >= at {
+                    let prev = f.cfg.prev.unwrap_or(f.initiator);
+                    net.send(
+                        node,
+                        Packet::new(0, node, prev, Message::TorrentGrant { task: *task }),
+                    );
+                    f.grant_sent = true;
+                    self.stats.grants_relayed += 1;
+                }
+            }
+            // Finish: local write done + (tail || next finished).
+            let data_done = f.bytes_arrived >= f.expected_bytes && now >= f.write_done_at;
+            if f.grant_sent && !f.finish_sent && data_done && (is_tail || f.finish_from_next) {
+                let at = *f.finish_ready_at.get_or_insert(now + FIN_PROC_CYCLES);
+                if now >= at {
+                    let prev = f.cfg.prev.unwrap_or(f.initiator);
+                    net.send(
+                        node,
+                        Packet::new(0, node, prev, Message::TorrentFinish { task: *task }),
+                    );
+                    f.finish_sent = true;
+                    self.stats.finishes_relayed += 1;
+                    done.push(*task);
+                }
+            }
+        }
+        for t in done {
+            let f = self.followers.remove(&t);
+            // If this completed follower role was serving one of our own
+            // read-tunnel requests, record the local result.
+            if let Some(submitted_at) = self.pending_reads.remove(&t) {
+                let bytes = f.map(|f| f.expected_bytes).unwrap_or(0);
+                self.results.push(TaskResult {
+                    task: t,
+                    submitted_at,
+                    finished_at: now,
+                    bytes,
+                    n_dests: 1,
+                });
+                self.stats.tasks_completed += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Torrent micro-architectural timing constants.
+//!
+//! Single calibration point for the protocol-processing delays. Values
+//! are chosen so the *measured* per-destination Chainwrite overhead on
+//! the paper's evaluation SoC (4×5 mesh, Fig 7 setup) lands at the
+//! published ≈82 cycles/destination — the structural model (cfg
+//! serialization + grant/finish back-propagation + store-and-forward
+//! insertion) provides the linear shape; these constants set the slope.
+
+/// Initiator: descriptor build + issue per follower cfg (serializes the
+/// parallel cfg dispatch out of one NI).
+pub const CFG_ISSUE_CYCLES: u64 = 6;
+
+/// Follower: cfg frame decode + DSE programming before it can take part
+/// in grant propagation.
+pub const CFG_DECODE_CYCLES: u64 = 16;
+
+/// Follower: grant generation/forwarding pipeline.
+pub const GRANT_PROC_CYCLES: u64 = 26;
+
+/// Follower: finish generation/forwarding pipeline.
+pub const FIN_PROC_CYCLES: u64 = 26;
+
+/// Data-switch cut-through insertion delay: a forwarded flit leaves this
+/// many cycles after it arrived (duplicator + backend repacketization).
+pub const FWD_LATENCY_CYCLES: u64 = 6;
+
+/// Chainwrite data segment size (one AXI-burst-sized packet).
+pub const SEG_BYTES: usize = 4096;

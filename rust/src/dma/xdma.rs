@@ -1,0 +1,117 @@
+//! XDMA baseline: the distributed-DMA predecessor Torrent's frontend
+//! builds on (Kong et al., 2025) — ND-affine DSEs at both endpoints,
+//! cross-DMA configuration, but **software P2MP**: a multi-destination
+//! job runs as N strictly sequential P2P transfers, each paying the full
+//! cfg → grant → data → finish round trip and re-reading the source.
+//!
+//! This is the unicast baseline of the paper's FPGA evaluation (Fig 9):
+//! Torrent's speedup over XDMA is Chainwrite amortizing the source read
+//! and the per-transfer handshake across the whole destination set.
+//!
+//! Implementation: XDMA *is* a P2P-only Torrent frontend, so this engine
+//! drives the node's [`Torrent`] with single-destination chain tasks, one
+//! at a time.
+
+use std::collections::VecDeque;
+
+use crate::noc::NodeId;
+
+use super::torrent::dse::AffinePattern;
+use super::torrent::{ChainDest, ChainTask, Torrent};
+use super::TaskResult;
+
+/// A software-P2MP job.
+#[derive(Debug, Clone)]
+pub struct XdmaTask {
+    pub task: u32,
+    pub read: AffinePattern,
+    pub dests: Vec<(NodeId, AffinePattern)>,
+    pub with_data: bool,
+}
+
+#[derive(Debug)]
+struct Active {
+    task: XdmaTask,
+    submitted_at: u64,
+    next_dest: usize,
+    /// Sub-task id currently in flight on the Torrent frontend.
+    inflight: Option<u32>,
+}
+
+/// Software P2MP driver.
+#[derive(Debug)]
+pub struct Xdma {
+    pub node: NodeId,
+    queue: VecDeque<(XdmaTask, u64)>,
+    active: Option<Active>,
+    pub results: Vec<TaskResult>,
+    /// Sub-task id space: high bit tags XDMA-internal transfers so they
+    /// never collide with coordinator-assigned Chainwrite ids.
+    next_subtask: u32,
+}
+
+impl Xdma {
+    pub fn new(node: NodeId) -> Self {
+        Xdma { node, queue: VecDeque::new(), active: None, results: Vec::new(), next_subtask: 0 }
+    }
+
+    pub fn submit(&mut self, task: XdmaTask, now: u64) {
+        assert!(!task.dests.is_empty());
+        self.queue.push_back((task, now));
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none() && self.queue.is_empty()
+    }
+
+    /// Drive the node's Torrent frontend. Call once per cycle *before*
+    /// the Torrent's own tick.
+    pub fn tick(&mut self, torrent: &mut Torrent, now: u64) {
+        if self.active.is_none() {
+            if let Some((task, submitted_at)) = self.queue.pop_front() {
+                self.active = Some(Active {
+                    submitted_at: submitted_at.max(now),
+                    next_dest: 0,
+                    inflight: None,
+                    task,
+                });
+            }
+        }
+        let Some(a) = self.active.as_mut() else { return };
+
+        // Completion of the in-flight P2P leg?
+        if let Some(sub) = a.inflight {
+            if torrent.results.iter().any(|r| r.task == sub) {
+                a.inflight = None;
+            }
+        }
+        if a.inflight.is_none() {
+            if a.next_dest == a.task.dests.len() {
+                // All legs done.
+                self.results.push(TaskResult {
+                    task: a.task.task,
+                    submitted_at: a.submitted_at,
+                    finished_at: now,
+                    bytes: a.task.read.total_bytes(),
+                    n_dests: a.task.dests.len(),
+                });
+                self.active = None;
+                return;
+            }
+            let (node, pattern) = a.task.dests[a.next_dest].clone();
+            let sub = 0x8000_0000 | self.next_subtask;
+            self.next_subtask += 1;
+            torrent.submit(
+                ChainTask {
+                    task: sub,
+                    read: a.task.read.clone(),
+                    dests: vec![ChainDest { node, pattern }],
+                    with_data: a.task.with_data,
+                },
+                now,
+            );
+            a.inflight = Some(sub);
+            a.next_dest += 1;
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! # torrent-dma
+//!
+//! Reproduction of *"Torrent: A Distributed DMA for Efficient and Flexible
+//! Point-to-Multipoint Data Movement"* (Deng, Kong, Yi, Antonio, Verhelst —
+//! CS.AR 2025).
+//!
+//! Torrent embeds point-to-multipoint (P2MP) capability in distributed DMA
+//! endpoints instead of NoC routers: a P2MP transfer becomes a *Chainwrite*
+//! through a doubly linked list of endpoints, keeping every on-wire
+//! transfer point-to-point and AXI-compatible.
+//!
+//! This crate contains:
+//!
+//! * a cycle-stepped 2D-mesh wormhole NoC simulator with XY routing and an
+//!   ESP-style network-layer multicast router baseline ([`noc`]);
+//! * an AXI4 transaction layer ([`axi`]) and banked scratchpads ([`mem`]);
+//! * the Torrent architecture — DSE, data switch, backend, Chainwrite
+//!   four-phase FSM — plus the iDMA / XDMA baselines ([`dma`]);
+//! * the chain-sequence schedulers (naive / greedy / TSP) and hop-count
+//!   models ([`sched`]);
+//! * compute clusters, the Occamy-derived SoC builder and the task-level
+//!   coordinator ([`cluster`], [`soc`], [`coordinator`]);
+//! * a PJRT runtime that loads the JAX/Pallas AOT artifacts and runs the
+//!   DeepSeek-V3 attention numerics from Rust ([`runtime`]);
+//! * analytic area/power/efficiency models calibrated with the paper's
+//!   published constants ([`analysis`]);
+//! * the workload generators for every figure/table ([`workloads`]).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod axi;
+pub mod cluster;
+pub mod coordinator;
+pub mod dma;
+pub mod mem;
+pub mod noc;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod soc;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,148 @@
+//! `torrent` — launcher CLI for the Torrent reproduction.
+//!
+//! ```text
+//! torrent table1                          # print Table I
+//! torrent fig5 [--quick]                  # η_P2MP sweep (Fig 5)
+//! torrent fig6 [--seed N] [--trials N]    # hop study (Fig 6)
+//! torrent fig7                            # config overhead (Fig 7)
+//! torrent fig9                            # DeepSeek-V3 workloads (Fig 9)
+//! torrent fig11                           # area/power (Fig 11, Fig 1d)
+//! torrent run [--config soc.toml] [--size KB] [--dests N] [--engine E]
+//!             [--strategy naive|greedy|tsp] [--data]
+//! torrent artifacts [--dir artifacts]     # load + smoke-run PJRT artifacts
+//! ```
+
+use torrent::analysis::{experiments, table1};
+use torrent::coordinator::{Coordinator, EngineKind};
+use torrent::noc::NodeId;
+use torrent::runtime::{Engine, Tensor};
+use torrent::sched::Strategy;
+use torrent::soc::SocConfig;
+use torrent::util::cli::Args;
+
+const USAGE: &str = "torrent <table1|fig5|fig6|fig7|fig9|fig11|run|artifacts> [options]
+  fig5   [--quick]
+  fig6   [--seed N] [--trials N]
+  run    [--config soc.toml] [--size KB] [--dests N]
+         [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
+  artifacts [--dir artifacts]";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "table1" => print!("{}", table1::render()),
+        "fig5" => {
+            let (_, tables) = experiments::fig5(args.flag("quick"));
+            for t in tables {
+                t.print();
+                println!();
+            }
+        }
+        "fig6" => {
+            let seed = args.u64_or("seed", 2025);
+            let trials = args.usize_or("trials", 128);
+            experiments::fig6(seed, trials).print();
+        }
+        "fig7" => {
+            let (t, slope, intercept, r2) = experiments::fig7();
+            t.print();
+            println!(
+                "linear fit: {slope:.1} CC/destination + {intercept:.0} CC (r^2={r2:.4}); paper: 82 CC/destination"
+            );
+        }
+        "fig9" => {
+            let (rows, t) = experiments::fig9();
+            t.print();
+            let max = rows.iter().map(|r| r.speedup).fold(0.0, f64::max);
+            println!("max speedup {max:.2}x (paper: up to 7.88x)");
+        }
+        "fig11" => {
+            for t in experiments::fig11() {
+                t.print();
+                println!();
+            }
+        }
+        "run" => run_custom(&args),
+        "artifacts" => smoke_artifacts(&args),
+        _ => println!("{USAGE}"),
+    }
+}
+
+/// One-off P2MP transfer on a custom SoC.
+fn run_custom(args: &Args) {
+    let cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).expect("read --config file");
+            SocConfig::from_toml(&text).expect("parse --config")
+        }
+        None => SocConfig::eval_4x5(),
+    };
+    let size_kb = args.usize_or("size", 64);
+    let n_dests = args.usize_or("dests", 4);
+    let strategy = match args.get_or("strategy", "greedy") {
+        "naive" => Strategy::Naive,
+        "tsp" => Strategy::Tsp,
+        _ => Strategy::Greedy,
+    };
+    let engine = match args.get_or("engine", "torrent") {
+        "idma" => EngineKind::Idma,
+        "xdma" => EngineKind::Xdma,
+        "mcast" => EngineKind::Mcast,
+        _ => EngineKind::Torrent(strategy),
+    };
+    let with_data = args.flag("data");
+    assert!(n_dests < cfg.n_nodes(), "--dests must leave room for the source");
+
+    let mut c = Coordinator::new(cfg);
+    if with_data {
+        let base = c.soc.map.base_of(NodeId(0));
+        let bytes: Vec<u8> = (0..size_kb * 1024).map(|i| (i % 251) as u8).collect();
+        c.soc.nodes[0].mem.write(base, &bytes);
+    }
+    let dests: Vec<NodeId> = (1..=n_dests).map(NodeId).collect();
+    let task = c.submit_simple(NodeId(0), &dests, size_kb * 1024, engine, with_data);
+    c.run_to_completion(1_000_000_000);
+    let rec = c.records.iter().find(|r| r.task == task).unwrap();
+    let res = rec.result.as_ref().expect("completed");
+    println!(
+        "{} {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",
+        engine.label(),
+        size_kb,
+        n_dests,
+        res.latency(),
+        rec.eta().unwrap()
+    );
+    if let Some(order) = &rec.chain_order {
+        println!("chain order: {:?}", order.iter().map(|n| n.0).collect::<Vec<_>>());
+    }
+    println!(
+        "network: {} flit-hops, {} packets",
+        c.soc.net.stats.flit_hops, c.soc.net.stats.packets_delivered
+    );
+}
+
+/// Load the AOT artifacts and run each once on random inputs.
+fn smoke_artifacts(args: &Args) {
+    let dir = args.get_or("dir", "artifacts");
+    let engine = Engine::load(dir).expect("load artifacts (run `make artifacts`)");
+    println!("PJRT platform: {}", engine.platform());
+    for name in engine.names() {
+        let entry = engine.entry(name).unwrap().clone();
+        let inputs: Vec<Tensor> = entry
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Tensor::random(s.dims.clone(), 0xC0FFEE + i as u64))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let outs = engine.run(name, &inputs).expect("execute");
+        println!(
+            "  {name}: {} inputs -> {} outputs {:?} in {:.2?}",
+            inputs.len(),
+            outs.len(),
+            outs.iter().map(|o| o.shape.clone()).collect::<Vec<_>>(),
+            t0.elapsed()
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Global SoC address map: one fixed-size window per mesh node.
+//!
+//! Cluster *i*'s scratchpad occupies `[i * window, i * window + size)`,
+//! mirroring the Occamy-style flat map the paper's SoC uses. The map
+//! resolves an address to the owning node — the routing decision every
+//! AXI request and Torrent cfg makes.
+
+use crate::noc::NodeId;
+
+/// Address window size per node (1 MB default keeps cluster offsets
+/// human-readable: node = addr >> 20).
+pub const DEFAULT_WINDOW: u64 = 1 << 20;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AddrMap {
+    pub window: u64,
+    pub n_nodes: usize,
+}
+
+impl AddrMap {
+    pub fn new(n_nodes: usize, window: u64) -> Self {
+        assert!(window.is_power_of_two());
+        AddrMap { window, n_nodes }
+    }
+
+    pub fn with_default_window(n_nodes: usize) -> Self {
+        Self::new(n_nodes, DEFAULT_WINDOW)
+    }
+
+    /// Base address of `node`'s window.
+    pub fn base_of(&self, node: NodeId) -> u64 {
+        assert!(node.0 < self.n_nodes);
+        node.0 as u64 * self.window
+    }
+
+    /// Owning node of `addr`; `None` if outside the map.
+    pub fn node_of(&self, addr: u64) -> Option<NodeId> {
+        let n = (addr / self.window) as usize;
+        (n < self.n_nodes).then_some(NodeId(n))
+    }
+
+    /// True if `[addr, addr+len)` stays inside a single node's window.
+    pub fn single_node(&self, addr: u64, len: usize) -> bool {
+        len == 0 || self.node_of(addr) == self.node_of(addr + len as u64 - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_and_node_roundtrip() {
+        let m = AddrMap::with_default_window(20);
+        for i in 0..20 {
+            let b = m.base_of(NodeId(i));
+            assert_eq!(m.node_of(b), Some(NodeId(i)));
+            assert_eq!(m.node_of(b + DEFAULT_WINDOW - 1), Some(NodeId(i)));
+        }
+    }
+
+    #[test]
+    fn out_of_map_is_none() {
+        let m = AddrMap::with_default_window(4);
+        assert_eq!(m.node_of(4 * DEFAULT_WINDOW), None);
+    }
+
+    #[test]
+    fn single_node_detects_window_straddle() {
+        let m = AddrMap::with_default_window(4);
+        assert!(m.single_node(0, DEFAULT_WINDOW as usize));
+        assert!(!m.single_node(DEFAULT_WINDOW - 4, 8));
+        assert!(m.single_node(123, 0));
+    }
+}

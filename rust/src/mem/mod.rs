@@ -1,0 +1,14 @@
+//! Memory substrate: banked scratchpads and the SoC address map.
+//!
+//! Each compute cluster has a 1 MB, 32-bank, 64-bit-per-bank scratchpad
+//! (paper §IV-A); the synthesis SoC (§IV-F) uses 256 KB per cluster plus a
+//! 512 KB global SRAM. Banking gives 32 × 8 B = 256 B/cycle of internal
+//! bandwidth, comfortably above the 64 B/cycle NoC link rate, so the
+//! model charges one cycle per 64 B port access and tracks bank conflicts
+//! only for the sub-64 B strided patterns the DSE can emit.
+
+pub mod addr_map;
+pub mod scratchpad;
+
+pub use addr_map::AddrMap;
+pub use scratchpad::{Scratchpad, BANK_BYTES, NUM_BANKS};

@@ -1,0 +1,171 @@
+//! Banked scratchpad SRAM model.
+//!
+//! Functional storage (real bytes — the integration tests verify every
+//! Chainwrite destination receives exactly the source data) plus a bank
+//! model used for access statistics and conflict accounting.
+
+/// Banks per scratchpad (paper §IV-A: 32-bank TCDM).
+pub const NUM_BANKS: usize = 32;
+/// Bytes per bank word (64-bit banks).
+pub const BANK_BYTES: usize = 8;
+
+/// A single cluster's scratchpad memory.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    /// Base address in the global map.
+    pub base: u64,
+    data: Vec<u8>,
+    /// Word accesses per bank (for the power model's activity counts).
+    pub bank_accesses: [u64; NUM_BANKS],
+    /// Accesses that conflicted (>1 word to the same bank in one group).
+    pub conflicts: u64,
+}
+
+impl Scratchpad {
+    pub fn new(base: u64, size: usize) -> Self {
+        assert!(size % (NUM_BANKS * BANK_BYTES) == 0, "size must be bank-aligned");
+        Scratchpad { base, data: vec![0; size], bank_accesses: [0; NUM_BANKS], conflicts: 0 }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn contains(&self, addr: u64, len: usize) -> bool {
+        addr >= self.base && (addr + len as u64) <= self.base + self.data.len() as u64
+    }
+
+    fn offset(&self, addr: u64, len: usize) -> usize {
+        assert!(
+            self.contains(addr, len),
+            "access [{addr:#x}..+{len}) outside scratchpad [{:#x}..+{})",
+            self.base,
+            self.data.len()
+        );
+        (addr - self.base) as usize
+    }
+
+    /// Bank index of a byte address.
+    pub fn bank_of(&self, addr: u64) -> usize {
+        ((addr - self.base) as usize / BANK_BYTES) % NUM_BANKS
+    }
+
+    /// Read `len` bytes at global address `addr`.
+    pub fn read(&mut self, addr: u64, len: usize) -> Vec<u8> {
+        let off = self.offset(addr, len);
+        self.account(addr, len);
+        self.data[off..off + len].to_vec()
+    }
+
+    /// Write bytes at global address `addr`.
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) {
+        let off = self.offset(addr, bytes.len());
+        self.account(addr, bytes.len());
+        self.data[off..off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Borrow without statistics (test assertions, accelerator reads).
+    pub fn peek(&self, addr: u64, len: usize) -> &[u8] {
+        let off = (addr - self.base) as usize;
+        assert!(off + len <= self.data.len());
+        &self.data[off..off + len]
+    }
+
+    /// Account bank activity for an access group. Word addresses touching
+    /// the same bank within one 256 B group (one cycle of full-width
+    /// access) count as conflicts.
+    fn account(&mut self, addr: u64, len: usize) {
+        let first = (addr - self.base) as usize / BANK_BYTES;
+        let last = ((addr - self.base) as usize + len.max(1) - 1) / BANK_BYTES;
+        let words = last - first + 1;
+        for w in first..=last {
+            self.bank_accesses[w % NUM_BANKS] += 1;
+        }
+        // A contiguous run conflicts only when it wraps the bank set.
+        if words > NUM_BANKS {
+            self.conflicts += (words - NUM_BANKS) as u64;
+        }
+    }
+
+    /// Cycles to stream `len` bytes through one 64 B/cycle port.
+    pub fn stream_cycles(len: usize) -> u64 {
+        (len as u64).div_ceil(crate::noc::FLIT_BYTES as u64)
+    }
+
+    /// Fill with a deterministic pattern (tests, workload setup).
+    pub fn fill_pattern(&mut self, seed: u8) {
+        for (i, b) in self.data.iter_mut().enumerate() {
+            *b = seed ^ (i as u8) ^ ((i >> 8) as u8);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = Scratchpad::new(0x1000, 4096);
+        s.write(0x1100, &[1, 2, 3, 4]);
+        assert_eq!(s.read(0x1100, 4), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn contains_bounds() {
+        let s = Scratchpad::new(0x1000, 4096);
+        assert!(s.contains(0x1000, 4096));
+        assert!(!s.contains(0xfff, 1));
+        assert!(!s.contains(0x1000, 4097));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside scratchpad")]
+    fn out_of_bounds_panics() {
+        let mut s = Scratchpad::new(0, 256);
+        s.read(256, 1);
+    }
+
+    #[test]
+    fn bank_of_cycles_through_banks() {
+        let s = Scratchpad::new(0, 4096);
+        assert_eq!(s.bank_of(0), 0);
+        assert_eq!(s.bank_of(8), 1);
+        assert_eq!(s.bank_of(8 * 32), 0);
+    }
+
+    #[test]
+    fn bank_accesses_accumulate() {
+        let mut s = Scratchpad::new(0, 4096);
+        s.read(0, 64); // words 0..8 -> banks 0..8
+        for b in 0..8 {
+            assert_eq!(s.bank_accesses[b], 1);
+        }
+        assert_eq!(s.bank_accesses[8], 0);
+        assert_eq!(s.conflicts, 0);
+    }
+
+    #[test]
+    fn long_run_wraps_banks_and_conflicts() {
+        let mut s = Scratchpad::new(0, 4096);
+        s.read(0, 8 * NUM_BANKS + 16); // two extra words
+        assert_eq!(s.conflicts, 2);
+    }
+
+    #[test]
+    fn stream_cycles_at_link_rate() {
+        assert_eq!(Scratchpad::stream_cycles(0), 0);
+        assert_eq!(Scratchpad::stream_cycles(1), 1);
+        assert_eq!(Scratchpad::stream_cycles(64), 1);
+        assert_eq!(Scratchpad::stream_cycles(65536), 1024);
+    }
+
+    #[test]
+    fn fill_pattern_deterministic() {
+        let mut a = Scratchpad::new(0, 512);
+        let mut b = Scratchpad::new(0, 512);
+        a.fill_pattern(7);
+        b.fill_pattern(7);
+        assert_eq!(a.peek(0, 512), b.peek(0, 512));
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-stepped 2D-mesh wormhole NoC with XY routing, virtual channels,
+//! credit flow control and an ESP-style network-layer multicast baseline.
+//!
+//! Layering follows the paper's Fig 2: this module is the *network* and
+//! *link* layers; `crate::axi` is the transport layer; the DMA engines in
+//! `crate::dma` are the application layer.
+
+pub mod multicast;
+pub mod network;
+pub mod packet;
+pub mod router;
+pub mod topology;
+
+pub use network::{Gate, NetStats, Network};
+pub use packet::{Flit, Message, Packet, PacketId, FLIT_BYTES};
+pub use router::{BUF_FLITS, LINK_CYCLES, NUM_VCS, ROUTER_PIPELINE};
+pub use topology::{Coord, Dir, Mesh, NodeId};

@@ -1,0 +1,104 @@
+//! ESP-style network-layer multicast support: XY-tree forking.
+//!
+//! The baseline the paper compares against (§II-B, §IV-B) replicates
+//! packets *inside* the routers: at Route Computation the head flit
+//! resolves a destination set to several output ports; at VA/SA/ST the
+//! packet is duplicated to all of them, stalling until every branch has a
+//! free slot (the paper's "may stall if some VCs are unavailable").
+//!
+//! This module computes the per-router fork: destinations are partitioned
+//! by their XY next hop, producing the multicast tree edges used both by
+//! the cycle simulator's multicast routers and by the Fig-6 analytic hop
+//! model.
+
+use super::topology::{Dir, Mesh, NodeId};
+
+/// Partition a destination set by XY next-hop direction at router `cur`.
+///
+/// Returns `(dir, subset)` pairs; a `Dir::Local` entry appears iff `cur`
+/// itself is a destination. Subsets preserve input order.
+pub fn mcast_fork(mesh: &Mesh, cur: NodeId, dsts: &[NodeId]) -> Vec<(Dir, Vec<NodeId>)> {
+    let mut out: Vec<(Dir, Vec<NodeId>)> = Vec::new();
+    for &d in dsts {
+        let dir = mesh.xy_next_hop(cur, d);
+        match out.iter_mut().find(|(od, _)| *od == dir) {
+            Some((_, v)) => v.push(d),
+            None => out.push((dir, vec![d])),
+        }
+    }
+    out
+}
+
+/// Total directed-link count of the XY multicast tree from `src` to
+/// `dsts` — the Fig-6 hop metric for network-layer multicast ("one packet
+/// is routed following standard XY-routing, and is divided when routes to
+/// different destinations do not overlap").
+pub fn mcast_tree_hops(mesh: &Mesh, src: NodeId, dsts: &[NodeId]) -> usize {
+    // Walk the tree: count each traversed link once (shared prefixes shared).
+    let mut hops = 0;
+    let mut frontier: Vec<(NodeId, Vec<NodeId>)> = vec![(src, dsts.to_vec())];
+    while let Some((cur, set)) = frontier.pop() {
+        for (dir, subset) in mcast_fork(mesh, cur, &set) {
+            if dir == Dir::Local {
+                continue; // delivered here; ejection is not a mesh link
+            }
+            let next = mesh.neighbour(cur, dir).expect("tree left the mesh");
+            hops += 1;
+            frontier.push((next, subset));
+        }
+    }
+    hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fork_partitions_by_direction() {
+        let m = Mesh::new(4, 4);
+        // from node 5=(1,1): 6=(2,1) east, 4=(0,1) west, 13=(1,3) north
+        let forks = mcast_fork(&m, NodeId(5), &[NodeId(6), NodeId(4), NodeId(13)]);
+        assert_eq!(forks.len(), 3);
+        let dirs: Vec<Dir> = forks.iter().map(|(d, _)| *d).collect();
+        assert!(dirs.contains(&Dir::East) && dirs.contains(&Dir::West) && dirs.contains(&Dir::North));
+    }
+
+    #[test]
+    fn fork_local_when_self_is_destination() {
+        let m = Mesh::new(3, 3);
+        let forks = mcast_fork(&m, NodeId(4), &[NodeId(4), NodeId(5)]);
+        assert!(forks.iter().any(|(d, s)| *d == Dir::Local && s == &vec![NodeId(4)]));
+    }
+
+    #[test]
+    fn xy_shared_prefix_counted_once() {
+        let m = Mesh::new(4, 4);
+        // 0=(0,0) -> {3=(3,0), 7=(3,1)}: east x3 shared, then 7 needs +1 north
+        // from node 3. Total tree = 3 + 1 = 4 (unicast would be 3 + 4 = 7).
+        assert_eq!(mcast_tree_hops(&m, NodeId(0), &[NodeId(3), NodeId(7)]), 4);
+    }
+
+    #[test]
+    fn single_dest_tree_is_manhattan() {
+        let m = Mesh::new(8, 8);
+        assert_eq!(
+            mcast_tree_hops(&m, NodeId(0), &[NodeId(63)]),
+            m.manhattan(NodeId(0), NodeId(63))
+        );
+    }
+
+    #[test]
+    fn dest_equals_source_adds_nothing() {
+        let m = Mesh::new(3, 3);
+        assert_eq!(mcast_tree_hops(&m, NodeId(0), &[NodeId(0)]), 0);
+    }
+
+    #[test]
+    fn tree_never_exceeds_unicast_sum() {
+        let m = Mesh::new(8, 8);
+        let dsts: Vec<NodeId> = [9, 18, 27, 36, 45, 54, 63].map(NodeId).to_vec();
+        let uni: usize = dsts.iter().map(|&d| m.manhattan(NodeId(0), d)).sum();
+        assert!(mcast_tree_hops(&m, NodeId(0), &dsts) <= uni);
+    }
+}

@@ -1,0 +1,167 @@
+//! Packets, flits and the message vocabulary carried over the NoC.
+//!
+//! Links are 64 bytes/cycle (paper §IV-A), so one flit carries 64 B. A
+//! packet is one head flit (routing + message metadata) followed by
+//! `ceil(payload / 64)` body flits; the last flit is the tail. Payload
+//! bytes ride the packet as an `Rc<Vec<u8>>` shared by all of its flits —
+//! wormhole timing comes from flit accounting, data integrity from the
+//! payload arriving with the tail.
+
+use std::rc::Rc;
+
+use super::topology::NodeId;
+
+/// Link width: bytes moved per flit per cycle (64 B/CC, paper §IV-A).
+pub const FLIT_BYTES: usize = 64;
+
+/// Unique packet id (simulation-global).
+pub type PacketId = u64;
+
+/// Message vocabulary. The NoC treats these opaquely; the AXI layer and
+/// the DMA engines give them meaning.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// AXI AW+W burst: write `bytes` at `addr` (payload carries the data).
+    AxiWriteReq { addr: u64, bytes: usize, axi_id: u16 },
+    /// AXI B response.
+    AxiWriteResp { axi_id: u16, ok: bool },
+    /// AXI AR request: read `bytes` from `addr`.
+    AxiReadReq { addr: u64, bytes: usize, axi_id: u16 },
+    /// AXI R response burst (payload carries the data).
+    AxiReadResp { axi_id: u16, ok: bool },
+    /// Torrent cross-DMA configuration frames (payload = encoded cfg).
+    TorrentCfg { task: u32 },
+    /// Chainwrite Grant, propagated tail -> head.
+    TorrentGrant { task: u32 },
+    /// Chainwrite Finish, propagated tail -> head.
+    TorrentFinish { task: u32 },
+    /// Chainwrite data stream segment (payload = data; `seq` orders segments).
+    ChainData { task: u32, seq: u32, last: bool },
+    /// Multicast data stream segment (ESP-style network-layer multicast).
+    McastData { task: u32, seq: u32, last: bool, addr: u64 },
+    /// Multicast delivery acknowledgement (dest -> source).
+    McastAck { task: u32, seq: u32 },
+    /// Test-only raw message.
+    Raw(u64),
+}
+
+/// A NoC packet.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub id: PacketId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub msg: Message,
+    /// Payload byte count (determines body-flit count). May exceed
+    /// `payload.len()` only when a test models phantom data.
+    pub payload_bytes: usize,
+    /// Actual data moved, if any.
+    pub payload: Option<Rc<Vec<u8>>>,
+    /// ESP-style multicast destination set; `dst` is ignored when set.
+    pub mcast_dsts: Option<Rc<Vec<NodeId>>>,
+}
+
+impl Packet {
+    pub fn new(id: PacketId, src: NodeId, dst: NodeId, msg: Message) -> Self {
+        Packet { id, src, dst, msg, payload_bytes: 0, payload: None, mcast_dsts: None }
+    }
+
+    pub fn with_payload(mut self, data: Vec<u8>) -> Self {
+        self.payload_bytes = data.len();
+        self.payload = Some(Rc::new(data));
+        self
+    }
+
+    /// Account payload length without materializing bytes (pure-timing runs).
+    pub fn with_phantom_payload(mut self, bytes: usize) -> Self {
+        self.payload_bytes = bytes;
+        self.payload = None;
+        self
+    }
+
+    /// Attach an already-shared payload without copying (the Torrent data
+    /// switch forwards the incoming stream's bytes to the next hop).
+    pub fn with_shared_payload(mut self, data: Option<Rc<Vec<u8>>>, bytes: usize) -> Self {
+        self.payload_bytes = bytes;
+        self.payload = data;
+        self
+    }
+
+    pub fn with_mcast(mut self, dsts: Vec<NodeId>) -> Self {
+        self.mcast_dsts = Some(Rc::new(dsts));
+        self
+    }
+
+    /// Total flits: 1 head + ceil(payload/FLIT_BYTES) body.
+    pub fn len_flits(&self) -> usize {
+        1 + self.payload_bytes.div_ceil(FLIT_BYTES)
+    }
+}
+
+/// One flit of a packet in flight. All flits of a packet share the
+/// `Rc<Packet>`; `seq` runs 0..len_flits.
+#[derive(Debug, Clone)]
+pub struct Flit {
+    pub packet: Rc<Packet>,
+    pub seq: u32,
+}
+
+impl Flit {
+    pub fn is_head(&self) -> bool {
+        self.seq == 0
+    }
+
+    pub fn is_tail(&self) -> bool {
+        self.seq as usize == self.packet.len_flits() - 1
+    }
+}
+
+/// Expand a packet into its flit sequence (used by injection queues).
+pub fn flits_of(packet: Rc<Packet>) -> impl Iterator<Item = Flit> {
+    let n = packet.len_flits() as u32;
+    (0..n).map(move |seq| Flit { packet: packet.clone(), seq })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(bytes: usize) -> Packet {
+        Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)).with_phantom_payload(bytes)
+    }
+
+    #[test]
+    fn flit_count_header_plus_body() {
+        assert_eq!(pkt(0).len_flits(), 1); // head only
+        assert_eq!(pkt(1).len_flits(), 2);
+        assert_eq!(pkt(64).len_flits(), 2);
+        assert_eq!(pkt(65).len_flits(), 3);
+        assert_eq!(pkt(4096).len_flits(), 65);
+    }
+
+    #[test]
+    fn head_and_tail_flags() {
+        let p = Rc::new(pkt(128));
+        let fl: Vec<Flit> = flits_of(p).collect();
+        assert_eq!(fl.len(), 3);
+        assert!(fl[0].is_head() && !fl[0].is_tail());
+        assert!(!fl[1].is_head() && !fl[1].is_tail());
+        assert!(fl[2].is_tail());
+    }
+
+    #[test]
+    fn single_flit_packet_is_head_and_tail() {
+        let p = Rc::new(pkt(0));
+        let fl: Vec<Flit> = flits_of(p).collect();
+        assert!(fl[0].is_head() && fl[0].is_tail());
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let data: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        let p = Packet::new(2, NodeId(0), NodeId(3), Message::Raw(1)).with_payload(data.clone());
+        assert_eq!(p.payload_bytes, 200);
+        assert_eq!(p.len_flits(), 1 + 4);
+        assert_eq!(&**p.payload.as_ref().unwrap(), &data);
+    }
+}

@@ -1,0 +1,229 @@
+//! 2D-mesh topology and dimension-ordered (XY) routing.
+//!
+//! The paper's evaluation SoCs are FlooNoC 2D meshes: 4×5 (20 clusters,
+//! §IV-A), 8×8 (Fig 6 hop study) and 3×3 (FPGA, §IV-E), all XY-routed.
+//! `NodeId`s are row-major: node = y * cols + x, so cluster C0 is the
+//! origin corner — matching the paper's "start from dest closest to C0".
+
+/// Node index in row-major order over the mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// (x, y) mesh coordinate; x is the column, y the row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+/// Router port direction. `Local` is the endpoint (NI) port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    Local,
+    North,
+    East,
+    South,
+    West,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 5] = [Dir::Local, Dir::North, Dir::East, Dir::South, Dir::West];
+
+    pub fn index(self) -> usize {
+        match self {
+            Dir::Local => 0,
+            Dir::North => 1,
+            Dir::East => 2,
+            Dir::South => 3,
+            Dir::West => 4,
+        }
+    }
+
+    /// The port on the neighbouring router that faces back at us.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::Local => Dir::Local,
+            Dir::North => Dir::South,
+            Dir::East => Dir::West,
+            Dir::South => Dir::North,
+            Dir::West => Dir::East,
+        }
+    }
+}
+
+/// A `cols` × `rows` 2D mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Mesh {
+    pub fn new(cols: usize, rows: usize) -> Self {
+        assert!(cols >= 1 && rows >= 1);
+        Mesh { cols, rows }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    pub fn coord(&self, n: NodeId) -> Coord {
+        assert!(n.0 < self.n_nodes(), "node {n:?} out of mesh {self:?}");
+        Coord { x: n.0 % self.cols, y: n.0 / self.cols }
+    }
+
+    pub fn node(&self, c: Coord) -> NodeId {
+        assert!(c.x < self.cols && c.y < self.rows, "{c:?} out of mesh {self:?}");
+        NodeId(c.y * self.cols + c.x)
+    }
+
+    /// Manhattan distance in hops.
+    pub fn manhattan(&self, a: NodeId, b: NodeId) -> usize {
+        let (ca, cb) = (self.coord(a), self.coord(b));
+        ca.x.abs_diff(cb.x) + ca.y.abs_diff(cb.y)
+    }
+
+    /// Neighbour in direction `d`, if inside the mesh.
+    pub fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        let c = self.coord(n);
+        let nc = match d {
+            Dir::Local => return Some(n),
+            Dir::North => {
+                if c.y + 1 >= self.rows {
+                    return None;
+                }
+                Coord { x: c.x, y: c.y + 1 }
+            }
+            Dir::South => {
+                if c.y == 0 {
+                    return None;
+                }
+                Coord { x: c.x, y: c.y - 1 }
+            }
+            Dir::East => {
+                if c.x + 1 >= self.cols {
+                    return None;
+                }
+                Coord { x: c.x + 1, y: c.y }
+            }
+            Dir::West => {
+                if c.x == 0 {
+                    return None;
+                }
+                Coord { x: c.x - 1, y: c.y }
+            }
+        };
+        Some(self.node(nc))
+    }
+
+    /// Next output port under XY routing (X fully first, then Y).
+    pub fn xy_next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        let (c, d) = (self.coord(cur), self.coord(dst));
+        if c.x < d.x {
+            Dir::East
+        } else if c.x > d.x {
+            Dir::West
+        } else if c.y < d.y {
+            Dir::North
+        } else if c.y > d.y {
+            Dir::South
+        } else {
+            Dir::Local
+        }
+    }
+
+    /// Full XY path from `from` to `to`, inclusive of both endpoints.
+    pub fn xy_path(&self, from: NodeId, to: NodeId) -> Vec<NodeId> {
+        let mut path = vec![from];
+        let mut cur = from;
+        while cur != to {
+            let d = self.xy_next_hop(cur, to);
+            cur = self.neighbour(cur, d).expect("XY routing left the mesh");
+            path.push(cur);
+        }
+        path
+    }
+
+    /// The directed links (node pairs) of the XY path — the "edges" used
+    /// by Alg. 1's overlap test.
+    pub fn xy_links(&self, from: NodeId, to: NodeId) -> Vec<(NodeId, NodeId)> {
+        let p = self.xy_path(from, to);
+        p.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.n_nodes()).map(NodeId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_node_ids() {
+        let m = Mesh::new(4, 5);
+        assert_eq!(m.n_nodes(), 20);
+        assert_eq!(m.coord(NodeId(0)), Coord { x: 0, y: 0 });
+        assert_eq!(m.coord(NodeId(5)), Coord { x: 1, y: 1 });
+        assert_eq!(m.node(Coord { x: 3, y: 4 }), NodeId(19));
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let m = Mesh::new(8, 8);
+        assert_eq!(m.manhattan(NodeId(0), NodeId(63)), 14);
+        assert_eq!(m.manhattan(NodeId(9), NodeId(9)), 0);
+    }
+
+    #[test]
+    fn neighbours_at_edges() {
+        let m = Mesh::new(3, 3);
+        assert_eq!(m.neighbour(NodeId(0), Dir::West), None);
+        assert_eq!(m.neighbour(NodeId(0), Dir::South), None);
+        assert_eq!(m.neighbour(NodeId(0), Dir::East), Some(NodeId(1)));
+        assert_eq!(m.neighbour(NodeId(0), Dir::North), Some(NodeId(3)));
+        assert_eq!(m.neighbour(NodeId(8), Dir::East), None);
+    }
+
+    #[test]
+    fn xy_routes_x_first() {
+        let m = Mesh::new(4, 4);
+        // 0=(0,0) -> 15=(3,3): east 3 times then north 3 times
+        let p = m.xy_path(NodeId(0), NodeId(15));
+        assert_eq!(
+            p,
+            vec![0, 1, 2, 3, 7, 11, 15].into_iter().map(NodeId).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn xy_path_length_is_manhattan() {
+        let m = Mesh::new(5, 7);
+        for a in m.nodes() {
+            for b in m.nodes() {
+                assert_eq!(m.xy_path(a, b).len(), m.manhattan(a, b) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn xy_path_to_self() {
+        let m = Mesh::new(2, 2);
+        assert_eq!(m.xy_path(NodeId(3), NodeId(3)), vec![NodeId(3)]);
+    }
+
+    #[test]
+    fn opposite_ports() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+
+    #[test]
+    fn next_hop_local_at_destination() {
+        let m = Mesh::new(3, 3);
+        assert_eq!(m.xy_next_hop(NodeId(4), NodeId(4)), Dir::Local);
+    }
+}

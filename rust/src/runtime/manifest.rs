@@ -1,0 +1,119 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`): tab-separated
+//! `name \t file \t in_shapes \t out_shapes` with shapes like
+//! `f32[256,64];f32[64,128]`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// One tensor shape, e.g. `f32[256,64]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad shape spec {s:?}"))?;
+        let dims_str = rest.strip_suffix(']').ok_or_else(|| anyhow!("bad shape spec {s:?}"))?;
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse().with_context(|| format!("bad dim in {s:?}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(ShapeSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(anyhow!("manifest line {}: expected 4 columns", ln + 1));
+            }
+            let shapes = |s: &str| -> Result<Vec<ShapeSpec>> {
+                s.split(';').map(ShapeSpec::parse).collect()
+            };
+            entries.push(ManifestEntry {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                inputs: shapes(cols[2])?,
+                outputs: shapes(cols[3])?,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read manifest {:?} (run `make artifacts`)", path.as_ref()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shape_specs() {
+        let s = ShapeSpec::parse("f32[256,64]").unwrap();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.dims, vec![256, 64]);
+        assert_eq!(s.numel(), 256 * 64);
+        assert_eq!(ShapeSpec::parse("f32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(ShapeSpec::parse("f32 256,64").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let m = Manifest::parse(
+            "# comment\n\
+             gemm\tgemm.hlo.txt\tf32[2,3];f32[3,4]\tf32[2,4]\n\
+             kv\tkv.hlo.txt\tf32[8,4];f32[4,2];f32[4,2]\tf32[8,2];f32[8,2]\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].inputs.len(), 2);
+        assert_eq!(m.entries[1].outputs.len(), 2);
+        assert_eq!(m.entries[1].inputs[0].dims, vec![8, 4]);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse("just-one-column").is_err());
+        assert!(Manifest::parse("a\tb\tf32[2\tf32[2]").is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Hop-count models — the implementation-agnostic Fig-6 metric
+//! ("number of edges the data traverses divided by N_dst").
+
+use crate::noc::{Mesh, NodeId};
+
+/// Total links the Chainwrite stream traverses: src -> order[0] -> ... ->
+/// order[n-1], each leg XY-routed (= Manhattan length).
+pub fn chain_hops(mesh: &Mesh, src: NodeId, order: &[NodeId]) -> usize {
+    let mut hops = 0;
+    let mut cur = src;
+    for &d in order {
+        hops += mesh.manhattan(cur, d);
+        cur = d;
+    }
+    hops
+}
+
+/// Total links for repeated unicast: every destination is a separate
+/// XY-routed transfer from the source.
+pub fn unicast_hops(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> usize {
+    dests.iter().map(|&d| mesh.manhattan(src, d)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::multicast::mcast_tree_hops;
+
+    #[test]
+    fn chain_hops_sums_legs() {
+        let m = Mesh::new(4, 1);
+        // 0 -> 2 -> 1 -> 3: 2 + 1 + 2 = 5
+        assert_eq!(chain_hops(&m, NodeId(0), &[2, 1, 3].map(NodeId)), 5);
+    }
+
+    #[test]
+    fn unicast_hops_sums_manhattan() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(unicast_hops(&m, NodeId(0), &[NodeId(3), NodeId(12)]), 6);
+    }
+
+    #[test]
+    fn empty_orders_are_zero() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(chain_hops(&m, NodeId(0), &[]), 0);
+        assert_eq!(unicast_hops(&m, NodeId(0), &[]), 0);
+    }
+
+    #[test]
+    fn optimal_chain_can_reach_one_hop_per_dest() {
+        // Fig 6's theoretical limit: a Hamiltonian-like chain over adjacent
+        // nodes costs exactly 1 hop per destination.
+        let m = Mesh::new(3, 1);
+        let hops = chain_hops(&m, NodeId(0), &[1, 2].map(NodeId));
+        assert_eq!(hops, 2); // = N_dst
+    }
+
+    #[test]
+    fn mcast_tree_never_worse_than_unicast() {
+        let m = Mesh::new(8, 8);
+        let dests: Vec<NodeId> = [5, 13, 27, 45, 60].map(NodeId).to_vec();
+        assert!(
+            mcast_tree_hops(&m, NodeId(0), &dests) <= unicast_hops(&m, NodeId(0), &dests)
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Simulation kernel: the synchronous cycle-stepping contract.
+//!
+//! The whole SoC advances in lock-step — every component implements
+//! [`Clocked`] and is ticked once per cycle by its owner (the `soc::Soc`
+//! event loop ticks DMA engines, then the network, then memories'
+//! bookkeeping). A shared [`Clock`] provides the cycle count; quiescence
+//! is detected structurally (`is_idle`) rather than by event-queue
+//! emptiness, because wormhole state lives in buffers, not events.
+
+/// A component advanced once per cycle.
+pub trait Clocked {
+    /// Advance one cycle.
+    fn tick(&mut self, cycle: u64);
+    /// True when the component holds no in-flight work.
+    fn is_idle(&self) -> bool;
+}
+
+/// Simulation clock.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Clock {
+    pub cycle: u64,
+}
+
+impl Clock {
+    pub fn advance(&mut self) -> u64 {
+        self.cycle += 1;
+        self.cycle
+    }
+}
+
+/// Watchdog used by `run_until` loops: panics (with context) when a
+/// simulation fails to make progress — the way the test suite detects
+/// protocol deadlocks.
+#[derive(Debug)]
+pub struct Watchdog {
+    pub deadline: u64,
+    pub label: &'static str,
+}
+
+impl Watchdog {
+    pub fn new(deadline: u64, label: &'static str) -> Self {
+        Watchdog { deadline, label }
+    }
+
+    pub fn check(&self, cycle: u64) {
+        assert!(
+            cycle <= self.deadline,
+            "watchdog '{}' expired at cycle {cycle} (deadline {})",
+            self.label,
+            self.deadline
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances() {
+        let mut c = Clock::default();
+        assert_eq!(c.advance(), 1);
+        assert_eq!(c.advance(), 2);
+        assert_eq!(c.cycle, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "watchdog 'demo' expired")]
+    fn watchdog_panics_past_deadline() {
+        Watchdog::new(10, "demo").check(11);
+    }
+
+    #[test]
+    fn watchdog_quiet_before_deadline() {
+        Watchdog::new(10, "demo").check(10);
+    }
+}

@@ -1,0 +1,170 @@
+//! SoC configuration, with the paper's three evaluation presets and a
+//! minimal TOML-subset loader so launch scripts can describe custom
+//! systems without recompiling.
+
+use crate::mem::addr_map::DEFAULT_WINDOW;
+
+/// Static description of a simulated SoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocConfig {
+    /// Mesh columns (x extent).
+    pub cols: usize,
+    /// Mesh rows (y extent).
+    pub rows: usize,
+    /// Scratchpad bytes per node.
+    pub spm_bytes: usize,
+    /// Address window per node (≥ spm_bytes, power of two).
+    pub window: u64,
+    /// Human label for reports.
+    pub name: String,
+}
+
+impl SocConfig {
+    /// §IV-A evaluation SoC: 4×5 mesh, 1 MB per cluster (Occamy-derived,
+    /// FlooNoC, 64 B/CC).
+    pub fn eval_4x5() -> Self {
+        SocConfig {
+            cols: 4,
+            rows: 5,
+            spm_bytes: 1 << 20,
+            window: DEFAULT_WINDOW,
+            name: "eval-4x5".into(),
+        }
+    }
+
+    /// §IV-C hop-study mesh: 8×8, memory irrelevant (analytic hops) but
+    /// kept small so full-system runs stay cheap.
+    pub fn mesh_8x8() -> Self {
+        SocConfig {
+            cols: 8,
+            rows: 8,
+            spm_bytes: 256 << 10,
+            window: DEFAULT_WINDOW,
+            name: "mesh-8x8".into(),
+        }
+    }
+
+    /// §IV-E FPGA prototype: 3×3 clusters on the VPK180. Scratchpads are
+    /// sized 4 MB so the largest Table II matrix (D3: 4096×512 int8 =
+    /// 2 MB) fits untiled; the FPGA tiles it instead — same traffic.
+    pub fn fpga_3x3() -> Self {
+        SocConfig {
+            cols: 3,
+            rows: 3,
+            spm_bytes: 4 << 20,
+            window: 4 << 20,
+            name: "fpga-3x3".into(),
+        }
+    }
+
+    /// §IV-F synthesis SoC: 4 clusters, 256 KB each.
+    pub fn synth_2x2() -> Self {
+        SocConfig {
+            cols: 2,
+            rows: 2,
+            spm_bytes: 256 << 10,
+            window: DEFAULT_WINDOW,
+            name: "synth-2x2".into(),
+        }
+    }
+
+    /// Custom geometry with default windowing.
+    pub fn custom(cols: usize, rows: usize, spm_bytes: usize) -> Self {
+        assert!(spm_bytes as u64 <= DEFAULT_WINDOW);
+        SocConfig {
+            cols,
+            rows,
+            spm_bytes,
+            window: DEFAULT_WINDOW,
+            name: format!("custom-{cols}x{rows}"),
+        }
+    }
+
+    /// Parse a TOML-subset config:
+    ///
+    /// ```toml
+    /// name = "my-soc"
+    /// cols = 4
+    /// rows = 5
+    /// spm_kib = 1024
+    /// ```
+    ///
+    /// Supports `key = value` lines, `#` comments, quoted strings and
+    /// integers — the subset the launcher needs (serde/toml are not
+    /// vendored in this image; see DESIGN.md §3).
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let mut cfg = SocConfig::eval_4x5();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let int = |v: &str| -> Result<usize, String> {
+                v.parse().map_err(|e| format!("line {}: bad integer {v:?}: {e}", ln + 1))
+            };
+            match k {
+                "name" => cfg.name = v.trim_matches('"').to_string(),
+                "cols" => cfg.cols = int(v)?,
+                "rows" => cfg.rows = int(v)?,
+                "spm_kib" => cfg.spm_bytes = int(v)? << 10,
+                "window_mib" => cfg.window = (int(v)? as u64) << 20,
+                other => return Err(format!("line {}: unknown key {other:?}", ln + 1)),
+            }
+        }
+        if cfg.spm_bytes as u64 > cfg.window {
+            return Err("spm does not fit the address window".into());
+        }
+        Ok(cfg)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.cols * self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        assert_eq!(SocConfig::eval_4x5().n_nodes(), 20);
+        assert_eq!(SocConfig::fpga_3x3().n_nodes(), 9);
+        assert_eq!(SocConfig::synth_2x2().n_nodes(), 4);
+        assert_eq!(SocConfig::synth_2x2().spm_bytes, 256 << 10);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = SocConfig::from_toml(
+            r#"
+            # my test soc
+            name = "t"
+            cols = 6
+            rows = 2
+            spm_kib = 512
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "t");
+        assert_eq!(cfg.cols, 6);
+        assert_eq!(cfg.rows, 2);
+        assert_eq!(cfg.spm_bytes, 512 << 10);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_keys_and_bad_ints() {
+        assert!(SocConfig::from_toml("bogus = 1").is_err());
+        assert!(SocConfig::from_toml("cols = banana").is_err());
+        assert!(SocConfig::from_toml("colsbanana").is_err());
+    }
+
+    #[test]
+    fn toml_rejects_oversized_spm() {
+        assert!(SocConfig::from_toml("spm_kib = 4096\nwindow_mib = 1").is_err());
+    }
+}

@@ -1,0 +1,395 @@
+//! SoC assembly: mesh + per-node memory, AXI slave, and all four DMA
+//! engines, advanced in lock-step.
+//!
+//! Presets mirror the paper's three evaluation systems:
+//! [`SocConfig::eval_4x5`] (20-cluster Occamy-derived SoC, §IV-A),
+//! [`SocConfig::fpga_3x3`] (9-cluster VPK180 prototype, §IV-E) and
+//! [`SocConfig::synth_2x2`] (4-cluster 16 nm synthesis SoC, §IV-F).
+
+pub mod config;
+
+use crate::axi::AxiSlave;
+use crate::dma::idma::Idma;
+use crate::dma::mcast::{McastEngine, McastSink};
+use crate::dma::torrent::dse::AffinePattern;
+use crate::dma::torrent::{ChainDest, ChainTask, Torrent};
+use crate::dma::TaskResult;
+use crate::mem::{AddrMap, Scratchpad};
+use crate::noc::{Mesh, Network, NodeId};
+use crate::sched::{schedule, Strategy};
+
+pub use config::SocConfig;
+
+/// Everything attached to one mesh node.
+pub struct SocNode {
+    pub torrent: Torrent,
+    pub idma: Idma,
+    pub xdma: crate::dma::xdma::Xdma,
+    pub mcast: McastEngine,
+    pub mcast_sink: McastSink,
+    pub slave: AxiSlave,
+    pub mem: Scratchpad,
+}
+
+/// The simulated SoC.
+pub struct Soc {
+    pub cfg: SocConfig,
+    pub net: Network,
+    pub nodes: Vec<SocNode>,
+    pub map: AddrMap,
+}
+
+impl Soc {
+    pub fn new(cfg: SocConfig) -> Self {
+        let mesh = Mesh::new(cfg.cols, cfg.rows);
+        let map = AddrMap::new(mesh.n_nodes(), cfg.window);
+        let nodes = mesh
+            .nodes()
+            .map(|id| SocNode {
+                torrent: Torrent::new(id),
+                idma: Idma::new(id),
+                xdma: crate::dma::xdma::Xdma::new(id),
+                mcast: McastEngine::new(id),
+                mcast_sink: McastSink::default(),
+                slave: AxiSlave::new(),
+                mem: Scratchpad::new(map.base_of(id), cfg.spm_bytes),
+            })
+            .collect();
+        Soc { cfg, net: Network::new(mesh), nodes, map }
+    }
+
+    pub fn mesh(&self) -> Mesh {
+        self.net.mesh
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.net.cycle
+    }
+
+    /// Advance one cycle: deliver inboxes, tick engines, tick the fabric.
+    pub fn tick(&mut self) {
+        let now = self.net.cycle;
+        // 1. Dispatch delivered packets to the owning component.
+        for i in 0..self.nodes.len() {
+            while let Some(pkt) = self.net.recv(NodeId(i)) {
+                let node = &mut self.nodes[i];
+                let consumed = node.torrent.handle(&pkt, &mut node.mem, now)
+                    || node.idma.handle(&pkt, now)
+                    || node.mcast.handle(&pkt, now)
+                    || node.mcast_sink.handle(NodeId(i), &pkt, &mut node.mem, &mut self.net)
+                    || node.slave.handle(NodeId(i), &pkt, &mut node.mem, now);
+                assert!(consumed, "undeliverable packet at node {i}: {:?}", pkt.msg);
+            }
+        }
+        // 2. Engine logic.
+        for i in 0..self.nodes.len() {
+            let node = &mut self.nodes[i];
+            node.xdma.tick(&mut node.torrent, now);
+            node.torrent.tick(&mut self.net, &mut node.mem);
+            node.idma.tick(&mut self.net, &mut node.mem);
+            node.mcast.tick(&mut self.net, &mut node.mem);
+            node.slave.tick(NodeId(i), &mut self.net);
+        }
+        // 3. Fabric.
+        self.net.tick();
+    }
+
+    /// All engines and the fabric quiescent.
+    pub fn is_idle(&self) -> bool {
+        self.net.is_idle()
+            && self.net.inboxes_empty()
+            && self.nodes.iter().all(|n| {
+                n.torrent.is_idle()
+                    && n.idma.is_idle()
+                    && n.xdma.is_idle()
+                    && n.mcast.is_idle()
+                    && n.slave.is_idle()
+            })
+    }
+
+    /// Run until quiescent; panics after `max_cycles` (deadlock guard).
+    pub fn run_until_idle(&mut self, max_cycles: u64) -> u64 {
+        let start = self.net.cycle;
+        while !self.is_idle() {
+            self.tick();
+            assert!(
+                self.net.cycle - start <= max_cycles,
+                "SoC did not quiesce within {max_cycles} cycles"
+            );
+        }
+        self.net.cycle - start
+    }
+
+    /// Submit a Chainwrite: `dests` are (node, local write pattern) pairs;
+    /// the chain order is decided by `strategy`. Returns the ordered set.
+    pub fn chainwrite(
+        &mut self,
+        task: u32,
+        src: NodeId,
+        read: AffinePattern,
+        dests: &[(NodeId, AffinePattern)],
+        strategy: Strategy,
+        with_data: bool,
+    ) -> Vec<NodeId> {
+        let mesh = self.mesh();
+        let dest_nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
+        let order = schedule(strategy, &mesh, src, &dest_nodes);
+        let ordered: Vec<ChainDest> = order
+            .iter()
+            .map(|n| {
+                let (_, p) = dests.iter().find(|(d, _)| d == n).unwrap();
+                ChainDest { node: *n, pattern: p.clone() }
+            })
+            .collect();
+        let now = self.net.cycle;
+        self.nodes[src.0].torrent.submit(
+            ChainTask { task, read, dests: ordered, with_data },
+            now,
+        );
+        order
+    }
+
+    /// Latest completed Torrent task result at `node` with id `task`.
+    pub fn torrent_result(&self, node: NodeId, task: u32) -> Option<&TaskResult> {
+        self.nodes[node.0].torrent.results.iter().find(|r| r.task == task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dma::idma::IdmaTask;
+    use crate::dma::mcast::McastTask;
+    use crate::dma::xdma::XdmaTask;
+    use crate::sched::Strategy;
+
+    fn soc(cols: usize, rows: usize) -> Soc {
+        Soc::new(SocConfig::custom(cols, rows, 64 * 1024))
+    }
+
+    fn fill_src(soc: &mut Soc, node: NodeId, offset: u64, len: usize) -> Vec<u8> {
+        let base = soc.map.base_of(node) + offset;
+        let data: Vec<u8> = (0..len).map(|i| (i * 31 + 7) as u8).collect();
+        soc.nodes[node.0].mem.write(base, &data);
+        data
+    }
+
+    #[test]
+    fn p2p_chainwrite_moves_data() {
+        let mut s = soc(3, 3);
+        let data = fill_src(&mut s, NodeId(0), 0x100, 4096);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)) + 0x100, 4096);
+        let wr = AffinePattern::contiguous(s.map.base_of(NodeId(5)) + 0x800, 4096);
+        s.chainwrite(1, NodeId(0), read, &[(NodeId(5), wr)], Strategy::Naive, true);
+        s.run_until_idle(100_000);
+        let got = s.nodes[5].mem.peek(s.map.base_of(NodeId(5)) + 0x800, 4096);
+        assert_eq!(got, &data[..]);
+        let r = s.torrent_result(NodeId(0), 1).expect("result recorded");
+        assert!(r.latency() > 0);
+    }
+
+    #[test]
+    fn chainwrite_delivers_to_all_destinations_in_order() {
+        let mut s = soc(4, 4);
+        let len = 8 * 1024;
+        let data = fill_src(&mut s, NodeId(0), 0, len);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+        let dests: Vec<(NodeId, AffinePattern)> = [5usize, 3, 10, 15]
+            .iter()
+            .map(|&n| {
+                (
+                    NodeId(n),
+                    AffinePattern::contiguous(s.map.base_of(NodeId(n)) + 0x40, len),
+                )
+            })
+            .collect();
+        let order = s.chainwrite(7, NodeId(0), read, &dests, Strategy::Greedy, true);
+        assert_eq!(order.len(), 4);
+        s.run_until_idle(200_000);
+        for (n, _) in &dests {
+            let got = s.nodes[n.0].mem.peek(s.map.base_of(*n) + 0x40, len);
+            assert_eq!(got, &data[..], "dest {n:?} data mismatch");
+        }
+        // Middle followers forwarded bytes; the tail did not.
+        let tail = *order.last().unwrap();
+        assert_eq!(s.nodes[tail.0].torrent.stats.bytes_forwarded, 0);
+        for n in &order[..order.len() - 1] {
+            assert!(s.nodes[n.0].torrent.stats.bytes_forwarded as usize >= len);
+        }
+    }
+
+    #[test]
+    fn chainwrite_with_layout_transform() {
+        // Source contiguous; destination scatters into a strided layout.
+        let mut s = soc(3, 3);
+        let len = 2048;
+        let data = fill_src(&mut s, NodeId(0), 0, len);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+        let dst_base = s.map.base_of(NodeId(4));
+        // 128 rows of 16 B, pitch 64 B.
+        let wr = AffinePattern::strided(dst_base, 128, 16, 64);
+        s.chainwrite(9, NodeId(0), read, &[(NodeId(4), wr)], Strategy::Naive, true);
+        s.run_until_idle(200_000);
+        for row in 0..128 {
+            let got = s.nodes[4].mem.peek(dst_base + row as u64 * 64, 16);
+            assert_eq!(got, &data[row * 16..row * 16 + 16], "row {row}");
+        }
+    }
+
+    #[test]
+    fn chainwrite_latency_scales_with_dest_count() {
+        // More destinations => more overhead, but far less than linear in
+        // total bytes (that's the whole point of Chainwrite).
+        let lat = |n_dests: usize| -> u64 {
+            let mut s = soc(4, 5);
+            let len = 16 * 1024;
+            fill_src(&mut s, NodeId(0), 0, len);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+            let dests: Vec<(NodeId, AffinePattern)> = (1..=n_dests)
+                .map(|n| {
+                    (
+                        NodeId(n),
+                        AffinePattern::contiguous(s.map.base_of(NodeId(n)), len),
+                    )
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Greedy, false);
+            s.run_until_idle(500_000);
+            s.torrent_result(NodeId(0), 1).unwrap().latency()
+        };
+        let l1 = lat(1);
+        let l4 = lat(4);
+        let l8 = lat(8);
+        assert!(l4 > l1 && l8 > l4);
+        // Chainwrite: 8 dests must cost far less than 8 separate copies.
+        assert!(l8 < l1 * 4, "chainwrite not amortizing: l1={l1} l8={l8}");
+    }
+
+    #[test]
+    fn idma_p2mp_is_sequential_sum() {
+        let mut s = soc(3, 3);
+        let len = 4096;
+        let data = fill_src(&mut s, NodeId(0), 0, len);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+        let dests: Vec<(NodeId, AffinePattern)> = [1usize, 2, 4]
+            .iter()
+            .map(|&n| {
+                (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), len))
+            })
+            .collect();
+        let now = s.cycle();
+        s.nodes[0].idma.submit(
+            IdmaTask { task: 3, read, dests: dests.clone(), with_data: true },
+            now,
+        );
+        s.run_until_idle(200_000);
+        for (n, _) in &dests {
+            assert_eq!(
+                s.nodes[n.0].mem.peek(s.map.base_of(*n), len),
+                &data[..],
+                "dest {n:?}"
+            );
+        }
+        assert_eq!(s.nodes[0].idma.results.len(), 1);
+    }
+
+    #[test]
+    fn xdma_software_p2mp_completes_and_is_slower_than_chainwrite() {
+        let run = |use_chain: bool| -> u64 {
+            let mut s = soc(3, 3);
+            let len = 32 * 1024;
+            fill_src(&mut s, NodeId(0), 0, len);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+            let dests: Vec<(NodeId, AffinePattern)> = (1..9)
+                .map(|n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), len))
+                })
+                .collect();
+            let now = s.cycle();
+            if use_chain {
+                s.chainwrite(11, NodeId(0), read, &dests, Strategy::Tsp, false);
+                s.run_until_idle(1_000_000);
+                s.torrent_result(NodeId(0), 11).unwrap().latency()
+            } else {
+                s.nodes[0].xdma.submit(
+                    XdmaTask { task: 11, read, dests, with_data: false },
+                    now,
+                );
+                s.run_until_idle(1_000_000);
+                s.nodes[0].xdma.results[0].latency()
+            }
+        };
+        let chain = run(true);
+        let xdma = run(false);
+        assert!(
+            xdma > 4 * chain,
+            "expected chainwrite >> xdma-unicast at 8 dests: chain={chain} xdma={xdma}"
+        );
+    }
+
+    #[test]
+    fn mcast_delivers_and_completes() {
+        let mut s = soc(4, 4);
+        let len = 8 * 1024;
+        let data = fill_src(&mut s, NodeId(0), 0, len);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+        let dests: Vec<NodeId> = [3usize, 12, 15].iter().map(|&n| NodeId(n)).collect();
+        let now = s.cycle();
+        s.nodes[0].mcast.submit(
+            McastTask { task: 5, read, dests: dests.clone(), drop_offset: 0x100, with_data: true },
+            now,
+        );
+        s.run_until_idle(200_000);
+        for n in &dests {
+            let got = s.nodes[n.0].mem.peek(s.map.base_of(*n) + 0x100, len);
+            assert_eq!(got, &data[..], "dest {n:?}");
+        }
+        assert_eq!(s.nodes[0].mcast.results.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_chainwrites_from_different_initiators() {
+        let mut s = soc(4, 4);
+        let len = 4096;
+        let d0 = fill_src(&mut s, NodeId(0), 0, len);
+        let d15 = fill_src(&mut s, NodeId(15), 0, len);
+        let r0 = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+        let r15 = AffinePattern::contiguous(s.map.base_of(NodeId(15)), len);
+        let w = |n: usize, off: u64| {
+            AffinePattern::contiguous(s.map.base_of(NodeId(n)) + off, len)
+        };
+        let dests0 = vec![(NodeId(5), w(5, 0)), (NodeId(6), w(6, 0))];
+        let dests15 = vec![(NodeId(9), w(9, 0x2000)), (NodeId(10), w(10, 0x2000))];
+        s.chainwrite(21, NodeId(0), r0, &dests0, Strategy::Greedy, true);
+        s.chainwrite(22, NodeId(15), r15, &dests15, Strategy::Greedy, true);
+        s.run_until_idle(300_000);
+        assert_eq!(s.nodes[5].mem.peek(s.map.base_of(NodeId(5)), len), &d0[..]);
+        assert_eq!(s.nodes[6].mem.peek(s.map.base_of(NodeId(6)), len), &d0[..]);
+        assert_eq!(
+            s.nodes[9].mem.peek(s.map.base_of(NodeId(9)) + 0x2000, len),
+            &d15[..]
+        );
+        assert_eq!(
+            s.nodes[10].mem.peek(s.map.base_of(NodeId(10)) + 0x2000, len),
+            &d15[..]
+        );
+    }
+
+    #[test]
+    fn local_loopback_reshuffles_in_place() {
+        let mut s = soc(2, 2);
+        let base = s.map.base_of(NodeId(0));
+        let data = fill_src(&mut s, NodeId(0), 0, 1024);
+        let node = &mut s.nodes[0];
+        let read = AffinePattern::contiguous(base, 1024);
+        let write = AffinePattern::strided(base + 0x4000, 64, 16, 32);
+        let done = node.torrent.local_loopback(&read, &write, &mut node.mem, 0);
+        assert!(done >= 32, "loopback should cost stream cycles");
+        for row in 0..64 {
+            assert_eq!(
+                node.mem.peek(base + 0x4000 + row as u64 * 32, 16),
+                &data[row * 16..row * 16 + 16]
+            );
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and defaults. Used by `main.rs` and the
+//! examples.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + `--key value` options + `--flags`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed getter with default; panics with a clear message on a bad value.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}: cannot parse {v:?}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get_parse_or(name, default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get_parse_or(name, default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get_parse_or(name, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|w| w.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("run --size 64 --dests=8 fig5 --verbose");
+        assert_eq!(a.positional, vec!["run", "fig5"]);
+        assert_eq!(a.get("size"), Some("64"));
+        assert_eq!(a.get("dests"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 12 --ratio 0.5");
+        assert_eq!(a.usize_or("n", 1), 12);
+        assert_eq!(a.usize_or("m", 7), 7);
+        assert!((a.f64_or("ratio", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --check");
+        assert!(a.flag("fast") && a.flag("check"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        parse("--n banana").usize_or("n", 1);
+    }
+}

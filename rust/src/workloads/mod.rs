@@ -1,0 +1,8 @@
+//! Workload generators: the DeepSeek-V3 self-attention data-movement
+//! workloads of Table II, and the synthetic sweeps of §IV-B/C.
+
+pub mod synthetic;
+pub mod table2;
+
+pub use synthetic::random_dest_sets;
+pub use table2::{AttnWorkload, Layout, Stage, TABLE2};

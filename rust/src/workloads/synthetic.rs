@@ -1,0 +1,100 @@
+//! Synthetic workload generation for the §IV-B efficiency sweep and the
+//! §IV-C hop study (randomized destination sets, seeded for exact
+//! reproducibility of every figure).
+
+use crate::noc::{Mesh, NodeId};
+use crate::util::rng::Rng;
+
+/// Generate `count` random destination sets of size `n_dst`, drawn from
+/// the mesh excluding `src` (paper: "every group selects destinations
+/// randomly and repeats this 128 times").
+pub fn random_dest_sets(
+    mesh: &Mesh,
+    src: NodeId,
+    n_dst: usize,
+    count: usize,
+    seed: u64,
+) -> Vec<Vec<NodeId>> {
+    let candidates: Vec<NodeId> = mesh.nodes().filter(|&n| n != src).collect();
+    assert!(n_dst <= candidates.len(), "n_dst {n_dst} exceeds mesh minus source");
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            rng.sample_distinct(candidates.len(), n_dst)
+                .into_iter()
+                .map(|i| candidates[i])
+                .collect()
+        })
+        .collect()
+}
+
+/// The §IV-B sweep grid: data sizes 1–128 KB (powers of two) ×
+/// destination counts 2–16 → the paper's 192 test points per mechanism.
+pub fn fig5_grid() -> Vec<(usize, usize)> {
+    let sizes: Vec<usize> = (0..8).map(|i| (1 << i) * 1024).collect(); // 1..128 KB
+    let dests: Vec<usize> = (2..=16).collect();
+    let mut grid = Vec::new();
+    for &s in &sizes {
+        for &d in &dests {
+            grid.push((s, d));
+        }
+    }
+    grid
+}
+
+/// The §IV-C destination-count groups on the 8×8 mesh.
+pub fn fig6_groups() -> Vec<usize> {
+    vec![4, 8, 16, 24, 32, 40, 48, 63]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dest_sets_are_distinct_and_exclude_source() {
+        let m = Mesh::new(8, 8);
+        let sets = random_dest_sets(&m, NodeId(0), 16, 128, 1);
+        assert_eq!(sets.len(), 128);
+        for s in &sets {
+            assert_eq!(s.len(), 16);
+            assert!(!s.contains(&NodeId(0)));
+            let mut d = s.clone();
+            d.sort();
+            d.dedup();
+            assert_eq!(d.len(), 16);
+        }
+    }
+
+    #[test]
+    fn dest_sets_reproducible_by_seed() {
+        let m = Mesh::new(8, 8);
+        assert_eq!(
+            random_dest_sets(&m, NodeId(0), 8, 4, 7),
+            random_dest_sets(&m, NodeId(0), 8, 4, 7)
+        );
+    }
+
+    #[test]
+    fn fig5_grid_has_192_points() {
+        let g = fig5_grid();
+        assert_eq!(g.len(), 8 * 15);
+        assert!(g.contains(&(1024, 2)));
+        assert!(g.contains(&(131072, 16)));
+    }
+
+    #[test]
+    fn fig6_groups_match_paper() {
+        let g = fig6_groups();
+        assert_eq!(g.len(), 8);
+        assert_eq!(*g.first().unwrap(), 4);
+        assert_eq!(*g.last().unwrap(), 63);
+    }
+
+    #[test]
+    fn full_mesh_63_dests_possible() {
+        let m = Mesh::new(8, 8);
+        let sets = random_dest_sets(&m, NodeId(0), 63, 2, 3);
+        assert_eq!(sets[0].len(), 63);
+    }
+}

@@ -1,0 +1,247 @@
+//! Table II: the six DeepSeek-V3 self-attention data-movement workloads
+//! evaluated on the FPGA SoC (paper §IV-E, Fig 9/10).
+//!
+//! Matrices are int8 (the GeMM accelerator is an 8-bit MAC array) and
+//! stored in *blocked* "MNMxNy" layouts: tm×tn tiles, tiles row-major,
+//! elements row-major inside a tile. A transfer that changes layout makes
+//! the DSE read the source in logical element order — tn-byte runs — so
+//! layout transforms cost link-rate, exactly the effect Fig 9 shows.
+
+use crate::dma::torrent::dse::AffinePattern;
+
+/// A blocked matrix layout: tm×tn tiles (MNM{tm}N{tn}).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    pub tm: usize,
+    pub tn: usize,
+}
+
+impl Layout {
+    pub const fn new(tm: usize, tn: usize) -> Self {
+        Layout { tm, tn }
+    }
+
+    pub fn name(&self) -> String {
+        format!("MNM{}N{}", self.tm, self.tn)
+    }
+}
+
+/// Prefill or decode stage (Table II's P*/D* prefix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Prefill,
+    Decode,
+}
+
+/// One Table II row.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnWorkload {
+    pub id: &'static str,
+    pub stage: Stage,
+    /// Matrix shape (rows × cols), int8 elements.
+    pub rows: usize,
+    pub cols: usize,
+    pub in_layout: Layout,
+    pub out_layout: Layout,
+    /// Whether the workload is P2MP (multicast column of Table II).
+    pub multicast: bool,
+}
+
+/// The six workloads of Table II.
+pub const TABLE2: [AttnWorkload; 6] = [
+    AttnWorkload {
+        id: "P1:QKT_Single_Head",
+        stage: Stage::Prefill,
+        rows: 2048,
+        cols: 192,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(8, 8),
+        multicast: true,
+    },
+    AttnWorkload {
+        id: "P2:SV_Single_Head",
+        stage: Stage::Prefill,
+        rows: 2048,
+        cols: 128,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(8, 8),
+        multicast: true,
+    },
+    AttnWorkload {
+        id: "P3:KV_Matrix_MLA_Recovery",
+        stage: Stage::Prefill,
+        rows: 2048,
+        cols: 512,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(16, 8),
+        multicast: true,
+    },
+    AttnWorkload {
+        id: "D1:QKT_Single_Head",
+        stage: Stage::Decode,
+        rows: 4096,
+        cols: 192,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(64, 16),
+        multicast: false,
+    },
+    AttnWorkload {
+        id: "D2:SV_Single_Head",
+        stage: Stage::Decode,
+        rows: 4096,
+        cols: 128,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(64, 16),
+        multicast: false,
+    },
+    AttnWorkload {
+        id: "D3:KV_Matrix_MLA_Recovery",
+        stage: Stage::Decode,
+        rows: 4096,
+        cols: 512,
+        in_layout: Layout::new(16, 8),
+        out_layout: Layout::new(16, 8),
+        multicast: true,
+    },
+];
+
+impl AttnWorkload {
+    /// Payload bytes (int8 elements).
+    pub fn bytes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True when source and destination layouts differ (the DSE must
+    /// re-tile on the fly).
+    pub fn needs_relayout(&self) -> bool {
+        self.in_layout != self.out_layout
+    }
+
+    /// DSE pattern reading a blocked matrix at `base` in *logical
+    /// element order*. When no relayout is needed the DMA moves the
+    /// matrix in memory order instead — a single contiguous run.
+    pub fn read_pattern(&self, base: u64) -> AffinePattern {
+        if !self.needs_relayout() {
+            return AffinePattern::contiguous(base, self.bytes());
+        }
+        blocked_logical_order(base, self.rows, self.cols, self.in_layout)
+    }
+
+    /// DSE pattern writing the destination layout at `base` from a
+    /// logical-order stream (contiguous when no relayout).
+    pub fn write_pattern(&self, base: u64) -> AffinePattern {
+        if !self.needs_relayout() {
+            return AffinePattern::contiguous(base, self.bytes());
+        }
+        blocked_logical_order(base, self.rows, self.cols, self.out_layout)
+    }
+}
+
+/// Affine pattern visiting a blocked (tm×tn) R×C int8 matrix in logical
+/// row-major element order.
+///
+/// Memory offset of element (r, c):
+/// `tile(r/tm, c/tn) * tm*tn + (r%tm)*tn + (c%tn)` with tiles row-major.
+/// Logical order therefore iterates, innermost first: tile column
+/// (stride tm·tn), row-within-tile (stride tn), tile row
+/// (stride (C/tn)·tm·tn); each innermost step is one tn-byte run.
+pub fn blocked_logical_order(base: u64, rows: usize, cols: usize, l: Layout) -> AffinePattern {
+    assert!(rows % l.tm == 0 && cols % l.tn == 0, "{rows}x{cols} vs {l:?}");
+    let tile = (l.tm * l.tn) as i64;
+    let tiles_per_row = (cols / l.tn) as i64;
+    AffinePattern {
+        base,
+        elem_bytes: l.tn,
+        dims: vec![
+            (cols / l.tn, tile),                    // tile column
+            (l.tm, l.tn as i64),                    // row within tile
+            (rows / l.tm, tiles_per_row * tile),    // tile row
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Scratchpad;
+
+    #[test]
+    fn table2_shapes_match_paper() {
+        assert_eq!(TABLE2[0].bytes(), 2048 * 192);
+        assert_eq!(TABLE2[5].bytes(), 4096 * 512);
+        assert_eq!(TABLE2[2].in_layout, TABLE2[2].out_layout);
+        assert!(TABLE2[0].needs_relayout());
+        assert!(!TABLE2[2].needs_relayout());
+        assert_eq!(TABLE2[3].out_layout.name(), "MNM64N16");
+    }
+
+    #[test]
+    fn no_relayout_is_contiguous_full_rate() {
+        let p = TABLE2[2].read_pattern(0);
+        assert_eq!(p.runs().len(), 1);
+        assert!((p.rate_per_cycle() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn relayout_read_runs_are_tile_rows() {
+        let w = TABLE2[0]; // MNM16N8 -> MNM8N8
+        let p = w.read_pattern(0);
+        assert_eq!(p.total_bytes(), w.bytes());
+        // tn-byte runs at 1 B/element; tile-row boundaries occasionally
+        // coalesce two runs, nudging the rate just above 8 B/CC.
+        let rate = p.rate_per_cycle();
+        assert!((7.9..8.3).contains(&rate), "rate {rate} not ~8 B/CC");
+    }
+
+    #[test]
+    fn logical_order_pattern_is_a_permutation_of_the_matrix() {
+        // Gather a small blocked matrix in logical order and check against
+        // a direct software re-layout.
+        let (rows, cols) = (32, 16);
+        let l = Layout::new(16, 8);
+        let mut mem = Scratchpad::new(0, 4096);
+        // Fill memory so byte at offset o == o % 251 (identifiable).
+        let backing: Vec<u8> = (0..rows * cols).map(|o| (o % 251) as u8).collect();
+        mem.write(0, &backing);
+        let stream = blocked_logical_order(0, rows, cols, l).gather(&mut mem);
+        assert_eq!(stream.len(), rows * cols);
+        // Element (r, c) must be the byte at its blocked offset.
+        for r in 0..rows {
+            for c in 0..cols {
+                let tile = (r / l.tm) * (cols / l.tn) + (c / l.tn);
+                let off = tile * l.tm * l.tn + (r % l.tm) * l.tn + (c % l.tn);
+                assert_eq!(
+                    stream[r * cols + c],
+                    (off % 251) as u8,
+                    "element ({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relayout_roundtrip_via_two_patterns() {
+        // read(in-layout) then write(out-layout) must preserve the logical
+        // matrix: verify on a 64x32 MNM16N8 -> MNM8N8 transform.
+        let (rows, cols) = (64, 32);
+        let win = Layout::new(16, 8);
+        let wout = Layout::new(8, 8);
+        let mut src = Scratchpad::new(0, 1 << 16);
+        src.fill_pattern(0x3C);
+        let mut dst = Scratchpad::new(0, 1 << 16);
+        let stream = blocked_logical_order(0, rows, cols, win).gather(&mut src);
+        blocked_logical_order(0x8000, rows, cols, wout).scatter(&stream, &mut dst);
+        // Check logical element (r, c) equality.
+        for r in (0..rows).step_by(7) {
+            for c in (0..cols).step_by(5) {
+                let off_in = ((r / 16) * (cols / 8) + c / 8) * 128 + (r % 16) * 8 + c % 8;
+                let off_out = ((r / 8) * (cols / 8) + c / 8) * 64 + (r % 8) * 8 + c % 8;
+                assert_eq!(
+                    src.peek(off_in as u64, 1)[0],
+                    dst.peek(0x8000 + off_out as u64, 1)[0],
+                    "element ({r},{c})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Failure-injection and adversarial-condition tests: busy followers,
+//! saturated fabrics, degenerate patterns, protocol edge cases.
+
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
+use torrent::dma::torrent::dse::AffinePattern;
+use torrent::dma::torrent::{ChainDest, ChainTask};
+use torrent::noc::{Message, NodeId, Packet};
+use torrent::sched::Strategy;
+use torrent::soc::{Soc, SocConfig};
+
+fn coord() -> Coordinator {
+    Coordinator::new(SocConfig::custom(3, 3, 256 * 1024))
+}
+
+/// A follower already serving one chain delays — but does not deadlock —
+/// a second chain through the same node (grant withheld until ready).
+#[test]
+fn overlapping_chains_through_shared_follower() {
+    let mut c = coord();
+    let bytes = 32 * 1024;
+    // Chain A: 0 -> {1, 4}; Chain B: 8 -> {4, 2}; node 4 is shared.
+    let ta = c.submit_simple(NodeId(0), &[NodeId(1), NodeId(4)], bytes, EngineKind::Torrent(Strategy::Naive), false);
+    let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(8)), bytes);
+    let dests_b = vec![
+        (NodeId(4), AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x20000, bytes)),
+        (NodeId(2), AffinePattern::contiguous(c.soc.map.base_of(NodeId(2)) + 0x20000, bytes)),
+    ];
+    let tb = c.submit(P2mpRequest {
+        src: NodeId(8),
+        read: read_b,
+        dests: dests_b,
+        engine: EngineKind::Torrent(Strategy::Naive),
+        with_data: false,
+    });
+    c.run_to_completion(50_000_000);
+    assert!(c.latency_of(ta).is_some(), "chain A deadlocked");
+    assert!(c.latency_of(tb).is_some(), "chain B deadlocked");
+}
+
+/// Sixteen concurrent all-to-different-destination chains saturate the
+/// fabric without deadlock or data loss.
+#[test]
+fn fabric_saturation_many_concurrent_chains() {
+    let mut c = Coordinator::new(SocConfig::eval_4x5());
+    let bytes = 8 * 1024;
+    let mut tasks = vec![];
+    for src in 0..16usize {
+        let d1 = (src + 2) % 20;
+        let d2 = (src + 7) % 20;
+        if d1 == src || d2 == src || d1 == d2 {
+            continue;
+        }
+        let read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(src)), bytes);
+        let dests = vec![
+            (NodeId(d1), AffinePattern::contiguous(c.soc.map.base_of(NodeId(d1)) + 0x40000, bytes)),
+            (NodeId(d2), AffinePattern::contiguous(c.soc.map.base_of(NodeId(d2)) + 0x60000 + src as u64 * 0x2000, bytes)),
+        ];
+        tasks.push(c.submit(P2mpRequest {
+            src: NodeId(src),
+            read,
+            dests,
+            engine: EngineKind::Torrent(Strategy::Greedy),
+            with_data: false,
+        }));
+    }
+    c.run_to_completion(100_000_000);
+    for t in tasks {
+        assert!(c.latency_of(t).is_some(), "task {t} starved");
+    }
+}
+
+/// Zero-payload cfg-only edge: a 1-byte transfer exercises the full
+/// four-phase protocol.
+#[test]
+fn one_byte_chainwrite() {
+    let mut c = coord();
+    c.soc.nodes[0].mem.write(c.soc.map.base_of(NodeId(0)), &[0xAB]);
+    let t = c.submit_simple(NodeId(0), &[NodeId(8)], 1, EngineKind::Torrent(Strategy::Greedy), true);
+    c.run_to_completion(1_000_000);
+    assert!(c.latency_of(t).is_some());
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    assert_eq!(c.soc.nodes[8].mem.peek(c.soc.map.base_of(NodeId(8)) + half, 1), &[0xAB]);
+}
+
+/// Chain where consecutive destinations are maximally distant (worst-case
+/// naive order): must still complete within the watchdog.
+#[test]
+fn pathological_zigzag_chain() {
+    let mut c = Coordinator::new(SocConfig::eval_4x5());
+    // Alternate corners: 1, 19, 4, 16, 3, 15 (naive keeps this order? No:
+    // naive sorts by id — so submit as explicit ChainTask to force it).
+    let bytes = 4 * 1024;
+    let order = [1usize, 19, 4, 16, 3, 15];
+    let dests: Vec<ChainDest> = order
+        .iter()
+        .map(|&n| ChainDest {
+            node: NodeId(n),
+            pattern: AffinePattern::contiguous(c.soc.map.base_of(NodeId(n)) + 0x80000, bytes),
+        })
+        .collect();
+    let now = c.soc.cycle();
+    c.soc.nodes[0].torrent.submit(
+        ChainTask {
+            task: 777,
+            read: AffinePattern::contiguous(c.soc.map.base_of(NodeId(0)), bytes),
+            dests,
+            with_data: false,
+        },
+        now,
+    );
+    c.soc.run_until_idle(50_000_000);
+    assert!(c.soc.torrent_result(NodeId(0), 777).is_some());
+}
+
+/// Unroutable / malformed traffic is rejected loudly, not silently.
+#[test]
+#[should_panic(expected = "undeliverable packet")]
+fn unknown_message_panics_at_dispatch() {
+    let mut soc = Soc::new(SocConfig::custom(2, 2, 32 * 1024));
+    soc.net.send(
+        NodeId(0),
+        Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0xDEAD)),
+    );
+    soc.run_until_idle(10_000);
+}
+
+/// AXI write beyond the destination scratchpad returns ok=false and the
+/// initiating engine panics (data would be lost silently otherwise).
+#[test]
+#[should_panic(expected = "iDMA write burst failed")]
+fn idma_write_out_of_range_fails_loudly() {
+    let mut soc = Soc::new(SocConfig::custom(2, 2, 32 * 1024));
+    let now = soc.cycle();
+    // Destination pattern points past node 3's scratchpad.
+    soc.nodes[0].idma.submit(
+        torrent::dma::idma::IdmaTask {
+            task: 1,
+            read: AffinePattern::contiguous(soc.map.base_of(NodeId(0)), 64),
+            dests: vec![(
+                NodeId(3),
+                AffinePattern::contiguous(soc.map.base_of(NodeId(3)) + (32 * 1024), 64),
+            )],
+            with_data: false,
+        },
+        now,
+    );
+    soc.run_until_idle(100_000);
+}
+
+/// Watchdog fires (panics) when the system genuinely cannot quiesce —
+/// here by never delivering a grant (destination outside the mesh is
+/// prevented by AddrMap, so emulate with an undeliverable follower cfg).
+#[test]
+fn watchdog_catches_stall() {
+    let mut soc = Soc::new(SocConfig::custom(2, 2, 32 * 1024));
+    // A chain whose only destination never grants because we steal its
+    // cfg: submit, then drop the cfg packet by draining node 3's inbox
+    // before dispatch. Simplest equivalent: assert the watchdog mechanism
+    // itself.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        soc.net.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(3), Message::TorrentGrant { task: 42 }),
+        );
+        // Grant for an unknown task is consumed silently; the fabric
+        // drains fine — so use an absurd deadline of 0 to prove the
+        // watchdog path triggers.
+        soc.run_until_idle(0);
+    }));
+    assert!(result.is_err(), "watchdog must fire on impossible deadline");
+}
+
+/// Strided destination patterns with sub-flit runs (worst DSE rate) still
+/// deliver byte-exact data.
+#[test]
+fn worst_case_strided_write_pattern() {
+    let mut c = coord();
+    let rows = 512usize;
+    let bytes = rows * 4;
+    let base0 = c.soc.map.base_of(NodeId(0));
+    let data: Vec<u8> = (0..bytes).map(|i| (i % 241) as u8).collect();
+    c.soc.nodes[0].mem.write(base0, &data);
+    let dst_base = c.soc.map.base_of(NodeId(4)) + 0x1000;
+    let t = c.submit(P2mpRequest {
+        src: NodeId(0),
+        read: AffinePattern::contiguous(base0, bytes),
+        dests: vec![(NodeId(4), AffinePattern::strided(dst_base, rows, 4, 32))],
+        engine: EngineKind::Torrent(Strategy::Greedy),
+        with_data: true,
+    });
+    c.run_to_completion(10_000_000);
+    assert!(c.latency_of(t).is_some());
+    for r in 0..rows {
+        assert_eq!(
+            c.soc.nodes[4].mem.peek(dst_base + r as u64 * 32, 4),
+            &data[r * 4..r * 4 + 4],
+            "row {r}"
+        );
+    }
+}

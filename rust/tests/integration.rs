@@ -1,0 +1,273 @@
+//! Cross-module integration tests: full transfers on small SoCs with
+//! data-integrity checks, mechanism equivalence, and workload-level runs.
+
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
+use torrent::dma::torrent::dse::AffinePattern;
+use torrent::noc::NodeId;
+use torrent::sched::Strategy;
+use torrent::soc::SocConfig;
+use torrent::workloads::TABLE2;
+
+fn coord(cols: usize, rows: usize, spm: usize) -> Coordinator {
+    Coordinator::new(SocConfig::custom(cols, rows, spm))
+}
+
+fn seed_source(c: &mut Coordinator, node: NodeId, len: usize) -> Vec<u8> {
+    let base = c.soc.map.base_of(node);
+    let data: Vec<u8> = (0..len).map(|i| (i * 17 + 3) as u8).collect();
+    c.soc.nodes[node.0].mem.write(base, &data);
+    data
+}
+
+/// Every mechanism must deliver identical bytes to every destination.
+#[test]
+fn all_mechanisms_deliver_identical_data() {
+    let len = 8 * 1024;
+    let dests = vec![NodeId(1), NodeId(4), NodeId(8)];
+    let mut reference: Option<Vec<Vec<u8>>> = None;
+    for engine in [
+        EngineKind::Torrent(Strategy::Greedy),
+        EngineKind::Torrent(Strategy::Tsp),
+        EngineKind::Idma,
+        EngineKind::Xdma,
+        EngineKind::Mcast,
+    ] {
+        let mut c = coord(3, 3, 64 * 1024);
+        let data = seed_source(&mut c, NodeId(0), len);
+        let task = c.submit_simple(NodeId(0), &dests, len, engine, true);
+        c.run_to_completion(10_000_000);
+        assert!(c.latency_of(task).is_some(), "{engine:?} never finished");
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        let delivered: Vec<Vec<u8>> = dests
+            .iter()
+            .map(|d| c.soc.nodes[d.0].mem.peek(c.soc.map.base_of(*d) + half, len).to_vec())
+            .collect();
+        for (d, got) in dests.iter().zip(&delivered) {
+            assert_eq!(got, &data, "{engine:?} corrupted data at {d:?}");
+        }
+        match &reference {
+            None => reference = Some(delivered),
+            Some(r) => assert_eq!(r, &delivered, "{engine:?} differs from reference"),
+        }
+    }
+}
+
+/// Chain order must not affect *what* is delivered, only when.
+#[test]
+fn chain_strategies_equivalent_payloads() {
+    let len = 4 * 1024;
+    let dests = vec![NodeId(2), NodeId(7), NodeId(5), NodeId(3)];
+    let mut latencies = vec![];
+    for strategy in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+        let mut c = coord(3, 3, 32 * 1024);
+        let data = seed_source(&mut c, NodeId(0), len);
+        let task = c.submit_simple(
+            NodeId(0),
+            &dests,
+            len,
+            EngineKind::Torrent(strategy),
+            true,
+        );
+        c.run_to_completion(10_000_000);
+        latencies.push(c.latency_of(task).unwrap());
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        for d in &dests {
+            assert_eq!(
+                c.soc.nodes[d.0].mem.peek(c.soc.map.base_of(*d) + half, len),
+                &data[..],
+                "{strategy:?} at {d:?}"
+            );
+        }
+    }
+    // All finish, and the optimized orders should not be slower than naive
+    // by more than noise.
+    assert!(latencies[1] <= latencies[0] + 200, "greedy {latencies:?}");
+    assert!(latencies[2] <= latencies[0] + 200, "tsp {latencies:?}");
+}
+
+/// Table II workload end-to-end through the coordinator with real bytes
+/// and a layout transform: logical matrix must survive re-tiling.
+#[test]
+fn table2_p1_relayout_preserves_matrix() {
+    let w = TABLE2[0]; // P1: MNM16N8 -> MNM8N8, 2048x192 int8
+    // Scale down rows to keep the test fast, same tile geometry.
+    let (rows, cols) = (128usize, w.cols);
+    let bytes = rows * cols;
+    let mut c = coord(3, 3, 1 << 20);
+    let src = NodeId(0);
+    let base_src = c.soc.map.base_of(src);
+    let data: Vec<u8> = (0..bytes).map(|i| (i % 249) as u8).collect();
+    c.soc.nodes[0].mem.write(base_src, &data);
+
+    let read = torrent::workloads::table2::blocked_logical_order(
+        base_src, rows, cols, w.in_layout,
+    );
+    let dst = NodeId(4);
+    let base_dst = c.soc.map.base_of(dst);
+    let write = torrent::workloads::table2::blocked_logical_order(
+        base_dst, rows, cols, w.out_layout,
+    );
+    let task = c.submit(P2mpRequest {
+        src,
+        read,
+        dests: vec![(dst, write)],
+        engine: EngineKind::Torrent(Strategy::Greedy),
+        with_data: true,
+    });
+    c.run_to_completion(50_000_000);
+    assert!(c.latency_of(task).is_some());
+
+    // Element (r, c) in MNM16N8 at src must equal element (r, c) in
+    // MNM8N8 at dst.
+    let (tm_i, tn_i) = (w.in_layout.tm, w.in_layout.tn);
+    let (tm_o, tn_o) = (w.out_layout.tm, w.out_layout.tn);
+    for r in (0..rows).step_by(13) {
+        for col in (0..cols).step_by(7) {
+            let off_in = ((r / tm_i) * (cols / tn_i) + col / tn_i) * tm_i * tn_i
+                + (r % tm_i) * tn_i
+                + col % tn_i;
+            let off_out = ((r / tm_o) * (cols / tn_o) + col / tn_o) * tm_o * tn_o
+                + (r % tm_o) * tn_o
+                + col % tn_o;
+            assert_eq!(
+                c.soc.nodes[0].mem.peek(base_src + off_in as u64, 1)[0],
+                c.soc.nodes[4].mem.peek(base_dst + off_out as u64, 1)[0],
+                "element ({r},{col})"
+            );
+        }
+    }
+}
+
+/// Back-to-back tasks on one initiator queue and execute in order.
+#[test]
+fn queued_tasks_complete_in_submission_order() {
+    let mut c = coord(3, 3, 64 * 1024);
+    seed_source(&mut c, NodeId(0), 4096);
+    let t1 = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, EngineKind::Torrent(Strategy::Greedy), false);
+    let t2 = c.submit_simple(NodeId(0), &[NodeId(8)], 4096, EngineKind::Torrent(Strategy::Greedy), false);
+    c.run_to_completion(10_000_000);
+    let r1 = c.records.iter().find(|r| r.task == t1).unwrap().result.as_ref().unwrap().finished_at;
+    let r2 = c.records.iter().find(|r| r.task == t2).unwrap().result.as_ref().unwrap().finished_at;
+    assert!(r2 > r1, "second task must finish after the first");
+}
+
+/// A destination can itself initiate a chain concurrently (distributed
+/// orchestration: every Torrent is initiator and follower).
+#[test]
+fn node_is_initiator_and_follower_simultaneously() {
+    let mut c = coord(3, 3, 64 * 1024);
+    let d0 = seed_source(&mut c, NodeId(0), 4096);
+    let d4 = {
+        let base = c.soc.map.base_of(NodeId(4)) + 0x4000;
+        let data: Vec<u8> = (0..4096).map(|i| (i * 7 + 1) as u8).collect();
+        c.soc.nodes[4].mem.write(base, &data);
+        data
+    };
+    // Task A: 0 -> {4, 8}; Task B: 4 -> {2, 6}. Node 4 plays both roles.
+    let ta = c.submit_simple(NodeId(0), &[NodeId(4), NodeId(8)], 4096, EngineKind::Torrent(Strategy::Greedy), true);
+    let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x4000, 4096);
+    let dests_b: Vec<(NodeId, AffinePattern)> = [2usize, 6]
+        .iter()
+        .map(|&n| (NodeId(n), AffinePattern::contiguous(c.soc.map.base_of(NodeId(n)) + 0x6000, 4096)))
+        .collect();
+    let tb = c.submit(P2mpRequest {
+        src: NodeId(4),
+        read: read_b,
+        dests: dests_b,
+        engine: EngineKind::Torrent(Strategy::Greedy),
+        with_data: true,
+    });
+    c.run_to_completion(10_000_000);
+    assert!(c.latency_of(ta).is_some() && c.latency_of(tb).is_some());
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    assert_eq!(c.soc.nodes[8].mem.peek(c.soc.map.base_of(NodeId(8)) + half, 4096), &d0[..]);
+    assert_eq!(c.soc.nodes[2].mem.peek(c.soc.map.base_of(NodeId(2)) + 0x6000, 4096), &d4[..]);
+    assert_eq!(c.soc.nodes[6].mem.peek(c.soc.map.base_of(NodeId(6)) + 0x6000, 4096), &d4[..]);
+}
+
+/// Tiny transfers (single burst, few flits) complete through all phases.
+#[test]
+fn minimal_transfer_sizes() {
+    for len in [1usize, 63, 64, 65, 4096] {
+        let mut c = coord(2, 2, 32 * 1024);
+        let data = seed_source(&mut c, NodeId(0), len);
+        let task = c.submit_simple(NodeId(0), &[NodeId(3)], len, EngineKind::Torrent(Strategy::Greedy), true);
+        c.run_to_completion(1_000_000);
+        assert!(c.latency_of(task).is_some(), "len {len}");
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        assert_eq!(
+            c.soc.nodes[3].mem.peek(c.soc.map.base_of(NodeId(3)) + half, len),
+            &data[..],
+            "len {len}"
+        );
+    }
+}
+
+/// The 20-cluster evaluation SoC handles a full 16-destination chain.
+#[test]
+fn eval_soc_16_destinations() {
+    let mut c = Coordinator::new(SocConfig::eval_4x5());
+    // 64 KB: large enough to amortize the per-destination protocol
+    // overhead (paper: control overhead dominates at 1-4 KB).
+    let len = 64 * 1024;
+    seed_source(&mut c, NodeId(0), len);
+    let dests: Vec<NodeId> = (1..=16).map(NodeId).collect();
+    let task = c.submit_simple(NodeId(0), &dests, len, EngineKind::Torrent(Strategy::Tsp), true);
+    c.run_to_completion(50_000_000);
+    let rec = c.records.iter().find(|r| r.task == task).unwrap();
+    assert!(rec.result.is_some());
+    let eta = rec.eta().unwrap();
+    assert!(eta > 5.0, "eta {eta} too low for 16-dest chainwrite at 64KB");
+}
+
+/// Remote-read (pull tunnel): node 4 pulls a strided region out of node
+/// 0's scratchpad into its own, through the Read cfg type.
+#[test]
+fn remote_read_pull_tunnel() {
+    let mut c = coord(3, 3, 64 * 1024);
+    let data = seed_source(&mut c, NodeId(0), 8 * 1024);
+    let remote_read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(0)), 8 * 1024);
+    let local_base = c.soc.map.base_of(NodeId(4)) + 0x4000;
+    let local_write = AffinePattern::contiguous(local_base, 8 * 1024);
+    {
+        let soc = &mut c.soc;
+        let now = soc.net.cycle;
+        let (torrent, net) = (&mut soc.nodes[4].torrent, &mut soc.net);
+        torrent.submit_read(9001, NodeId(0), remote_read, local_write, net, now);
+    }
+    c.soc.run_until_idle(10_000_000);
+    // Requester records its own completion...
+    let local = c.soc.nodes[4].torrent.results.iter().find(|r| r.task == 9001);
+    assert!(local.is_some(), "requester never completed the read");
+    assert!(local.unwrap().latency() > 0);
+    // ...and the bytes are exact.
+    assert_eq!(c.soc.nodes[4].mem.peek(local_base, 8 * 1024), &data[..]);
+}
+
+/// Pull with a layout transform on the remote side: gather a strided
+/// remote pattern, land it contiguously.
+#[test]
+fn remote_read_strided_gather() {
+    let mut c = coord(3, 3, 64 * 1024);
+    let data = seed_source(&mut c, NodeId(0), 16 * 1024);
+    let base0 = c.soc.map.base_of(NodeId(0));
+    // Every other 64B line of the first 16KB.
+    let remote_read = AffinePattern::strided(base0, 128, 64, 128);
+    let local_base = c.soc.map.base_of(NodeId(8)) + 0x8000;
+    let local_write = AffinePattern::contiguous(local_base, 128 * 64);
+    {
+        let soc = &mut c.soc;
+        let now = soc.net.cycle;
+        let (torrent, net) = (&mut soc.nodes[8].torrent, &mut soc.net);
+        torrent.submit_read(9002, NodeId(0), remote_read, local_write, net, now);
+    }
+    c.soc.run_until_idle(10_000_000);
+    assert!(c.soc.nodes[8].torrent.results.iter().any(|r| r.task == 9002));
+    for row in 0..128usize {
+        assert_eq!(
+            c.soc.nodes[8].mem.peek(local_base + row as u64 * 64, 64),
+            &data[row * 128..row * 128 + 64],
+            "row {row}"
+        );
+    }
+}

@@ -1,0 +1,221 @@
+//! Property-based tests over the coordinator-level invariants, using the
+//! in-repo `util::prop` harness (proptest substitute — DESIGN.md §3).
+
+use torrent::axi::split_bursts;
+use torrent::coordinator::{Coordinator, EngineKind};
+use torrent::dma::torrent::cfg::{CfgType, TorrentCfg};
+use torrent::dma::torrent::dse::AffinePattern;
+use torrent::noc::multicast::mcast_tree_hops;
+use torrent::noc::{Mesh, NodeId};
+use torrent::sched::{self, Strategy};
+use torrent::soc::SocConfig;
+use torrent::util::prop::{check, forall};
+use torrent::util::rng::Rng;
+
+/// Random destination set on an 8x8 mesh (source = 0).
+fn gen_dests(rng: &mut Rng) -> Vec<NodeId> {
+    let n = 1 + rng.index(16);
+    rng.sample_distinct(63, n).into_iter().map(|v| NodeId(v + 1)).collect()
+}
+
+#[test]
+fn prop_schedulers_produce_permutations() {
+    let mesh = Mesh::new(8, 8);
+    forall(0xA1, 200, gen_dests, |dests| {
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+            let order = sched::schedule(s, &mesh, NodeId(0), dests);
+            let mut a = order.clone();
+            a.sort();
+            let mut b = dests.clone();
+            b.sort();
+            check(a == b, format!("{s:?} not a permutation"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tsp_never_worse_than_greedy_never_worse_than_random_avg() {
+    let mesh = Mesh::new(8, 8);
+    forall(0xA2, 120, gen_dests, |dests| {
+        let naive = sched::chain_hops(&mesh, NodeId(0), &sched::naive_order(dests));
+        let greedy =
+            sched::chain_hops(&mesh, NodeId(0), &sched::greedy_order(&mesh, NodeId(0), dests));
+        let tsp = sched::chain_hops(&mesh, NodeId(0), &sched::tsp_order(&mesh, NodeId(0), dests));
+        check(tsp <= naive, format!("tsp {tsp} > naive {naive}"))?;
+        check(tsp <= greedy, format!("tsp {tsp} > greedy {greedy}"))?;
+        // Any chain visits every destination: at least 1 hop per dest
+        // unless adjacent duplicates (impossible: distinct nodes).
+        check(tsp >= dests.len(), "tsp shorter than destination count")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multicast_tree_bounds() {
+    let mesh = Mesh::new(8, 8);
+    forall(0xA3, 200, gen_dests, |dests| {
+        let tree = mcast_tree_hops(&mesh, NodeId(0), dests);
+        let uni = sched::unicast_hops(&mesh, NodeId(0), dests);
+        let farthest = dests
+            .iter()
+            .map(|&d| mesh.manhattan(NodeId(0), d))
+            .max()
+            .unwrap_or(0);
+        check(tree <= uni, format!("tree {tree} > unicast {uni}"))?;
+        check(tree >= farthest, format!("tree {tree} < eccentricity {farthest}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_axi_bursts_partition_any_transfer() {
+    forall(
+        0xA4,
+        300,
+        |rng| (rng.below(1 << 20), 1 + rng.index(128 * 1024)),
+        |&(addr, len)| {
+            let bursts = split_bursts(addr, len);
+            let mut cur = addr;
+            for b in &bursts {
+                check(b.addr == cur, "gap or overlap in burst chain")?;
+                check(b.bytes > 0, "empty burst")?;
+                let last = b.addr + b.bytes as u64 - 1;
+                check(b.addr >> 12 == last >> 12, format!("burst {b:?} crosses 4K"))?;
+                cur += b.bytes as u64;
+            }
+            check(cur == addr + len as u64, "bursts do not cover transfer")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cfg_encoding_roundtrips() {
+    forall(
+        0xA5,
+        300,
+        |rng| TorrentCfg {
+            task: rng.next_u64() as u32,
+            cfg_type: if rng.below(2) == 0 { CfgType::Read } else { CfgType::Write },
+            prev: (rng.below(2) == 0).then(|| NodeId(rng.index(64))),
+            next: (rng.below(2) == 0).then(|| NodeId(rng.index(64))),
+            position: rng.below(64) as u16,
+            chain_len: rng.below(64) as u16,
+            axi_burst_bytes: rng.below(1 << 16) as u32,
+            pattern: AffinePattern {
+                base: rng.below(1 << 30),
+                elem_bytes: 1 + rng.index(256),
+                dims: (0..rng.index(4))
+                    .map(|_| (1 + rng.index(64), rng.range(1, 1 << 12) as i64))
+                    .collect(),
+            },
+        },
+        |cfg| {
+            let back = TorrentCfg::decode(&cfg.encode()).map_err(|e| e.to_string())?;
+            check(&back == cfg, "cfg roundtrip mismatch")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dse_gather_scatter_inverse() {
+    use torrent::mem::Scratchpad;
+    forall(
+        0xA6,
+        60,
+        |rng| {
+            let rows = 1 + rng.index(32);
+            let run = 1 + rng.index(64);
+            let pitch = run as i64 + rng.range(0, 128) as i64;
+            (rows, run, pitch, rng.next_u64())
+        },
+        |&(rows, run, pitch, seed)| {
+            let mut src = Scratchpad::new(0, 1 << 16);
+            src.fill_pattern(seed as u8);
+            let mut dst = Scratchpad::new(0, 1 << 16);
+            let p = AffinePattern::strided(0x100, rows, run, pitch);
+            if p.total_bytes() + 0x100 > (1 << 15) {
+                return Ok(()); // skip out-of-window cases
+            }
+            let stream = p.gather(&mut src);
+            check(stream.len() == p.total_bytes(), "gather length")?;
+            p.scatter(&stream, &mut dst);
+            for (addr, len) in p.runs() {
+                check(
+                    dst.peek(addr, len) == src.peek(addr, len),
+                    format!("mismatch at run {addr:#x}+{len}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Full-simulation property: random chain tasks always complete, η never
+/// exceeds N_dst, and counters are consistent.
+#[test]
+fn prop_random_chainwrites_complete_with_sane_eta() {
+    forall(
+        0xA7,
+        25,
+        |rng| {
+            let n_dst = 1 + rng.index(8);
+            let kb = 1 << rng.index(6); // 1..32 KB
+            let dests = rng
+                .sample_distinct(8, n_dst)
+                .into_iter()
+                .map(|v| NodeId(v + 1))
+                .collect::<Vec<_>>();
+            (kb * 1024, dests, rng.next_u64())
+        },
+        |(bytes, dests, _seed)| {
+            let mut c = Coordinator::new(SocConfig::custom(3, 3, 256 * 1024));
+            let task = c.submit_simple(
+                NodeId(0),
+                dests,
+                *bytes,
+                EngineKind::Torrent(Strategy::Greedy),
+                false,
+            );
+            c.run_to_completion(50_000_000);
+            let rec = c.records.iter().find(|r| r.task == task).unwrap();
+            let res = rec.result.as_ref().ok_or("task incomplete")?;
+            let eta = rec.eta().unwrap();
+            check(eta <= dests.len() as f64 + 1e-9, format!("eta {eta} > N_dst"))?;
+            check(res.latency() > 0, "zero latency")?;
+            check(
+                c.soc.net.stats.packets_delivered >= dests.len() as u64,
+                "fewer packets than destinations",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// Monotonicity: bigger transfers never get *faster*, for every engine.
+#[test]
+fn prop_latency_monotone_in_size() {
+    for engine in [
+        EngineKind::Torrent(Strategy::Greedy),
+        EngineKind::Idma,
+        EngineKind::Mcast,
+    ] {
+        let mut prev = 0u64;
+        for kb in [1usize, 4, 16, 64] {
+            let mut c = Coordinator::new(SocConfig::custom(3, 3, 256 * 1024));
+            let task = c.submit_simple(
+                NodeId(0),
+                &[NodeId(1), NodeId(4), NodeId(8)],
+                kb * 1024,
+                engine,
+                false,
+            );
+            c.run_to_completion(50_000_000);
+            let lat = c.latency_of(task).unwrap();
+            assert!(lat >= prev, "{engine:?}: {kb}KB lat {lat} < previous {prev}");
+            prev = lat;
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT runtime round-trip tests: the AOT artifacts must load, compile
+//! and compute correct numbers from Rust (kernel-vs-oracle at the Rust
+//! boundary — the same check pytest does inside Python).
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) if the
+//! manifest is missing so `cargo test` stays runnable standalone.
+
+use torrent::runtime::{Engine, Tensor};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP runtime_pjrt: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("load artifacts"))
+}
+
+fn matmul_oracle(a: &Tensor, b: &Tensor) -> Vec<f32> {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    assert_eq!(k, b.shape[0]);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for e in 0..k {
+                acc += a.data[i * k + e] as f64 * b.data[e * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    out
+}
+
+fn allclose(a: &[f32], b: &[f32], atol: f32) {
+    assert_eq!(a.len(), b.len());
+    let worst = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(worst <= atol, "max abs err {worst} > {atol}");
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let Some(e) = engine() else { return };
+    let names = e.names();
+    for want in [
+        "attn_prefill",
+        "attn_decode",
+        "kv_recovery",
+        "gemm_prefill",
+        "gemm_decode",
+        "relayout_16x8_to_8x8",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}: {names:?}");
+    }
+}
+
+#[test]
+fn gemm_prefill_matches_rust_oracle() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("gemm_prefill").unwrap().clone();
+    let a = Tensor::random(spec.inputs[0].dims.clone(), 11);
+    let b = Tensor::random(spec.inputs[1].dims.clone(), 12);
+    let out = e.run("gemm_prefill", &[a.clone(), b.clone()]).unwrap();
+    allclose(&out[0].data, &matmul_oracle(&a, &b), 1e-3);
+}
+
+#[test]
+fn gemm_decode_matches_rust_oracle() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("gemm_decode").unwrap().clone();
+    let x = Tensor::random(spec.inputs[0].dims.clone(), 13);
+    let w = Tensor::random(spec.inputs[1].dims.clone(), 14);
+    let out = e.run("gemm_decode", &[x.clone(), w.clone()]).unwrap();
+    allclose(&out[0].data, &matmul_oracle(&x, &w), 1e-3);
+}
+
+#[test]
+fn kv_recovery_outputs_two_projections() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("kv_recovery").unwrap().clone();
+    let c = Tensor::random(spec.inputs[0].dims.clone(), 15);
+    let wk = Tensor::random(spec.inputs[1].dims.clone(), 16);
+    let wv = Tensor::random(spec.inputs[2].dims.clone(), 17);
+    let out = e.run("kv_recovery", &[c.clone(), wk.clone(), wv.clone()]).unwrap();
+    assert_eq!(out.len(), 2);
+    allclose(&out[0].data, &matmul_oracle(&c, &wk), 1e-3);
+    allclose(&out[1].data, &matmul_oracle(&c, &wv), 1e-3);
+}
+
+#[test]
+fn attention_rows_are_convex_combinations() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("attn_prefill").unwrap().clone();
+    let q = Tensor::random(spec.inputs[0].dims.clone(), 18);
+    let k = Tensor::random(spec.inputs[1].dims.clone(), 19);
+    let v = Tensor::random(spec.inputs[2].dims.clone(), 20);
+    let out = &e.run("attn_prefill", &[q, k, v.clone()]).unwrap()[0];
+    // Every output element lies within the min/max of V's column.
+    let (t, d) = (v.shape[0], v.shape[1]);
+    for col in 0..d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for row in 0..t {
+            lo = lo.min(v.data[row * d + col]);
+            hi = hi.max(v.data[row * d + col]);
+        }
+        for row in 0..out.shape[0] {
+            let x = out.data[row * d + col];
+            assert!(x >= lo - 1e-4 && x <= hi + 1e-4, "out[{row},{col}]={x} outside [{lo},{hi}]");
+        }
+    }
+}
+
+#[test]
+fn attn_decode_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("attn_decode").unwrap().clone();
+    let ins: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| Tensor::random(s.dims.clone(), 21 + i as u64))
+        .collect();
+    let a = e.run("attn_decode", &ins).unwrap();
+    let b = e.run("attn_decode", &ins).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn relayout_artifact_is_a_permutation() {
+    let Some(e) = engine() else { return };
+    let spec = e.entry("relayout_16x8_to_8x8").unwrap().clone();
+    let x = Tensor::random(spec.inputs[0].dims.clone(), 23);
+    let out = &e.run("relayout_16x8_to_8x8", &[x.clone()]).unwrap()[0];
+    // Same multiset of values.
+    let mut a = x.data.clone();
+    let mut b = out.data.clone();
+    a.sort_by(f32::total_cmp);
+    b.sort_by(f32::total_cmp);
+    assert_eq!(a, b, "relayout changed values, not just positions");
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(e) = engine() else { return };
+    let bad = Tensor::zeros(vec![2, 2]);
+    assert!(e.run("gemm_prefill", &[bad.clone(), bad]).is_err());
+    assert!(e.run("nonexistent", &[]).is_err());
+}
