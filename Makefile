@@ -1,0 +1,34 @@
+# Convenience targets; the source of truth is Cargo.toml (Rust) and
+# python/compile/aot.py (artifacts).
+
+.PHONY: all build test tier1 artifacts figures clean
+
+all: tier1
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# The repo's tier-1 verification gate (ROADMAP.md).
+tier1:
+	cargo build --release && cargo test -q
+
+# AOT-lower the JAX/Pallas entry points to HLO text + manifest.txt.
+# Requires JAX; the Rust side runs without it (reference backend).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# Regenerate every paper figure/table via the CLI (EXPERIMENTS.md).
+figures:
+	cargo run --release -- table1
+	cargo run --release -- fig5 --quick
+	cargo run --release -- fig6
+	cargo run --release -- fig7
+	cargo run --release -- fig9
+	cargo run --release -- fig11
+
+clean:
+	cargo clean
+	rm -f artifacts/*.hlo.txt  # manifest.txt is committed; only HLO is generated

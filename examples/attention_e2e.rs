@@ -14,7 +14,12 @@
 //!   4. the same movement is replayed over the XDMA baseline and the
 //!      speedup + GeMM-accelerator timing model are reported.
 //!
-//! Run: `make artifacts && cargo run --release --example attention_e2e`
+//! Run: `cargo run --release --example attention_e2e`
+//!
+//! The default build evaluates the artifacts on the pure-Rust reference
+//! backend (only `artifacts/manifest.txt` is needed — committed in this
+//! repo); with `--features pjrt` and a real `xla` dependency the same
+//! calls execute the `make artifacts` HLO on XLA (DESIGN.md §5).
 
 use torrent::cluster::{GemmAccel, GemmMode};
 use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};

@@ -32,8 +32,17 @@ fn main() {
     let rec = coord.records.iter().find(|r| r.task == task).unwrap();
     let res = rec.result.as_ref().expect("completed");
     println!("chain order: {:?}", rec.chain_order.as_ref().unwrap());
-    println!("latency: {} cycles for {} KB x {} destinations", res.latency(), payload.len() / 1024, dests.len());
-    println!("eta_P2MP: {:.2} (ideal = {})", eta_p2mp(dests.len(), payload.len(), res.latency()), dests.len());
+    println!(
+        "latency: {} cycles for {} KB x {} destinations",
+        res.latency(),
+        payload.len() / 1024,
+        dests.len()
+    );
+    println!(
+        "eta_P2MP: {:.2} (ideal = {})",
+        eta_p2mp(dests.len(), payload.len(), res.latency()),
+        dests.len()
+    );
 
     // Verify every destination received the exact bytes.
     let half = coord.soc.cfg.spm_bytes as u64 / 2;

@@ -53,8 +53,8 @@ fn main() {
         let mcast = c.latency_of(task).unwrap();
         let cfg = torrent::dma::mcast::esp_cfg_cycles(n);
         let mut c2 = Coordinator::new(SocConfig::eval_4x5());
-        let task2 =
-            c2.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false);
+        let chain = EngineKind::Torrent(Strategy::Greedy);
+        let task2 = c2.submit_simple(NodeId(0), &dests, 64 * 1024, chain, false);
         c2.run_to_completion(50_000_000);
         t.row([
             n.to_string(),

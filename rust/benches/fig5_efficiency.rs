@@ -20,7 +20,8 @@ fn main() {
             .find(|p| p.mechanism.starts_with(mech) && p.bytes == kb * 1024 && p.n_dst == n)
             .map(|p| p.eta)
     };
-    if let (Some(i), Some(m), Some(t)) = (eta("iDMA", 64, 8), eta("ESP", 64, 8), eta("Torrent", 64, 8)) {
+    let at_64k_8 = (eta("iDMA", 64, 8), eta("ESP", 64, 8), eta("Torrent", 64, 8));
+    if let (Some(i), Some(m), Some(t)) = at_64k_8 {
         println!("check @64KB/8dst: idma {i:.2} <= 1.1: {}", i <= 1.1);
         println!("check @64KB/8dst: torrent {t:.2} and mcast {m:.2} > 4: {}", t > 4.0 && m > 4.0);
     }

@@ -16,24 +16,42 @@ pub struct SotaRow {
 
 /// The paper's Table I, Torrent first.
 pub fn rows() -> Vec<SotaRow> {
+    let row = |name, arch, addr_gen, axi_compatible, p2mp_method, area_scaling, open_sourced| {
+        SotaRow { name, arch, addr_gen, axi_compatible, p2mp_method, area_scaling, open_sourced }
+    };
     vec![
-        SotaRow { name: "Torrent", arch: "Dist. DMA", addr_gen: "ND", axi_compatible: "Yes", p2mp_method: "Chainwrite", area_scaling: "~O(1)", open_sourced: "Yes" },
-        SotaRow { name: "Pulp XBar", arch: "XBar", addr_gen: "N/A", axi_compatible: "Yes", p2mp_method: "Multicast", area_scaling: "~O(1)", open_sourced: "Yes" },
-        SotaRow { name: "ESP NoC", arch: "NoC", addr_gen: "N/A", axi_compatible: "No", p2mp_method: "Multicast", area_scaling: "O(N)", open_sourced: "Yes" },
-        SotaRow { name: "FlexNoC", arch: "NoC", addr_gen: "N/A", axi_compatible: "Yes", p2mp_method: "Multicast", area_scaling: "N/A", open_sourced: "No" },
-        SotaRow { name: "XDMA", arch: "Dist. DMA", addr_gen: "ND", axi_compatible: "Yes", p2mp_method: "SW", area_scaling: "N/A", open_sourced: "Yes" },
-        SotaRow { name: "iDMA", arch: "Mono. DMA", addr_gen: "ND", axi_compatible: "Yes", p2mp_method: "SW", area_scaling: "N/A", open_sourced: "Yes" },
-        SotaRow { name: "HyperDMA", arch: "Dist. DMA", addr_gen: "ND", axi_compatible: "No", p2mp_method: "SW", area_scaling: "N/A", open_sourced: "No" },
-        SotaRow { name: "Xilinx DMA", arch: "Mono. DMA", addr_gen: "1D", axi_compatible: "Yes", p2mp_method: "SW", area_scaling: "N/A", open_sourced: "No" },
+        row("Torrent", "Dist. DMA", "ND", "Yes", "Chainwrite", "~O(1)", "Yes"),
+        row("Pulp XBar", "XBar", "N/A", "Yes", "Multicast", "~O(1)", "Yes"),
+        row("ESP NoC", "NoC", "N/A", "No", "Multicast", "O(N)", "Yes"),
+        row("FlexNoC", "NoC", "N/A", "Yes", "Multicast", "N/A", "No"),
+        row("XDMA", "Dist. DMA", "ND", "Yes", "SW", "N/A", "Yes"),
+        row("iDMA", "Mono. DMA", "ND", "Yes", "SW", "N/A", "Yes"),
+        row("HyperDMA", "Dist. DMA", "ND", "No", "SW", "N/A", "No"),
+        row("Xilinx DMA", "Mono. DMA", "1D", "Yes", "SW", "N/A", "No"),
     ]
 }
 
 /// Render Table I as ASCII.
 pub fn render() -> String {
-    let mut t = Table::new("Table I: Torrent comparison with SoTA DMAs and NoCs")
-        .header(["System", "Arch.", "Addr.Gen", "AXI-Comp.", "P2MP", "Area-Scaling", "Open-Source"]);
+    let mut t = Table::new("Table I: Torrent comparison with SoTA DMAs and NoCs").header([
+        "System",
+        "Arch.",
+        "Addr.Gen",
+        "AXI-Comp.",
+        "P2MP",
+        "Area-Scaling",
+        "Open-Source",
+    ]);
     for r in rows() {
-        t.row([r.name, r.arch, r.addr_gen, r.axi_compatible, r.p2mp_method, r.area_scaling, r.open_sourced]);
+        t.row([
+            r.name,
+            r.arch,
+            r.addr_gen,
+            r.axi_compatible,
+            r.p2mp_method,
+            r.area_scaling,
+            r.open_sourced,
+        ]);
     }
     t.render()
 }

@@ -20,14 +20,63 @@
 //!   models ([`sched`]);
 //! * compute clusters, the Occamy-derived SoC builder and the task-level
 //!   coordinator ([`cluster`], [`soc`], [`coordinator`]);
-//! * a PJRT runtime that loads the JAX/Pallas AOT artifacts and runs the
-//!   DeepSeek-V3 attention numerics from Rust ([`runtime`]);
+//! * a runtime that loads the JAX/Pallas AOT artifacts and runs the
+//!   DeepSeek-V3 attention numerics from Rust ([`runtime`]) — on a
+//!   pure-Rust reference backend by default, or on XLA PJRT with the
+//!   `pjrt` feature;
 //! * analytic area/power/efficiency models calibrated with the paper's
 //!   published constants ([`analysis`]);
 //! * the workload generators for every figure/table ([`workloads`]).
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the module map and experiment index and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Feature flags
+//!
+//! * `pjrt` *(off by default)* — execute the AOT artifacts on the XLA
+//!   PJRT CPU client instead of the pure-Rust reference backend
+//!   (DESIGN.md §5). The default build needs no XLA toolchain and no
+//!   network access.
+//!
+//! ## Example: schedule a Chainwrite order
+//!
+//! The scheduler picks the destination traversal order; a chain through
+//! clusters that extend away from the source traverses no more mesh
+//! links than repeated unicast (paper §III-D):
+//!
+//! ```
+//! use torrent::noc::{Mesh, NodeId};
+//! use torrent::sched::{chain_hops, schedule, unicast_hops, Strategy};
+//!
+//! // 4x4 mesh; Chainwrite from corner cluster 0 along its row.
+//! let mesh = Mesh::new(4, 4);
+//! let src = NodeId(0);
+//! let dests = [NodeId(1), NodeId(2), NodeId(3)];
+//!
+//! let order = schedule(Strategy::Greedy, &mesh, src, &dests);
+//! assert_eq!(order.len(), dests.len());
+//! assert!(chain_hops(&mesh, src, &order) <= unicast_hops(&mesh, src, &dests));
+//! ```
+//!
+//! ## Example: run a P2MP transfer on the cycle simulator
+//!
+//! ```
+//! use torrent::coordinator::{Coordinator, EngineKind};
+//! use torrent::noc::NodeId;
+//! use torrent::sched::Strategy;
+//! use torrent::soc::SocConfig;
+//!
+//! let mut c = Coordinator::new(SocConfig::custom(3, 3, 64 * 1024));
+//! let task = c.submit_simple(
+//!     NodeId(0),                           // initiator
+//!     &[NodeId(1), NodeId(4)],             // destinations
+//!     4096,                                // bytes
+//!     EngineKind::Torrent(Strategy::Greedy),
+//!     false,                               // timing-only (no payload bytes)
+//! );
+//! c.run_to_completion(1_000_000);
+//! assert!(c.latency_of(task).is_some());
+//! ```
 
 pub mod analysis;
 pub mod axi;

@@ -9,8 +9,12 @@
 //! torrent fig11                           # area/power (Fig 11, Fig 1d)
 //! torrent run [--config soc.toml] [--size KB] [--dests N] [--engine E]
 //!             [--strategy naive|greedy|tsp] [--data]
-//! torrent artifacts [--dir artifacts]     # load + smoke-run PJRT artifacts
+//! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
 //! ```
+//!
+//! `artifacts` executes on the pure-Rust reference backend by default;
+//! build with `--features pjrt` (and a real `xla` dependency) to run on
+//! the XLA PJRT client instead (DESIGN.md §5).
 
 use torrent::analysis::{experiments, table1};
 use torrent::coordinator::{Coordinator, EngineKind};
@@ -48,7 +52,8 @@ fn main() {
             let (t, slope, intercept, r2) = experiments::fig7();
             t.print();
             println!(
-                "linear fit: {slope:.1} CC/destination + {intercept:.0} CC (r^2={r2:.4}); paper: 82 CC/destination"
+                "linear fit: {slope:.1} CC/destination + {intercept:.0} CC (r^2={r2:.4}); \
+                 paper: 82 CC/destination"
             );
         }
         "fig9" => {
@@ -122,7 +127,9 @@ fn run_custom(args: &Args) {
     );
 }
 
-/// Load the AOT artifacts and run each once on random inputs.
+/// Load the AOT artifacts and run each once on random inputs. The
+/// default (reference) backend needs only `manifest.txt`; the `pjrt`
+/// backend also parses the `.hlo.txt` files (`make artifacts`).
 fn smoke_artifacts(args: &Args) {
     let dir = args.get_or("dir", "artifacts");
     let engine = Engine::load(dir).expect("load artifacts (run `make artifacts`)");

@@ -61,7 +61,9 @@ mod tests {
         let forks = mcast_fork(&m, NodeId(5), &[NodeId(6), NodeId(4), NodeId(13)]);
         assert_eq!(forks.len(), 3);
         let dirs: Vec<Dir> = forks.iter().map(|(d, _)| *d).collect();
-        assert!(dirs.contains(&Dir::East) && dirs.contains(&Dir::West) && dirs.contains(&Dir::North));
+        for want in [Dir::East, Dir::West, Dir::North] {
+            assert!(dirs.contains(&want), "missing fork {want:?}");
+        }
     }
 
     #[test]

@@ -280,7 +280,9 @@ mod tests {
         let moved = r.tick(&m);
         let dirs: Vec<Dir> = moved.iter().map(|(d, _, _)| *d).collect();
         assert_eq!(moved.len(), 3);
-        assert!(dirs.contains(&Dir::West) && dirs.contains(&Dir::East) && dirs.contains(&Dir::Local));
+        for want in [Dir::West, Dir::East, Dir::Local] {
+            assert!(dirs.contains(&want), "missing branch {want:?}");
+        }
     }
 
     #[test]

@@ -1,20 +1,33 @@
-//! PJRT runtime: load the JAX/Pallas AOT artifacts and execute them from
+//! Runtime: load the JAX/Pallas AOT artifacts and execute them from
 //! Rust. Python never runs at simulation time.
 //!
 //! `make artifacts` lowers every L2 entry point to HLO **text**
-//! (`artifacts/<name>.hlo.txt` + `manifest.txt`); this module compiles
-//! them once on the PJRT CPU client (`xla` crate) and exposes typed
-//! f32-tensor execution. HLO text — not serialized protos — is the
-//! interchange format because jax ≥ 0.5 emits 64-bit instruction ids the
-//! bundled xla_extension 0.5.1 rejects (see DESIGN.md and
-//! /opt/xla-example/README.md).
+//! (`artifacts/<name>.hlo.txt` + `manifest.txt`). Two interchangeable
+//! backends implement [`Engine`]:
+//!
+//! * **default** — the pure-Rust [`reference`] backend: the manifest
+//!   still drives entry points and shapes, and the known kernels (GeMM,
+//!   attention, MLA KV recovery, MNMxNy relayout) are evaluated with
+//!   f64 accumulation, so CI and the examples never need the XLA
+//!   toolchain (DESIGN.md §5);
+//! * **`pjrt` feature (off by default)** — compiles the HLO text once on
+//!   the PJRT CPU client (`xla` crate) and exposes typed f32-tensor
+//!   execution. HLO text — not serialized protos — is the interchange
+//!   format because jax ≥ 0.5 emits 64-bit instruction ids the bundled
+//!   xla_extension 0.5.1 rejects (see DESIGN.md §5 and
+//!   /opt/xla-example/README.md).
 
 pub mod manifest;
+pub mod reference;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, Executable};
+
+#[cfg(not(feature = "pjrt"))]
+pub use reference::Engine;
 
 pub use manifest::{Manifest, ManifestEntry, ShapeSpec};
 
@@ -54,115 +67,28 @@ impl Tensor {
     }
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    pub entry: ManifestEntry,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT-backed runtime: all compiled artifacts + the client.
-pub struct Engine {
-    pub dir: PathBuf,
-    client: xla::PjRtClient,
-    exes: HashMap<String, Executable>,
-}
-
-impl Engine {
-    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut exes = HashMap::new();
-        for entry in manifest.entries {
-            let path = dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
-            exes.insert(entry.name.clone(), Executable { entry, exe });
-        }
-        Ok(Engine { dir, client, exes })
+/// Shape-check `inputs` against a manifest entry — shared by both
+/// backends so they reject malformed calls identically.
+pub(crate) fn validate_inputs(spec: &ManifestEntry, inputs: &[Tensor]) -> anyhow::Result<()> {
+    use anyhow::anyhow;
+    let name = &spec.name;
+    if inputs.len() != spec.inputs.len() {
+        return Err(anyhow!(
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        ));
     }
-
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
-    }
-
-    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
-        self.exes.get(name).map(|e| &e.entry)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute artifact `name` on f32 inputs; returns the output tensors.
-    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have {:?})", self.names()))?;
-        let spec = &exe.entry;
-        if inputs.len() != spec.inputs.len() {
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape != s.dims {
             return Err(anyhow!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.shape,
+                s.dims
             ));
         }
-        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if t.shape != s.dims {
-                return Err(anyhow!(
-                    "{name}: input {i} shape {:?} != manifest {:?}",
-                    t.shape,
-                    s.dims
-                ));
-            }
-        }
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape input: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let mut result = exe
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let parts = result
-            .decompose_tuple()
-            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            return Err(anyhow!(
-                "{name}: got {} outputs, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            ));
-        }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, s)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
-                Ok(Tensor::new(s.dims.clone(), data))
-            })
-            .collect()
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -184,5 +110,23 @@ mod tests {
     #[should_panic]
     fn tensor_shape_mismatch_panics() {
         Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn validate_inputs_checks_arity_and_shapes() {
+        let spec = ManifestEntry {
+            name: "gemm".into(),
+            file: "gemm.hlo.txt".into(),
+            inputs: vec![
+                ShapeSpec { dtype: "f32".into(), dims: vec![2, 3] },
+                ShapeSpec { dtype: "f32".into(), dims: vec![3, 4] },
+            ],
+            outputs: vec![ShapeSpec { dtype: "f32".into(), dims: vec![2, 4] }],
+        };
+        let a = Tensor::zeros(vec![2, 3]);
+        let b = Tensor::zeros(vec![3, 4]);
+        assert!(validate_inputs(&spec, &[a.clone(), b.clone()]).is_ok());
+        assert!(validate_inputs(&spec, &[a.clone()]).is_err());
+        assert!(validate_inputs(&spec, &[b, a]).is_err());
     }
 }

@@ -1,0 +1,110 @@
+//! XLA PJRT backend (`pjrt` feature): compile each artifact's HLO text
+//! once on the PJRT CPU client and execute it on demand.
+//!
+//! Offline builds link against the `vendor/xla` stub, which keeps this
+//! module compile-checked but errors at runtime; swap the path dependency
+//! for the real `xla` crate (xla-rs) to run on XLA (DESIGN.md §5).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+use super::{validate_inputs, Tensor};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed runtime: all compiled artifacts + the client.
+pub struct Engine {
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for entry in manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+            exes.insert(entry.name.clone(), Executable { entry, exe });
+        }
+        Ok(Engine { dir, client, exes })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.exes.get(name).map(|e| &e.entry)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the output tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have {:?})", self.names()))?;
+        let spec = &exe.entry;
+        validate_inputs(spec, inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut result = exe
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
+                Ok(Tensor::new(s.dims.clone(), data))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,312 @@
+//! Pure-Rust reference backend (default; no XLA toolchain required).
+//!
+//! The manifest still defines the artifact set and the parameter/result
+//! shapes; the computation itself is evaluated in Rust with f64
+//! accumulation for the entry points `python/compile/aot.py` exports:
+//!
+//! * `gemm_prefill`, `gemm_decode` — `A · B`;
+//! * `kv_recovery` — MLA up-projection `(C·Wk, C·Wv)`;
+//! * `attn_prefill`, `attn_decode`, `attn_prefill_flash` —
+//!   `softmax(Q·Kᵀ/√d) · V` (the flash variant is the same math by
+//!   construction — online softmax only changes the schedule);
+//! * `relayout_*` — blocked MNMxNy re-tiling, geometry taken from the
+//!   manifest's 4-D `(Mt, Nt, tm, tn)` shapes.
+//!
+//! This keeps `cargo test` / the examples self-contained (DESIGN.md §5):
+//! the same calls run on XLA when the crate is built with `--features
+//! pjrt` and a real `xla` dependency.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+use super::{validate_inputs, Tensor};
+
+/// Manifest-driven engine evaluating the known kernels in pure Rust.
+pub struct Engine {
+    pub dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+}
+
+impl Engine {
+    /// Load `<dir>/manifest.txt`. The `.hlo.txt` artifact files are not
+    /// needed by this backend — only the manifest's names and shapes.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        Ok(Self::from_manifest(dir, manifest))
+    }
+
+    /// Build directly from a parsed manifest (embedding, tests).
+    pub fn from_manifest(dir: PathBuf, manifest: Manifest) -> Self {
+        Engine { dir, entries: manifest.entries }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn platform(&self) -> String {
+        "cpu-reference (pure Rust; build with --features pjrt for XLA)".to_string()
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the output tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .entry(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have {:?})", self.names()))?;
+        validate_inputs(spec, inputs)?;
+        let outs = eval(spec, inputs)?;
+        if outs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            ));
+        }
+        for (i, (t, s)) in outs.iter().zip(&spec.outputs).enumerate() {
+            if t.shape != s.dims {
+                return Err(anyhow!(
+                    "{name}: output {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    s.dims
+                ));
+            }
+        }
+        Ok(outs)
+    }
+}
+
+/// Dispatch on the entry-point name (the set `aot.py` exports).
+fn eval(spec: &ManifestEntry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let name = spec.name.as_str();
+    match name {
+        "gemm_prefill" | "gemm_decode" => {
+            if inputs.len() != 2 {
+                return Err(anyhow!("{name}: needs (a, b)"));
+            }
+            Ok(vec![matmul(&inputs[0], &inputs[1])?])
+        }
+        "kv_recovery" => {
+            if inputs.len() != 3 {
+                return Err(anyhow!("{name}: needs (latent, w_uk, w_uv)"));
+            }
+            Ok(vec![matmul(&inputs[0], &inputs[1])?, matmul(&inputs[0], &inputs[2])?])
+        }
+        "attn_prefill" | "attn_decode" | "attn_prefill_flash" => {
+            if inputs.len() != 3 {
+                return Err(anyhow!("{name}: needs (q, k, v)"));
+            }
+            Ok(vec![attention(&inputs[0], &inputs[1], &inputs[2])?])
+        }
+        _ if name.starts_with("relayout_") => {
+            if inputs.len() != 1 || spec.outputs.is_empty() {
+                return Err(anyhow!("{name}: needs one blocked input and output"));
+            }
+            let out_dims = &spec.outputs[0].dims;
+            Ok(vec![relayout(&inputs[0], out_dims)?])
+        }
+        _ => Err(anyhow!(
+            "artifact {name:?} has no pure-Rust reference implementation; \
+             build with --features pjrt (and a real xla dependency) to run it"
+        )),
+    }
+}
+
+/// `A(m,k) · B(k,n)` with f64 accumulation.
+fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let ([m, k], [kb, n]) = (dims2(a)?, dims2(b)?);
+    if k != kb {
+        return Err(anyhow!("matmul: inner dims {k} != {kb}"));
+    }
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for e in 0..k {
+                acc += a.data[i * k + e] as f64 * b.data[e * n + j] as f64;
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    Ok(Tensor::new(vec![m, n], out))
+}
+
+/// `softmax(Q·Kᵀ/√d) · V` — Q `(tq,d)`, K `(tk,d)`, V `(tk,dv)`.
+fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+    let ([tq, d], [tk, dk], [tv, dv]) = (dims2(q)?, dims2(k)?, dims2(v)?);
+    if d != dk || tk != tv {
+        return Err(anyhow!(
+            "attention: incompatible shapes q{:?} k{:?} v{:?}",
+            q.shape,
+            k.shape,
+            v.shape
+        ));
+    }
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0f32; tq * dv];
+    let mut scores = vec![0f64; tk];
+    for i in 0..tq {
+        for (j, s) in scores.iter_mut().enumerate() {
+            let mut acc = 0f64;
+            for e in 0..d {
+                acc += q.data[i * d + e] as f64 * k.data[j * d + e] as f64;
+            }
+            *s = acc * scale;
+        }
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0f64;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            z += *s;
+        }
+        for e in 0..dv {
+            let mut acc = 0f64;
+            for (j, s) in scores.iter().enumerate() {
+                acc += s / z * v.data[j * dv + e] as f64;
+            }
+            out[i * dv + e] = acc as f32;
+        }
+    }
+    Ok(Tensor::new(vec![tq, dv], out))
+}
+
+/// Blocked MNMxNy re-tiling: `(Mt, Nt, tm_in, tn_in)` →
+/// `(Mt', Nt', tm_out, tn_out)` over the same logical matrix.
+fn relayout(x: &Tensor, out_dims: &[usize]) -> Result<Tensor> {
+    let [mt_i, nt_i, tm_i, tn_i] = dims4(&x.shape)?;
+    let [mt_o, nt_o, tm_o, tn_o] = dims4(out_dims)?;
+    let (m, n) = (mt_i * tm_i, nt_i * tn_i);
+    if (mt_o * tm_o, nt_o * tn_o) != (m, n) {
+        return Err(anyhow!(
+            "relayout: logical matrix {m}x{n} does not match output tiling {out_dims:?}"
+        ));
+    }
+    let mut out = vec![0f32; x.data.len()];
+    for r in 0..m {
+        for c in 0..n {
+            let src = ((r / tm_i) * nt_i + c / tn_i) * (tm_i * tn_i) + (r % tm_i) * tn_i + c % tn_i;
+            let dst = ((r / tm_o) * nt_o + c / tn_o) * (tm_o * tn_o) + (r % tm_o) * tn_o + c % tn_o;
+            out[dst] = x.data[src];
+        }
+    }
+    Ok(Tensor::new(out_dims.to_vec(), out))
+}
+
+fn dims2(t: &Tensor) -> Result<[usize; 2]> {
+    match t.shape[..] {
+        [a, b] => Ok([a, b]),
+        _ => Err(anyhow!("expected a 2-D tensor, got shape {:?}", t.shape)),
+    }
+}
+
+fn dims4(dims: &[usize]) -> Result<[usize; 4]> {
+    match dims[..] {
+        [a, b, c, d] => Ok([a, b, c, d]),
+        _ => Err(anyhow!("expected a 4-D blocked shape, got {dims:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            "gemm_prefill\tgemm_prefill.hlo.txt\tf32[4,3];f32[3,5]\tf32[4,5]\n\
+             kv_recovery\tkv.hlo.txt\tf32[6,4];f32[4,2];f32[4,2]\tf32[6,2];f32[6,2]\n\
+             attn_prefill\tattn.hlo.txt\tf32[8,4];f32[8,4];f32[8,4]\tf32[8,4]\n\
+             relayout_16x8_to_8x8\trelayout.hlo.txt\tf32[2,2,16,8]\tf32[4,2,8,8]\n",
+        )
+        .unwrap()
+    }
+
+    fn engine() -> Engine {
+        Engine::from_manifest(PathBuf::new(), manifest())
+    }
+
+    #[test]
+    fn gemm_matches_naive_oracle() {
+        let e = engine();
+        let a = Tensor::random(vec![4, 3], 1);
+        let b = Tensor::random(vec![3, 5], 2);
+        let out = &e.run("gemm_prefill", &[a.clone(), b.clone()]).unwrap()[0];
+        assert_eq!(out.shape, vec![4, 5]);
+        for i in 0..4 {
+            for j in 0..5 {
+                let want: f32 =
+                    (0..3).map(|k| a.data[i * 3 + k] * b.data[k * 5 + j]).sum();
+                assert!((out.data[i * 5 + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn kv_recovery_is_two_projections() {
+        let e = engine();
+        let c = Tensor::random(vec![6, 4], 3);
+        let wk = Tensor::random(vec![4, 2], 4);
+        let wv = Tensor::random(vec![4, 2], 5);
+        let out = e.run("kv_recovery", &[c.clone(), wk.clone(), wv]).unwrap();
+        assert_eq!(out.len(), 2);
+        let k_direct = matmul(&c, &wk).unwrap();
+        assert_eq!(out[0], k_direct);
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations_of_v() {
+        let e = engine();
+        let q = Tensor::random(vec![8, 4], 6);
+        let k = Tensor::random(vec![8, 4], 7);
+        let v = Tensor::random(vec![8, 4], 8);
+        let out = &e.run("attn_prefill", &[q, k, v.clone()]).unwrap()[0];
+        for col in 0..4 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for row in 0..8 {
+                lo = lo.min(v.data[row * 4 + col]);
+                hi = hi.max(v.data[row * 4 + col]);
+            }
+            for row in 0..8 {
+                let x = out.data[row * 4 + col];
+                assert!(x >= lo - 1e-5 && x <= hi + 1e-5, "[{row},{col}]={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn relayout_is_a_permutation_matching_the_blocked_index_math() {
+        let e = engine();
+        // 32x16 logical matrix, MNM16N8 -> MNM8N8; fill with the flat index.
+        let x = Tensor::new(vec![2, 2, 16, 8], (0..512).map(|i| i as f32).collect());
+        let out = &e.run("relayout_16x8_to_8x8", &[x.clone()]).unwrap()[0];
+        assert_eq!(out.shape, vec![4, 2, 8, 8]);
+        let mut sorted = out.data.clone();
+        sorted.sort_by(f32::total_cmp);
+        assert_eq!(sorted, x.data, "not a permutation");
+        // Spot-check logical element (17, 9): tile (1,1) local (1,1) in,
+        // tile (2,1) local (1,1) out.
+        let src = ((17 / 16) * 2 + 9 / 8) * 128 + (17 % 16) * 8 + 9 % 8;
+        let dst = ((17 / 8) * 2 + 9 / 8) * 64 + (17 % 8) * 8 + 9 % 8;
+        assert_eq!(out.data[dst], x.data[src]);
+    }
+
+    #[test]
+    fn unknown_artifacts_and_bad_shapes_are_rejected() {
+        let e = engine();
+        assert!(e.run("nonexistent", &[]).is_err());
+        let bad = Tensor::zeros(vec![2, 2]);
+        assert!(e.run("gemm_prefill", &[bad.clone(), bad]).is_err());
+    }
+
+    #[test]
+    fn platform_names_the_backend() {
+        assert!(engine().platform().contains("cpu-reference"));
+    }
+}

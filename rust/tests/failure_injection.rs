@@ -19,7 +19,8 @@ fn overlapping_chains_through_shared_follower() {
     let mut c = coord();
     let bytes = 32 * 1024;
     // Chain A: 0 -> {1, 4}; Chain B: 8 -> {4, 2}; node 4 is shared.
-    let ta = c.submit_simple(NodeId(0), &[NodeId(1), NodeId(4)], bytes, EngineKind::Torrent(Strategy::Naive), false);
+    let naive = EngineKind::Torrent(Strategy::Naive);
+    let ta = c.submit_simple(NodeId(0), &[NodeId(1), NodeId(4)], bytes, naive, false);
     let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(8)), bytes);
     let dests_b = vec![
         (NodeId(4), AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x20000, bytes)),
@@ -51,9 +52,11 @@ fn fabric_saturation_many_concurrent_chains() {
             continue;
         }
         let read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(src)), bytes);
+        let base1 = c.soc.map.base_of(NodeId(d1)) + 0x40000;
+        let base2 = c.soc.map.base_of(NodeId(d2)) + 0x60000 + src as u64 * 0x2000;
         let dests = vec![
-            (NodeId(d1), AffinePattern::contiguous(c.soc.map.base_of(NodeId(d1)) + 0x40000, bytes)),
-            (NodeId(d2), AffinePattern::contiguous(c.soc.map.base_of(NodeId(d2)) + 0x60000 + src as u64 * 0x2000, bytes)),
+            (NodeId(d1), AffinePattern::contiguous(base1, bytes)),
+            (NodeId(d2), AffinePattern::contiguous(base2, bytes)),
         ];
         tasks.push(c.submit(P2mpRequest {
             src: NodeId(src),
@@ -75,7 +78,8 @@ fn fabric_saturation_many_concurrent_chains() {
 fn one_byte_chainwrite() {
     let mut c = coord();
     c.soc.nodes[0].mem.write(c.soc.map.base_of(NodeId(0)), &[0xAB]);
-    let t = c.submit_simple(NodeId(0), &[NodeId(8)], 1, EngineKind::Torrent(Strategy::Greedy), true);
+    let chain = EngineKind::Torrent(Strategy::Greedy);
+    let t = c.submit_simple(NodeId(0), &[NodeId(8)], 1, chain, true);
     c.run_to_completion(1_000_000);
     assert!(c.latency_of(t).is_some());
     let half = c.soc.cfg.spm_bytes as u64 / 2;

@@ -143,11 +143,16 @@ fn table2_p1_relayout_preserves_matrix() {
 fn queued_tasks_complete_in_submission_order() {
     let mut c = coord(3, 3, 64 * 1024);
     seed_source(&mut c, NodeId(0), 4096);
-    let t1 = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, EngineKind::Torrent(Strategy::Greedy), false);
-    let t2 = c.submit_simple(NodeId(0), &[NodeId(8)], 4096, EngineKind::Torrent(Strategy::Greedy), false);
+    let chain = EngineKind::Torrent(Strategy::Greedy);
+    let t1 = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, chain, false);
+    let t2 = c.submit_simple(NodeId(0), &[NodeId(8)], 4096, chain, false);
     c.run_to_completion(10_000_000);
-    let r1 = c.records.iter().find(|r| r.task == t1).unwrap().result.as_ref().unwrap().finished_at;
-    let r2 = c.records.iter().find(|r| r.task == t2).unwrap().result.as_ref().unwrap().finished_at;
+    let finished_at = |c: &Coordinator, t: u32| {
+        let rec = c.records.iter().find(|r| r.task == t).unwrap();
+        rec.result.as_ref().unwrap().finished_at
+    };
+    let r1 = finished_at(&c, t1);
+    let r2 = finished_at(&c, t2);
     assert!(r2 > r1, "second task must finish after the first");
 }
 
@@ -164,11 +169,15 @@ fn node_is_initiator_and_follower_simultaneously() {
         data
     };
     // Task A: 0 -> {4, 8}; Task B: 4 -> {2, 6}. Node 4 plays both roles.
-    let ta = c.submit_simple(NodeId(0), &[NodeId(4), NodeId(8)], 4096, EngineKind::Torrent(Strategy::Greedy), true);
+    let chain = EngineKind::Torrent(Strategy::Greedy);
+    let ta = c.submit_simple(NodeId(0), &[NodeId(4), NodeId(8)], 4096, chain, true);
     let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x4000, 4096);
     let dests_b: Vec<(NodeId, AffinePattern)> = [2usize, 6]
         .iter()
-        .map(|&n| (NodeId(n), AffinePattern::contiguous(c.soc.map.base_of(NodeId(n)) + 0x6000, 4096)))
+        .map(|&n| {
+            let pat = AffinePattern::contiguous(c.soc.map.base_of(NodeId(n)) + 0x6000, 4096);
+            (NodeId(n), pat)
+        })
         .collect();
     let tb = c.submit(P2mpRequest {
         src: NodeId(4),
@@ -191,7 +200,8 @@ fn minimal_transfer_sizes() {
     for len in [1usize, 63, 64, 65, 4096] {
         let mut c = coord(2, 2, 32 * 1024);
         let data = seed_source(&mut c, NodeId(0), len);
-        let task = c.submit_simple(NodeId(0), &[NodeId(3)], len, EngineKind::Torrent(Strategy::Greedy), true);
+        let chain = EngineKind::Torrent(Strategy::Greedy);
+        let task = c.submit_simple(NodeId(0), &[NodeId(3)], len, chain, true);
         c.run_to_completion(1_000_000);
         assert!(c.latency_of(task).is_some(), "len {len}");
         let half = c.soc.cfg.spm_bytes as u64 / 2;

@@ -1,9 +1,12 @@
-//! PJRT runtime round-trip tests: the AOT artifacts must load, compile
-//! and compute correct numbers from Rust (kernel-vs-oracle at the Rust
-//! boundary — the same check pytest does inside Python).
+//! Runtime round-trip tests: the AOT artifacts must load and compute
+//! correct numbers from Rust (kernel-vs-oracle at the Rust boundary —
+//! the same check pytest does inside Python). They run against
+//! whichever backend the build selected: the pure-Rust reference
+//! engine by default, XLA PJRT with `--features pjrt` (DESIGN.md §5).
 //!
-//! Requires `make artifacts`; tests skip (with a loud message) if the
-//! manifest is missing so `cargo test` stays runnable standalone.
+//! `artifacts/manifest.txt` is committed, so the default build runs
+//! these for real; tests skip (with a loud message) if the manifest is
+//! missing so `cargo test` stays runnable after `make clean`.
 
 use torrent::runtime::{Engine, Tensor};
 

@@ -1,0 +1,132 @@
+//! Compile-time stub of the `xla` crate (xla-rs) PJRT surface.
+//!
+//! The image this repo builds in has neither crates.io access nor the XLA
+//! toolchain, so the `pjrt` feature of the `torrent` crate links against
+//! this stub instead: the integration code in `rust/src/runtime/pjrt.rs`
+//! stays compile-checked, and every entry point fails at *runtime* with a
+//! clear message. To execute artifacts on real XLA, replace the
+//! `vendor/xla` path dependency in the workspace `Cargo.toml` with the
+//! real crate (github.com/LaurentMazare/xla-rs) — the API below mirrors
+//! the subset the runtime uses, so no source changes are needed.
+
+use std::fmt;
+
+/// Stub error: always "backend unavailable".
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(op: &str) -> Self {
+        Error(format!(
+            "{op}: XLA PJRT backend not vendored in this offline image; \
+             replace the vendor/xla path dependency with the real xla crate \
+             (xla-rs) to execute artifacts (DESIGN.md §5)"
+        ))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host literal (stub).
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::decompose_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(err.contains("not vendored"), "{err}");
+    }
+}
