@@ -1,7 +1,7 @@
 # Convenience targets; the source of truth is Cargo.toml (Rust) and
 # python/compile/aot.py (artifacts).
 
-.PHONY: all build test tier1 artifacts figures clean
+.PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline clean
 
 all: tier1
 
@@ -19,6 +19,21 @@ tier1:
 # Requires JAX; the Rust side runs without it (reference backend).
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+# CI smoke: one iteration of the simcore bench. Fails on panic; on a
+# >2x absolute-p50 regression vs the committed BENCH_simcore.json when
+# run on the machine that calibrated it (wall-clock does not transfer
+# across hardware); and — machine-independently, so CI runners enforce
+# it too — when the event-driven/full-tick speedup ratio collapses
+# below half its calibrated value.
+bench-smoke:
+	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_simcore.json \
+		cargo bench --bench simcore
+
+# Rewrite BENCH_simcore.json from a full local run (commit the result).
+bench-baseline:
+	TORRENT_BENCH_JSON=BENCH_simcore.json TORRENT_BENCH_CALIBRATED=1 \
+		cargo bench --bench simcore
 
 # Regenerate every paper figure/table via the CLI (EXPERIMENTS.md).
 figures:

@@ -1,6 +1,15 @@
 //! Minimal bench harness (criterion is not vendored in this image; see
 //! DESIGN.md §3): warmup + timed iterations + a stats summary, printed in
 //! a stable format that `bench_output.txt` captures.
+//!
+//! CI hooks (`make bench-smoke` / `make bench-baseline`):
+//! * `TORRENT_BENCH_ITERS=n` overrides every `iters(default)` call — the
+//!   smoke run uses 1 iteration;
+//! * `TORRENT_BENCH_JSON=path` makes the bench write its p50s as a JSON
+//!   baseline (`TORRENT_BENCH_CALIBRATED=1` marks it authoritative);
+//! * `TORRENT_BENCH_BASELINE=path` compares against a committed baseline
+//!   and fails the process on a >2x p50 regression (only when the
+//!   baseline is calibrated — placeholder baselines report and pass).
 #![allow(dead_code)] // each bench binary uses a subset of the harness
 
 use std::time::Instant;
@@ -29,4 +38,186 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> S
 /// Banner separating experiment output inside bench logs.
 pub fn banner(title: &str) {
     println!("\n==================== {title} ====================");
+}
+
+/// Iteration count, overridable via `TORRENT_BENCH_ITERS` (CI smoke).
+pub fn iters(default: usize) -> usize {
+    match std::env::var("TORRENT_BENCH_ITERS") {
+        Ok(v) => v.parse().unwrap_or(default).max(1),
+        Err(_) => default,
+    }
+}
+
+/// A parsed bench baseline: calibrated flag, origin machine, and
+/// (name, p50 ms) entries.
+pub struct Baseline {
+    pub calibrated: bool,
+    pub machine: String,
+    pub entries: Vec<(String, f64)>,
+}
+
+/// Best-effort machine identifier: wall-clock baselines only transfer
+/// within one machine, so the regression gate enforces only when the
+/// baseline's machine matches (cross-machine runs report informationally
+/// — a laptop-calibrated baseline must not fail a slower CI runner).
+pub fn machine_id() -> String {
+    std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .ok()
+        .map(|s| s.trim().to_string())
+        .or_else(|| {
+            // macOS/BSD have no /proc; HOSTNAME is a shell variable that
+            // is usually not exported — ask uname instead.
+            std::process::Command::new("uname")
+                .arg("-n")
+                .output()
+                .ok()
+                .and_then(|o| String::from_utf8(o.stdout).ok())
+                .map(|s| s.trim().to_string())
+        })
+        .or_else(|| std::env::var("COMPUTERNAME").ok())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Escape a string for embedding in a JSON double-quoted literal.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write bench p50s as a JSON baseline (schema `torrent-bench-v1`).
+pub fn write_bench_json(
+    path: &str,
+    bench_name: &str,
+    calibrated: bool,
+    note: &str,
+    entries: &[(String, f64)],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"torrent-bench-v1\",\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench_name)));
+    out.push_str(&format!("  \"calibrated\": {calibrated},\n"));
+    out.push_str(&format!("  \"machine\": \"{}\",\n", json_escape(&machine_id())));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"entries\": [\n");
+    for (i, (name, p50)) in entries.iter().enumerate() {
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{ \"name\": \"{}\", \"p50_ms\": {p50:.6} }}{comma}\n",
+            json_escape(name)
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
+/// Parse a `torrent-bench-v1` baseline (hand-rolled: serde is not
+/// vendored in this image — DESIGN.md §3.2). Line-oriented: one entry
+/// object per line.
+pub fn read_bench_json(path: &str) -> Result<Baseline, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    if !text.contains("torrent-bench-v1") {
+        return Err(format!("{path}: not a torrent-bench-v1 baseline"));
+    }
+    let quoted_after = |line: &str, key: &str| -> Option<String> {
+        let rest = &line[line.find(key)? + key.len()..];
+        let open = rest.find('"')?;
+        let rest = &rest[open + 1..];
+        Some(rest[..rest.find('"')?].to_string())
+    };
+    let mut calibrated = false;
+    let mut machine = String::from("unknown");
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        if line.contains("\"calibrated\"") {
+            calibrated = line.contains("true");
+        }
+        if let Some(m) = quoted_after(line, "\"machine\":") {
+            machine = m;
+        }
+        if let Some(name) = quoted_after(line, "\"name\":") {
+            let p50 = line
+                .find("\"p50_ms\":")
+                .map(|i| line[i + "\"p50_ms\":".len()..].trim_start())
+                .and_then(|rest| {
+                    let end = rest
+                        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-'))
+                        .unwrap_or(rest.len());
+                    rest[..end].parse::<f64>().ok()
+                })
+                .ok_or_else(|| format!("{path}: entry {name:?} has no p50_ms"))?;
+            entries.push((name, p50));
+        }
+    }
+    Ok(Baseline { calibrated, machine, entries })
+}
+
+/// Compare current p50s against a baseline; returns the number of >2x
+/// regressions. Always 0 when the baseline is an uncalibrated
+/// placeholder or was calibrated on a different machine (wall-clock
+/// baselines do not transfer across hardware) — those runs only report.
+pub fn count_regressions(current: &[(String, f64)], base: &Baseline) -> usize {
+    if !base.calibrated {
+        println!(
+            "baseline is uncalibrated (placeholder); recording only — run `make bench-baseline` \
+             on a real toolchain to calibrate"
+        );
+        return 0;
+    }
+    let here = machine_id();
+    let enforce = base.machine == here && base.machine != "unknown";
+    if !enforce {
+        println!(
+            "baseline calibrated on {:?}, running on {here:?}: reporting only (wall-clock \
+             baselines are per-machine)",
+            base.machine
+        );
+    }
+    let mut regressions = 0;
+    for (name, p50) in current {
+        let Some((_, base_p50)) = base.entries.iter().find(|(n, _)| n == name) else {
+            println!("  {name}: no baseline entry (new bench) — skipped");
+            continue;
+        };
+        if *base_p50 > 0.0 && *p50 > 2.0 * base_p50 {
+            println!("  REGRESSION {name}: p50 {p50:.3} ms > 2x baseline {base_p50:.3} ms");
+            if enforce {
+                regressions += 1;
+            }
+        } else {
+            println!("  ok {name}: p50 {p50:.3} ms (baseline {base_p50:.3} ms)");
+        }
+    }
+    regressions
+}
+
+/// Machine-independent regression guard: p50 *ratios* between two benches
+/// of the same run transfer across hardware (unlike absolute wall-clock,
+/// which only the calibrating machine can enforce). Returns true when the
+/// current `slow/fast` speedup ratio collapsed below half the calibrated
+/// baseline's ratio — this is what lets an ephemeral CI runner still fail
+/// on e.g. the event-driven stepper losing its advantage over full-tick.
+pub fn ratio_regressed(current: &[(String, f64)], base: &Baseline, fast: &str, slow: &str) -> bool {
+    if !base.calibrated {
+        return false;
+    }
+    let get = |set: &[(String, f64)], n: &str| {
+        set.iter().find(|(name, _)| name == n).map(|&(_, p)| p).filter(|p| *p > 0.0)
+    };
+    let (Some(cf), Some(cs)) = (get(current, fast), get(current, slow)) else {
+        return false;
+    };
+    let (Some(bf), Some(bs)) = (get(&base.entries, fast), get(&base.entries, slow)) else {
+        return false;
+    };
+    let (cur_ratio, base_ratio) = (cs / cf, bs / bf);
+    if cur_ratio < base_ratio / 2.0 {
+        println!(
+            "  RATIO REGRESSION {slow}/{fast}: {cur_ratio:.2}x, less than half the calibrated \
+             {base_ratio:.2}x (machine-independent guard)"
+        );
+        return true;
+    }
+    println!("  ok ratio {slow}/{fast}: {cur_ratio:.2}x (calibrated {base_ratio:.2}x)");
+    false
 }

@@ -1,23 +1,37 @@
 //! Simulator-core micro-benchmarks — the §Perf L3 harness.
 //!
 //! Measures the hot paths the figure sweeps are built on: raw network
-//! tick throughput under load, end-to-end Chainwrite simulation rate, and
+//! tick throughput under load, end-to-end Chainwrite simulation rate
+//! (under both step modes — the activity-tracked kernel's headline), and
 //! the schedulers at Fig-6 scale. Run before/after optimizations; the
 //! iteration log lives in EXPERIMENTS.md §Perf.
+//!
+//! CI integration: `make bench-smoke` runs one iteration per bench and
+//! compares against the committed `BENCH_simcore.json`, failing on
+//! panic, on a >2x absolute-p50 regression when run on the machine that
+//! calibrated the baseline, or — machine-independently, so ephemeral CI
+//! runners enforce it too — on the event-driven/full-tick speedup ratio
+//! collapsing below half its calibrated value. `make bench-baseline`
+//! rewrites the baseline from a real run.
 mod common;
 
 use torrent::coordinator::{Coordinator, EngineKind};
 use torrent::noc::{Mesh, Message, Network, NodeId, Packet};
 use torrent::sched::{self, Strategy};
+use torrent::sim::StepMode;
 use torrent::soc::SocConfig;
 use torrent::util::rng::Rng;
 use torrent::workloads;
 
 fn main() {
     common::banner("simcore: L3 hot-path micro-benchmarks");
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut record = |name: &str, s: &torrent::util::stats::Summary| {
+        results.push((name.to_string(), s.p50));
+    };
 
     // 1. Saturated 8x8 network: all nodes stream to the opposite corner.
-    let s = common::bench("net_8x8_saturated_10k_cycles", 1, 5, || {
+    let s = common::bench("net_8x8_saturated_10k_cycles", 1, common::iters(5), || {
         let mesh = Mesh::new(8, 8);
         let mut net = Network::new(mesh);
         for n in 0..64usize {
@@ -36,34 +50,98 @@ fn main() {
     });
     let cycles_per_sec = 10_000.0 / (s.mean / 1e3);
     println!("  -> {:.2} M network-cycles/s on a 64-router mesh", cycles_per_sec / 1e6);
+    record("net_8x8_saturated_10k_cycles", &s);
 
     // 2. End-to-end Chainwrite simulation rate (the Fig 5 unit of work).
-    common::bench("chainwrite_64kb_8dst_eval4x5", 1, 5, || {
-        let mut c = Coordinator::new(SocConfig::eval_4x5());
+    // Default stepping = activity-tracked; the full-tick run below is the
+    // naive reference the tentpole speedup is measured against.
+    let chainwrite = |mode: StepMode| {
+        let mut c = Coordinator::with_step_mode(SocConfig::eval_4x5(), mode);
         let dests: Vec<NodeId> = (1..=8).map(NodeId).collect();
         c.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false);
         c.run_to_completion(10_000_000);
+        c
+    };
+    let mut skip_stats = (0u64, 0u64, 0u64); // (cycles skipped, total cycles, ticks)
+    let s = common::bench("chainwrite_64kb_8dst_eval4x5", 1, common::iters(5), || {
+        let c = chainwrite(StepMode::EventDriven);
+        skip_stats = (c.soc.cycles_skipped, c.soc.net.cycle, c.soc.ticks_executed);
     });
+    record("chainwrite_64kb_8dst_eval4x5", &s);
+    let fast_p50 = s.p50;
+    let s = common::bench("chainwrite_64kb_8dst_full_tick", 1, common::iters(5), || {
+        chainwrite(StepMode::FullTick);
+    });
+    record("chainwrite_64kb_8dst_full_tick", &s);
+    println!(
+        "  -> event-driven vs full-tick: {:.2}x p50 ({} of {} cycles skipped, {} ticks)",
+        s.p50 / fast_p50.max(1e-9),
+        skip_stats.0,
+        skip_stats.1,
+        skip_stats.2,
+    );
 
     // 3. Schedulers at the Fig-6 extremes.
     let mesh = Mesh::new(8, 8);
     let sets = workloads::random_dest_sets(&mesh, NodeId(0), 32, 64, 11);
-    common::bench("greedy_order_32dst_x64", 1, 10, || {
+    let s = common::bench("greedy_order_32dst_x64", 1, common::iters(10), || {
         for s in &sets {
             let _ = sched::greedy_order(&mesh, NodeId(0), s);
         }
     });
-    common::bench("tsp_2opt_32dst_x64", 1, 10, || {
+    record("greedy_order_32dst_x64", &s);
+    let s = common::bench("tsp_2opt_32dst_x64", 1, common::iters(10), || {
         for s in &sets {
             let _ = sched::tsp_order(&mesh, NodeId(0), s);
         }
     });
+    record("tsp_2opt_32dst_x64", &s);
     let mut rng = Rng::new(3);
     let mut set15: Vec<NodeId> = Vec::new();
     for v in rng.sample_distinct(63, 15) {
         set15.push(NodeId(v + 1));
     }
-    common::bench("tsp_heldkarp_exact_15dst", 1, 5, || {
+    let s = common::bench("tsp_heldkarp_exact_15dst", 1, common::iters(5), || {
         let _ = sched::tsp_order(&mesh, NodeId(0), &set15);
     });
+    record("tsp_heldkarp_exact_15dst", &s);
+
+    // Baseline plumbing (see module docs / Makefile).
+    if let Ok(path) = std::env::var("TORRENT_BENCH_JSON") {
+        let calibrated = std::env::var("TORRENT_BENCH_CALIBRATED").is_ok();
+        let note = if calibrated {
+            "calibrated from a real run via `make bench-baseline`"
+        } else {
+            "placeholder written without calibration; run `make bench-baseline`"
+        };
+        common::write_bench_json(&path, "simcore", calibrated, note, &results)
+            .expect("write bench JSON");
+        println!("wrote baseline {path} (calibrated={calibrated})");
+    }
+    if let Ok(path) = std::env::var("TORRENT_BENCH_BASELINE") {
+        common::banner("simcore: baseline comparison");
+        match common::read_bench_json(&path) {
+            Err(e) => {
+                // A named-but-unreadable baseline must fail the smoke run:
+                // exiting 0 here would silently disarm the CI guard.
+                eprintln!("baseline unavailable: {e}");
+                std::process::exit(1);
+            }
+            Ok(base) => {
+                let mut regressions = common::count_regressions(&results, &base);
+                if common::ratio_regressed(
+                    &results,
+                    &base,
+                    "chainwrite_64kb_8dst_eval4x5",
+                    "chainwrite_64kb_8dst_full_tick",
+                ) {
+                    regressions += 1;
+                }
+                if regressions > 0 {
+                    eprintln!("{regressions} bench regression(s) vs {path}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
 }

@@ -98,6 +98,13 @@ impl AxiSlave {
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty()
     }
+
+    /// Activity hint (the `sim::Clocked::next_event` contract): the next
+    /// response injection. The queue is FIFO in `ready_at` order (handle
+    /// times are monotone), so the front is the earliest event.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        self.queue.front().map(|p| p.ready_at.max(now))
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +180,23 @@ mod tests {
             slave.queue.front().unwrap().msg,
             Message::AxiWriteResp { ok: false, .. }
         ));
+    }
+
+    #[test]
+    fn next_event_points_at_response_injection() {
+        let (_, mut mem, mut slave) = setup();
+        assert_eq!(slave.next_event(0), None);
+        let req = Packet::new(
+            0,
+            NodeId(0),
+            NodeId(1),
+            Message::AxiWriteReq { addr: 1 << 20, bytes: 1, axi_id: 0 },
+        )
+        .with_payload(vec![1]);
+        slave.handle(NodeId(1), &req, &mut mem, 10);
+        assert_eq!(slave.next_event(10), Some(10 + MEM_LATENCY));
+        // Past-due events clamp to "now" (busy).
+        assert_eq!(slave.next_event(10 + MEM_LATENCY + 5), Some(10 + MEM_LATENCY + 5));
     }
 
     #[test]

@@ -85,6 +85,13 @@ impl Coordinator {
         Coordinator { soc: Soc::new(cfg), next_task: 1, records: Vec::new() }
     }
 
+    /// Coordinator over a SoC stepped in an explicit `sim::StepMode`
+    /// (differential tests and the stepping benches; the default is the
+    /// activity-tracked event-driven stepper).
+    pub fn with_step_mode(cfg: SocConfig, mode: crate::sim::StepMode) -> Self {
+        Coordinator { soc: Soc::with_step_mode(cfg, mode), next_task: 1, records: Vec::new() }
+    }
+
     /// Submit a request; returns its task id.
     pub fn submit(&mut self, req: P2mpRequest) -> u32 {
         let task = self.next_task;
@@ -192,6 +199,8 @@ impl Coordinator {
     }
 
     /// Run until every engine drains, then collect results into records.
+    /// Stepping follows `self.soc.step_mode`; the underlying loop is
+    /// watchdog-guarded (`sim::Watchdog`, label `soc.quiesce`).
     pub fn run_to_completion(&mut self, max_cycles: u64) {
         self.soc.run_until_idle(max_cycles);
         for rec in &mut self.records {

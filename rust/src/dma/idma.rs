@@ -78,6 +78,18 @@ impl Idma {
         self.active.is_none() && self.queue.is_empty()
     }
 
+    /// Activity hint (the `sim::Clocked::next_event` contract). While
+    /// bursts remain the engine is busy every cycle — the read-DSE budget
+    /// accrues per tick and feeds later issue decisions, so no cycle may
+    /// be skipped. With the work list drained it only waits on AXI B
+    /// responses (message-driven), which never needs a tick.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        match &self.active {
+            None => (!self.queue.is_empty()).then_some(now),
+            Some(a) => (!a.bursts.is_empty()).then_some(now),
+        }
+    }
+
     /// Handle an AXI write response addressed to this engine.
     pub fn handle(&mut self, pkt: &Packet, now: u64) -> bool {
         let Message::AxiWriteResp { axi_id, ok } = pkt.msg else { return false };

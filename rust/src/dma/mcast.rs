@@ -85,6 +85,26 @@ impl McastEngine {
         self.active.is_none() && self.queue.is_empty()
     }
 
+    /// Activity hint (the `sim::Clocked::next_event` contract): the
+    /// router-programming wait is a timed event (`cfg_done_at`) — the
+    /// tick returns early until then, so the whole ESP configuration
+    /// stretch can be skipped. Streaming is busy every cycle; waiting for
+    /// acks is message-driven.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        match &self.active {
+            None => (!self.queue.is_empty()).then_some(now),
+            Some(a) => {
+                if a.sent_all {
+                    None
+                } else if now < a.cfg_done_at {
+                    Some(a.cfg_done_at)
+                } else {
+                    Some(now)
+                }
+            }
+        }
+    }
+
     /// Consume ack messages addressed to the source.
     pub fn handle(&mut self, pkt: &Packet, now: u64) -> bool {
         let Message::McastAck { task, .. } = pkt.msg else { return false };

@@ -27,7 +27,7 @@ pub mod cfg;
 pub mod dse;
 pub mod timing;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
 
 use crate::mem::Scratchpad;
@@ -131,7 +131,10 @@ pub struct Torrent {
     pub node: NodeId,
     queue: VecDeque<(ChainTask, u64)>,
     active: Option<InitiatorState>,
-    followers: HashMap<u32, FollowerState>,
+    /// Ordered by task id: follower processing (and therefore the order
+    /// grant/finish packets inject) must be deterministic run-to-run —
+    /// a HashMap here made concurrent-chain cycle counts irreproducible.
+    followers: BTreeMap<u32, FollowerState>,
     /// Outstanding read-tunnel requests we initiated: task -> submit time.
     /// The remote Torrent streams the data back as a 1-node chain; we
     /// record a local TaskResult when our follower role completes.
@@ -146,7 +149,7 @@ impl Torrent {
             node,
             queue: VecDeque::new(),
             active: None,
-            followers: HashMap::new(),
+            followers: BTreeMap::new(),
             pending_reads: HashMap::new(),
             results: Vec::new(),
             stats: TorrentStats::default(),
@@ -240,6 +243,68 @@ impl Torrent {
     /// Number of in-flight follower roles (used by tests/failure injection).
     pub fn follower_count(&self) -> usize {
         self.followers.len()
+    }
+
+    /// Activity hint (the `sim::Clocked::next_event` contract): earliest
+    /// cycle at which ticking this engine changes observable state.
+    /// `Some(now)` = busy every cycle; `None` = waiting on messages (or
+    /// idle) — any progress then implies fabric activity, which the SoC
+    /// stepper refuses to skip over. Mirrors `tick_initiator` /
+    /// `tick_followers` case by case; every wait this engine self-times
+    /// (`CFG_ISSUE`, `CFG_DECODE`, `GRANT_PROC`, `FIN_PROC`, local DSE
+    /// write drain) is reported exactly so those stretches can be skipped.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        let mut min: Option<u64> = None;
+        let mut fold = |c: u64| {
+            let c = c.max(now);
+            min = Some(min.map_or(c, |m: u64| m.min(c)));
+        };
+        if self.active.is_none() && !self.queue.is_empty() {
+            fold(now); // next tick pops and starts the task
+        }
+        if let Some(init) = &self.active {
+            match &init.phase {
+                InitPhase::Dispatch { next_cfg, ready_at } => {
+                    if *next_cfg < init.task.dests.len() {
+                        fold(*ready_at); // CFG_ISSUE_CYCLES between cfgs
+                    } else {
+                        fold(now); // defensive: transition pending
+                    }
+                }
+                // Streaming mutates the DSE budget every cycle.
+                InitPhase::SendData { .. } => fold(now),
+                // Externally driven: flips on TorrentGrant / TorrentFinish.
+                InitPhase::WaitGrant | InitPhase::WaitFinish => {}
+            }
+        }
+        for f in self.followers.values() {
+            // Forward gates trail fabric state; while any exist the
+            // incoming packet is still mid-ejection (the stepper is
+            // already refusing to skip), but stay conservative.
+            if !f.forwards.is_empty() {
+                fold(now);
+            }
+            if !f.grant_sent && (f.cfg.next.is_none() || f.grant_from_next) {
+                match f.grant_ready_at {
+                    // The GRANT_PROC countdown starts at cfg_ready_at.
+                    None => fold(f.cfg_ready_at),
+                    Some(at) => fold(at),
+                }
+            }
+            if f.grant_sent
+                && !f.finish_sent
+                && f.bytes_arrived >= f.expected_bytes
+                && (f.cfg.next.is_none() || f.finish_from_next)
+            {
+                match f.finish_ready_at {
+                    // The FIN_PROC countdown starts once local writes drain.
+                    None => fold(f.write_done_at),
+                    Some(at) => fold(at),
+                }
+            }
+        }
+        // `pending_reads` progresses via our follower role / messages.
+        min
     }
 
     // ------------------------------------------------------------------

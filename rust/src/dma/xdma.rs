@@ -64,6 +64,19 @@ impl Xdma {
         self.active.is_none() && self.queue.is_empty()
     }
 
+    /// Activity hint (the `sim::Clocked::next_event` contract). An
+    /// in-flight P2P leg is tracked by the node's Torrent frontend, whose
+    /// own hints/messages drive progress; XDMA itself only needs a tick
+    /// to pop its queue or to launch the next leg (both "now" events —
+    /// completion of a leg is observed on the same inbox tick that
+    /// delivers the Torrent finish, so no wait is ever skipped past).
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        match &self.active {
+            None => (!self.queue.is_empty()).then_some(now),
+            Some(a) => a.inflight.is_none().then_some(now),
+        }
+    }
+
     /// Drive the node's Torrent frontend. Call once per cycle *before*
     /// the Torrent's own tick.
     pub fn tick(&mut self, torrent: &mut Torrent, now: u64) {

@@ -15,12 +15,13 @@
 //!   (feeds the forwarding gate).
 
 use std::cell::Cell;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
 
 use super::packet::{flits_of, Flit, Packet, PacketId};
 use super::router::{vc_of, Router, LINK_CYCLES, ROUTER_PIPELINE};
 use super::topology::{Dir, Mesh, NodeId};
+use crate::sim::Watchdog;
 
 /// Shared cut-through gate: number of flits allowed to leave so far.
 pub type Gate = Rc<Cell<u32>>;
@@ -57,10 +58,23 @@ pub struct Network {
     links: Vec<[VecDeque<(u64, usize, Flit)>; 5]>,
     inject: Vec<VecDeque<InjectEntry>>,
     inbox: Vec<VecDeque<Rc<Packet>>>,
-    eject: Vec<HashMap<PacketId, EjectState>>,
+    /// In-flight ejection assembly, keyed by packet id. Ordered map so
+    /// [`Network::eject_in_progress`] scans in allocation order — the
+    /// Torrent data switch starts forwards in that order, which must be
+    /// deterministic for run-to-run cycle reproducibility.
+    eject: Vec<BTreeMap<PacketId, EjectState>>,
     next_packet_id: PacketId,
     /// Reused per-router move buffer (§Perf).
     moved_scratch: Vec<(super::topology::Dir, usize, Flit)>,
+    /// Flits queued in NI injection queues (all nodes).
+    inject_flits: usize,
+    /// Flits in flight on link delay lines (all nodes/directions).
+    link_flits: usize,
+    /// Packets mid-assembly at NIs (entries across all `eject` maps).
+    eject_total: usize,
+    /// Delivered-but-unconsumed packets across all inboxes (O(1) guard
+    /// for the event-driven stepper's per-tick inbox check).
+    inbox_packets: usize,
     pub stats: NetStats,
 }
 
@@ -74,9 +88,13 @@ impl Network {
             links: (0..n).map(|_| Default::default()).collect(),
             inject: (0..n).map(|_| VecDeque::new()).collect(),
             inbox: (0..n).map(|_| VecDeque::new()).collect(),
-            eject: (0..n).map(|_| HashMap::new()).collect(),
+            eject: (0..n).map(|_| BTreeMap::new()).collect(),
             next_packet_id: 1,
             moved_scratch: Vec::new(),
+            inject_flits: 0,
+            link_flits: 0,
+            eject_total: 0,
+            inbox_packets: 0,
             stats: NetStats::default(),
         }
     }
@@ -93,6 +111,7 @@ impl Network {
         let id = pkt.id;
         pkt.src = from;
         let rc = Rc::new(pkt);
+        self.inject_flits += rc.len_flits();
         for flit in flits_of(rc) {
             self.inject[from.0].push_back(InjectEntry { flit, gate: None });
         }
@@ -107,6 +126,7 @@ impl Network {
         let id = pkt.id;
         pkt.src = from;
         let rc = Rc::new(pkt);
+        self.inject_flits += rc.len_flits();
         for flit in flits_of(rc) {
             self.inject[from.0].push_back(InjectEntry { flit, gate: Some(gate.clone()) });
         }
@@ -116,7 +136,11 @@ impl Network {
 
     /// Pop a fully-delivered packet at `node`.
     pub fn recv(&mut self, node: NodeId) -> Option<Rc<Packet>> {
-        self.inbox[node.0].pop_front()
+        let pkt = self.inbox[node.0].pop_front();
+        if pkt.is_some() {
+            self.inbox_packets -= 1;
+        }
+        pkt
     }
 
     /// Peek without consuming.
@@ -146,17 +170,87 @@ impl Network {
     }
 
     /// True when every NI inbox has been drained by the endpoint logic.
+    /// O(1) via the delivered-packet counter.
     pub fn inboxes_empty(&self) -> bool {
-        self.inbox.iter().all(|q| q.is_empty())
+        debug_assert_eq!(
+            self.inbox_packets == 0,
+            self.inbox.iter().all(|q| q.is_empty()),
+            "inbox packet counter out of sync"
+        );
+        self.inbox_packets == 0
     }
 
     /// True when no flit exists anywhere in the fabric (inboxes may hold
-    /// delivered packets).
+    /// delivered packets). O(routers) via the activity counters.
     pub fn is_idle(&self) -> bool {
+        let idle = self.inject_flits == 0
+            && self.link_flits == 0
+            && self.eject_total == 0
+            && self.routers.iter().all(|r| r.is_idle());
+        debug_assert_eq!(idle, self.is_idle_structural(), "fabric activity counters out of sync");
+        idle
+    }
+
+    /// Structural quiescence scan — the counter-free reference the debug
+    /// build cross-checks [`Network::is_idle`] against.
+    fn is_idle_structural(&self) -> bool {
         self.routers.iter().all(|r| r.is_idle())
             && self.links.iter().all(|l| l.iter().all(|q| q.is_empty()))
             && self.inject.iter().all(|q| q.is_empty())
             && self.eject.iter().all(|e| e.is_empty())
+    }
+
+    /// True when skipping whole cycles (see
+    /// [`Network::skip_quiet_cycles`]) is provably exact for the fabric:
+    /// no flit sits in a router input or an injection queue, so a tick
+    /// could only move link-delay-line time forward. Packets mid-ejection
+    /// are inert to `tick` and do not block fabric skipping — callers
+    /// owning endpoint logic that reacts to ejection progress must check
+    /// [`Network::ejections_pending`] separately.
+    pub fn can_skip(&self) -> bool {
+        self.inject_flits == 0 && self.routers.iter().all(|r| r.is_idle())
+    }
+
+    /// Packets currently mid-assembly at any NI.
+    pub fn ejections_pending(&self) -> bool {
+        self.eject_total > 0
+    }
+
+    /// Activity hint (the `sim::Clocked::next_event` contract): `None`
+    /// when the fabric is fully idle; `Some(c)` when ticking before cycle
+    /// `c` is a provable no-op (`c == self.cycle` means busy now). The
+    /// only skippable fabric state is "flits exist solely on link delay
+    /// lines": the first productive step is then the tick that raises the
+    /// clock to the earliest `deliver_at`, i.e. the step taken at cycle
+    /// `min_ready - 1`.
+    pub fn next_event(&self) -> Option<u64> {
+        if !self.can_skip() || self.eject_total > 0 {
+            return Some(self.cycle); // busy fabric: tick every cycle
+        }
+        if self.link_flits == 0 {
+            return None; // fully idle fabric
+        }
+        let min_ready = self
+            .links
+            .iter()
+            .flat_map(|dirs| dirs.iter())
+            .filter_map(|q| q.front().map(|&(ready, _, _)| ready))
+            .min()
+            .expect("link_flits > 0 but no link front");
+        Some(min_ready.saturating_sub(1).max(self.cycle))
+    }
+
+    /// Fast-forward the clock over `delta` provably quiescent cycles.
+    /// Exactness: with [`Network::can_skip`] true and no link flit ready
+    /// before the target cycle, each skipped `tick` would only have
+    /// advanced every router's arbitration pointer — replayed here via
+    /// [`Router::rr_advance`] so arbitration stays bit-identical.
+    pub fn skip_quiet_cycles(&mut self, delta: u64) {
+        debug_assert!(self.can_skip(), "skip_quiet_cycles on an active fabric");
+        self.cycle += delta;
+        for r in &mut self.routers {
+            r.rr_advance(delta);
+        }
     }
 
     /// Advance one cycle.
@@ -164,44 +258,69 @@ impl Network {
         self.cycle += 1;
         let cycle = self.cycle;
 
+        // Fully quiescent fabric: the whole tick reduces to advancing the
+        // arbitration pointers (§Perf — this is the common case while
+        // engines wait out protocol delays).
+        let quiescent = self.inject_flits == 0
+            && self.link_flits == 0
+            && self.routers.iter().all(|r| r.is_idle());
+        if quiescent {
+            for r in &mut self.routers {
+                r.rr_advance(1);
+            }
+            return;
+        }
+
         // 1. Link delivery: ready flits enter downstream input buffers.
-        for node in 0..self.links.len() {
-            for d in [Dir::North, Dir::East, Dir::South, Dir::West] {
-                // Split borrows: take the queue, then touch the routers.
-                while let Some(&(ready, vc, _)) = self.links[node][d.index()].front() {
-                    if ready > cycle {
-                        break;
+        if self.link_flits > 0 {
+            for node in 0..self.links.len() {
+                for d in [Dir::North, Dir::East, Dir::South, Dir::West] {
+                    // Split borrows: take the queue, then touch the routers.
+                    while let Some(&(ready, vc, _)) = self.links[node][d.index()].front() {
+                        if ready > cycle {
+                            break;
+                        }
+                        let (_, vc_, flit) = self.links[node][d.index()].pop_front().unwrap();
+                        self.link_flits -= 1;
+                        debug_assert_eq!(vc, vc_);
+                        let dst = self
+                            .mesh
+                            .neighbour(NodeId(node), d)
+                            .expect("link to nowhere");
+                        self.routers[dst.0].accept(d.opposite(), vc, flit);
                     }
-                    let (_, vc_, flit) = self.links[node][d.index()].pop_front().unwrap();
-                    debug_assert_eq!(vc, vc_);
-                    let dst = self
-                        .mesh
-                        .neighbour(NodeId(node), d)
-                        .expect("link to nowhere");
-                    self.routers[dst.0].accept(d.opposite(), vc, flit);
                 }
             }
         }
 
         // 2. Injection: one flit per node per cycle, gate and space permitting.
-        for node in 0..self.inject.len() {
-            let Some(front) = self.inject[node].front() else { continue };
-            if let Some(g) = &front.gate {
-                if g.get() <= front.flit.seq {
-                    continue; // cut-through gate not yet open
+        if self.inject_flits > 0 {
+            for node in 0..self.inject.len() {
+                let Some(front) = self.inject[node].front() else { continue };
+                if let Some(g) = &front.gate {
+                    if g.get() <= front.flit.seq {
+                        continue; // cut-through gate not yet open
+                    }
                 }
+                let vc = vc_of(&front.flit.packet.msg);
+                if self.routers[node].input_space(Dir::Local, vc) == 0 {
+                    continue;
+                }
+                let entry = self.inject[node].pop_front().unwrap();
+                self.inject_flits -= 1;
+                self.routers[node].accept(Dir::Local, vc, entry.flit);
             }
-            let vc = vc_of(&front.flit.packet.msg);
-            if self.routers[node].input_space(Dir::Local, vc) == 0 {
-                continue;
-            }
-            let entry = self.inject[node].pop_front().unwrap();
-            self.routers[node].accept(Dir::Local, vc, entry.flit);
         }
 
-        // 3. Switch allocation + traversal per router.
+        // 3. Switch allocation + traversal per router. Idle routers only
+        // advance their arbitration pointer (exactly what a full
+        // `tick_into` would have done for them).
         let mut sends = std::mem::take(&mut self.moved_scratch);
         for node in 0..self.routers.len() {
+            if self.routers[node].is_idle() {
+                self.routers[node].rr_advance(1);
+                continue;
+            }
             sends.clear();
             self.routers[node].tick_into(&self.mesh, &mut sends);
             // Return credits for freed input slots.
@@ -223,6 +342,7 @@ impl Network {
                     self.deliver_local(NodeId(node), flit);
                 } else {
                     self.stats.flit_hops += 1;
+                    self.link_flits += 1;
                     self.links[node][dir.index()].push_back((
                         cycle + LINK_CYCLES + ROUTER_PIPELINE,
                         vc,
@@ -236,29 +356,42 @@ impl Network {
 
     fn deliver_local(&mut self, node: NodeId, flit: Flit) {
         let id = flit.packet.id;
-        let entry = self.eject[node.0].entry(id).or_insert_with(|| EjectState {
-            packet: flit.packet.clone(),
-            arrived: 0,
-        });
+        let entry = match self.eject[node.0].entry(id) {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                self.eject_total += 1;
+                v.insert(EjectState { packet: flit.packet.clone(), arrived: 0 })
+            }
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+        };
         entry.arrived += 1;
         if flit.is_tail() {
             let st = self.eject[node.0].remove(&id).unwrap();
+            self.eject_total -= 1;
             debug_assert_eq!(st.arrived as usize, st.packet.len_flits());
             self.inbox[node.0].push_back(st.packet);
+            self.inbox_packets += 1;
             self.stats.packets_delivered += 1;
         }
     }
 
     /// Run until the fabric drains or `max_cycles` elapse. Returns cycles
-    /// spent. Panics if the deadline is hit (likely deadlock).
+    /// spent. Panics (watchdog) if the deadline is hit — likely deadlock.
+    /// Event-driven: skips ahead over link-delay-line waits; cycle counts
+    /// are identical to ticking every cycle.
     pub fn run_until_idle(&mut self, max_cycles: u64) -> u64 {
         let start = self.cycle;
+        let dog = Watchdog::new(max_cycles, "network.drain");
         while !self.is_idle() {
+            if self.can_skip() {
+                if let Some(ev) = self.next_event() {
+                    let target = ev.min(start + max_cycles);
+                    if target > self.cycle {
+                        self.skip_quiet_cycles(target - self.cycle);
+                    }
+                }
+            }
             self.tick();
-            assert!(
-                self.cycle - start <= max_cycles,
-                "network did not drain within {max_cycles} cycles (deadlock?)"
-            );
+            dog.check(self.cycle - start);
         }
         self.cycle - start
     }
@@ -417,5 +550,99 @@ mod tests {
         assert!(!n.is_idle());
         n.run_until_idle(1_000);
         assert!(n.is_idle());
+    }
+
+    #[test]
+    fn next_event_reports_delay_line_skip_ahead() {
+        // Drive a single flit until it sits on a link delay line only,
+        // then check the hint points at the cycle before delivery.
+        let mut n = net(2, 1);
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(1), Message::Raw(0)));
+        assert_eq!(n.next_event(), Some(0), "queued injection is busy work");
+        // Cycle 1: the flit injects and traverses the switch in the same
+        // tick, landing on the link with deliver_at = 1 + HOP.
+        n.tick();
+        assert!(n.can_skip(), "only link flits remain");
+        // Delivery happens inside the tick that raises the clock to
+        // 1 + HOP, i.e. the step taken at cycle HOP.
+        assert_eq!(n.next_event(), Some(HOP));
+        n.tick(); // an extra no-op tick must not move the event
+        assert_eq!(n.next_event(), Some(HOP));
+    }
+
+    #[test]
+    fn skipped_delay_line_delivers_at_the_same_cycle_as_full_tick() {
+        let run = |skip: bool| -> (u64, u64) {
+            let mut n = net(4, 1);
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(3), Message::Raw(9)).with_phantom_payload(64),
+            );
+            let mut ticks = 0u64;
+            loop {
+                if skip && n.can_skip() {
+                    if let Some(ev) = n.next_event() {
+                        if ev > n.cycle {
+                            n.skip_quiet_cycles(ev - n.cycle);
+                        }
+                    }
+                }
+                n.tick();
+                ticks += 1;
+                if n.is_idle() {
+                    return (n.cycle, ticks);
+                }
+                assert!(n.cycle < 1_000);
+            }
+        };
+        let (full_cycle, full_ticks) = run(false);
+        let (skip_cycle, skip_ticks) = run(true);
+        assert_eq!(full_cycle, skip_cycle, "skip-ahead changed the drain cycle");
+        assert!(skip_ticks < full_ticks, "skip-ahead executed no fewer ticks");
+    }
+
+    #[test]
+    fn run_until_idle_skips_but_reports_identical_cycles() {
+        let send_all = |n: &mut Network| {
+            for src in [0usize, 2] {
+                n.send(
+                    NodeId(src),
+                    Packet::new(0, NodeId(src), NodeId(8), Message::Raw(src as u64))
+                        .with_phantom_payload(640),
+                );
+            }
+        };
+        let mut fast = net(3, 3);
+        send_all(&mut fast);
+        let spent_fast = fast.run_until_idle(10_000);
+        let mut slow = net(3, 3);
+        send_all(&mut slow);
+        let mut spent_slow = 0;
+        while !slow.is_idle() {
+            slow.tick();
+            spent_slow += 1;
+        }
+        assert_eq!(spent_fast, spent_slow);
+        assert_eq!(fast.stats.flit_hops, slow.stats.flit_hops);
+    }
+
+    #[test]
+    #[should_panic(expected = "watchdog 'network.drain' expired")]
+    fn drain_watchdog_fires_past_deadline() {
+        let mut n = net(4, 1);
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)));
+        n.run_until_idle(2); // needs 1 + 3*HOP cycles
+    }
+
+    #[test]
+    fn drain_watchdog_allows_exactly_the_deadline() {
+        let need = {
+            let mut n = net(4, 1);
+            n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)));
+            n.run_until_idle(1_000)
+        };
+        let mut n = net(4, 1);
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)));
+        assert_eq!(n.run_until_idle(need), need, "deadline == need must pass");
     }
 }

@@ -1,4 +1,5 @@
-//! Simulation kernel: the synchronous cycle-stepping contract.
+//! Simulation kernel: the cycle-stepping contract and the activity-tracked
+//! (event-driven) stepping extension.
 //!
 //! The whole SoC advances in lock-step — every component implements
 //! [`Clocked`] and is ticked once per cycle by its owner (the `soc::Soc`
@@ -6,6 +7,37 @@
 //! bookkeeping). A shared [`Clock`] provides the cycle count; quiescence
 //! is detected structurally (`is_idle`) rather than by event-queue
 //! emptiness, because wormhole state lives in buffers, not events.
+//!
+//! # Activity-tracked stepping
+//!
+//! Naive lock-step ticking visits every router, link and engine on every
+//! cycle even when the component is provably inert — e.g. a follower
+//! Torrent counting down its `CFG_DECODE_CYCLES` wait, or a flit sitting
+//! on a link delay line. The [`Clocked::next_event`] hint lets an
+//! orchestrator (see `soc::Soc::run_until_idle`) fast-forward the shared
+//! clock over such stretches:
+//!
+//! * `Some(c)` — ticking this component at any cycle **before** `c` is a
+//!   provable no-op; the component must be ticked again at `c` (a value
+//!   equal to the current cycle means "busy — tick me every cycle").
+//! * `None` — the component holds no *scheduled* work: it is either idle
+//!   or purely reactive (it progresses only when a message arrives, which
+//!   implies fabric activity the orchestrator tracks separately).
+//!
+//! The contract is conservative by construction: a component unsure of
+//! its future must report `Some(now)`, which disables skipping and
+//! degrades gracefully to the full-tick behavior. Cycle counts reported
+//! by event-driven and full-tick stepping are bit-identical — enforced by
+//! the equivalence property test in `rust/tests/stepping.rs`.
+//!
+//! The engines satisfy this contract *structurally* rather than by
+//! implementing the trait nominally: their tick/hint methods carry
+//! context arguments (`&mut Network`, `&mut Scratchpad`) that the
+//! object-level trait signature cannot express, so each exposes an
+//! inherent `next_event(&self, now) -> Option<u64>` with these exact
+//! semantics and `soc::Soc` folds them directly. The trait (with its
+//! conservative default) is the documented contract new components
+//! should follow; the equivalence property test is what enforces it.
 
 /// A component advanced once per cycle.
 pub trait Clocked {
@@ -13,6 +45,27 @@ pub trait Clocked {
     fn tick(&mut self, cycle: u64);
     /// True when the component holds no in-flight work.
     fn is_idle(&self) -> bool;
+    /// Earliest cycle at which `tick` would change observable state (see
+    /// the module docs). The default is maximally conservative: busy on
+    /// every cycle while not idle.
+    fn next_event(&self, now: u64) -> Option<u64> {
+        if self.is_idle() {
+            None
+        } else {
+            Some(now)
+        }
+    }
+}
+
+/// How a `run_until_idle` loop advances the simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// Tick every component on every cycle (the reference behavior).
+    FullTick,
+    /// Skip provably no-op cycles using the [`Clocked::next_event`]
+    /// hints. Bit-identical cycle counts to [`StepMode::FullTick`].
+    #[default]
+    EventDriven,
 }
 
 /// Simulation clock.
@@ -26,11 +79,28 @@ impl Clock {
         self.cycle += 1;
         self.cycle
     }
+
+    /// Event-driven fast-forward: jump directly to `cycle` (which must
+    /// not be in the past). This is the `Clock`-level form of the skip
+    /// operation; the SoC stepper applies the same jump to the network's
+    /// embedded cycle counter through `Network::skip_quiet_cycles` (which
+    /// also replays the per-router arbitration-pointer advance), so use
+    /// that when stepping a full `soc::Soc`.
+    pub fn fast_forward_to(&mut self, cycle: u64) {
+        assert!(cycle >= self.cycle, "clock cannot run backwards: {} -> {cycle}", self.cycle);
+        self.cycle = cycle;
+    }
 }
 
 /// Watchdog used by `run_until` loops: panics (with context) when a
 /// simulation fails to make progress — the way the test suite detects
 /// protocol deadlocks.
+///
+/// Deadline semantics (pinned by regression tests in
+/// `rust/tests/stepping.rs`): a run may take **exactly** `deadline`
+/// cycles; the first check past it panics. Event-driven stepping caps its
+/// fast-forward at the deadline so a stalled system reports at the same
+/// cycle as full-tick stepping.
 #[derive(Debug)]
 pub struct Watchdog {
     pub deadline: u64,
@@ -65,6 +135,23 @@ mod tests {
     }
 
     #[test]
+    fn clock_fast_forwards() {
+        let mut c = Clock::default();
+        c.advance();
+        c.fast_forward_to(100);
+        assert_eq!(c.cycle, 100);
+        c.fast_forward_to(100); // jumping to "now" is a no-op
+        assert_eq!(c.cycle, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock cannot run backwards")]
+    fn clock_rejects_backward_jump() {
+        let mut c = Clock { cycle: 10 };
+        c.fast_forward_to(9);
+    }
+
+    #[test]
     #[should_panic(expected = "watchdog 'demo' expired")]
     fn watchdog_panics_past_deadline() {
         Watchdog::new(10, "demo").check(11);
@@ -73,5 +160,26 @@ mod tests {
     #[test]
     fn watchdog_quiet_before_deadline() {
         Watchdog::new(10, "demo").check(10);
+    }
+
+    #[test]
+    fn default_next_event_is_conservative() {
+        struct Dummy {
+            idle: bool,
+        }
+        impl Clocked for Dummy {
+            fn tick(&mut self, _cycle: u64) {}
+            fn is_idle(&self) -> bool {
+                self.idle
+            }
+        }
+        assert_eq!(Dummy { idle: true }.next_event(5), None);
+        // A busy component without a hint must be ticked every cycle.
+        assert_eq!(Dummy { idle: false }.next_event(5), Some(5));
+    }
+
+    #[test]
+    fn step_mode_defaults_to_event_driven() {
+        assert_eq!(StepMode::default(), StepMode::EventDriven);
     }
 }

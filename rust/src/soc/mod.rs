@@ -5,6 +5,13 @@
 //! [`SocConfig::eval_4x5`] (20-cluster Occamy-derived SoC, §IV-A),
 //! [`SocConfig::fpga_3x3`] (9-cluster VPK180 prototype, §IV-E) and
 //! [`SocConfig::synth_2x2`] (4-cluster 16 nm synthesis SoC, §IV-F).
+//!
+//! [`Soc::run_until_idle`] steps the system in the configured
+//! [`StepMode`]: the default event-driven mode fast-forwards the shared
+//! clock over provably quiescent stretches (protocol waits, link
+//! delay-line flight) using the per-component `next_event` hints, with
+//! cycle counts bit-identical to full-tick stepping (property-tested in
+//! `rust/tests/stepping.rs`).
 
 pub mod config;
 
@@ -17,6 +24,7 @@ use crate::dma::TaskResult;
 use crate::mem::{AddrMap, Scratchpad};
 use crate::noc::{Mesh, Network, NodeId};
 use crate::sched::{schedule, Strategy};
+use crate::sim::{StepMode, Watchdog};
 
 pub use config::SocConfig;
 
@@ -37,6 +45,12 @@ pub struct Soc {
     pub net: Network,
     pub nodes: Vec<SocNode>,
     pub map: AddrMap,
+    /// How [`Soc::run_until_idle`] advances the system.
+    pub step_mode: StepMode,
+    /// Ticks actually executed by the run loops (diagnostics / benches).
+    pub ticks_executed: u64,
+    /// Cycles fast-forwarded over by event-driven stepping.
+    pub cycles_skipped: u64,
 }
 
 impl Soc {
@@ -55,7 +69,22 @@ impl Soc {
                 mem: Scratchpad::new(map.base_of(id), cfg.spm_bytes),
             })
             .collect();
-        Soc { cfg, net: Network::new(mesh), nodes, map }
+        Soc {
+            cfg,
+            net: Network::new(mesh),
+            nodes,
+            map,
+            step_mode: StepMode::default(),
+            ticks_executed: 0,
+            cycles_skipped: 0,
+        }
+    }
+
+    /// Builder-style step-mode override (differential tests, benches).
+    pub fn with_step_mode(cfg: SocConfig, mode: StepMode) -> Self {
+        let mut soc = Soc::new(cfg);
+        soc.step_mode = mode;
+        soc
     }
 
     pub fn mesh(&self) -> Mesh {
@@ -107,15 +136,86 @@ impl Soc {
             })
     }
 
-    /// Run until quiescent; panics after `max_cycles` (deadlock guard).
+    /// Earliest cycle at which any component performs observable work
+    /// (the `sim::Clocked::next_event` contract lifted to the system):
+    /// `Some(now)` = busy, `Some(c > now)` = quiescent until `c`, `None`
+    /// = no scheduled event anywhere (idle, or stalled on messages that
+    /// can never arrive — a deadlock the watchdog reports).
+    pub fn next_event(&self) -> Option<u64> {
+        let now = self.net.cycle;
+        if !self.net.inboxes_empty() {
+            return Some(now);
+        }
+        let mut min = self.net.next_event();
+        let mut fold = |e: Option<u64>| {
+            if let Some(c) = e {
+                let c = c.max(now);
+                min = Some(min.map_or(c, |m: u64| m.min(c)));
+            }
+        };
+        for n in &self.nodes {
+            fold(n.torrent.next_event(now));
+            fold(n.idma.next_event(now));
+            fold(n.xdma.next_event(now));
+            fold(n.mcast.next_event(now));
+            fold(n.slave.next_event(now));
+        }
+        min
+    }
+
+    /// Event-driven fast-forward: jump the shared clock to the earliest
+    /// pending event when every skipped tick is provably a no-op. The
+    /// jump is capped at the watchdog deadline so a stalled system panics
+    /// at exactly the same cycle as full-tick stepping.
+    fn fast_forward(&mut self, start: u64, max_cycles: u64) {
+        // Inbox backlogs and packets mid-ejection drive endpoint logic
+        // (dispatch, cut-through forward gates) on the very next tick;
+        // the fabric itself must also be skippable.
+        if !self.net.inboxes_empty() || self.net.ejections_pending() || !self.net.can_skip() {
+            return;
+        }
+        let now = self.net.cycle;
+        let deadline = start + max_cycles;
+        let target = match self.next_event() {
+            Some(ev) if ev > now => ev.min(deadline),
+            Some(_) => return, // busy this cycle
+            None => deadline,  // stalled: every tick until the watchdog is a no-op
+        };
+        if target > now {
+            self.net.skip_quiet_cycles(target - now);
+            self.cycles_skipped += target - now;
+        }
+    }
+
+    /// Run until quiescent; panics (watchdog) after `max_cycles`. Steps
+    /// according to [`Soc::step_mode`]; both modes report bit-identical
+    /// cycle counts — event-driven stepping only skips ticks that are
+    /// provable no-ops.
     pub fn run_until_idle(&mut self, max_cycles: u64) -> u64 {
+        if self.step_mode == StepMode::FullTick {
+            return self.run_until_idle_full_tick(max_cycles);
+        }
         let start = self.net.cycle;
+        let dog = Watchdog::new(max_cycles, "soc.quiesce");
+        while !self.is_idle() {
+            self.fast_forward(start, max_cycles);
+            self.tick();
+            self.ticks_executed += 1;
+            dog.check(self.net.cycle - start);
+        }
+        self.net.cycle - start
+    }
+
+    /// The reference stepper: tick every component on every cycle. Kept
+    /// callable in all modes as the differential baseline the equivalence
+    /// property test (`rust/tests/stepping.rs`) runs against.
+    pub fn run_until_idle_full_tick(&mut self, max_cycles: u64) -> u64 {
+        let start = self.net.cycle;
+        let dog = Watchdog::new(max_cycles, "soc.quiesce");
         while !self.is_idle() {
             self.tick();
-            assert!(
-                self.net.cycle - start <= max_cycles,
-                "SoC did not quiesce within {max_cycles} cycles"
-            );
+            self.ticks_executed += 1;
+            dog.check(self.net.cycle - start);
         }
         self.net.cycle - start
     }
@@ -373,6 +473,70 @@ mod tests {
             s.nodes[10].mem.peek(s.map.base_of(NodeId(10)) + 0x2000, len),
             &d15[..]
         );
+    }
+
+    #[test]
+    fn event_driven_matches_full_tick_and_actually_skips() {
+        use crate::sim::StepMode;
+        let run = |mode: StepMode| -> (u64, u64, u64, u64, u64) {
+            let mut s = Soc::with_step_mode(SocConfig::custom(3, 3, 64 * 1024), mode);
+            let len = 8 * 1024;
+            fill_src(&mut s, NodeId(0), 0, len);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+            let dests: Vec<(NodeId, AffinePattern)> = [4usize, 8]
+                .iter()
+                .map(|&n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), len))
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Greedy, true);
+            let cycles = s.run_until_idle(200_000);
+            let lat = s.torrent_result(NodeId(0), 1).unwrap().latency();
+            (cycles, lat, s.net.stats.flit_hops, s.ticks_executed, s.cycles_skipped)
+        };
+        let (c_full, l_full, h_full, t_full, sk_full) = run(StepMode::FullTick);
+        let (c_ev, l_ev, h_ev, t_ev, sk_ev) = run(StepMode::EventDriven);
+        assert_eq!(c_full, c_ev, "quiesce cycle diverged");
+        assert_eq!(l_full, l_ev, "latency diverged");
+        assert_eq!(h_full, h_ev, "flit-hops diverged");
+        assert_eq!(sk_full, 0);
+        assert_eq!(t_full, c_full, "full-tick executes one tick per cycle");
+        assert!(sk_ev > 0, "event-driven mode never skipped a cycle");
+        assert_eq!(t_ev + sk_ev, c_ev, "ticks + skips must cover the run");
+    }
+
+    #[test]
+    fn run_until_idle_allows_exactly_the_deadline() {
+        let mut probe = soc(2, 2);
+        fill_src(&mut probe, NodeId(0), 0, 1024);
+        let read = AffinePattern::contiguous(probe.map.base_of(NodeId(0)), 1024);
+        let wr = AffinePattern::contiguous(probe.map.base_of(NodeId(3)), 1024);
+        probe.chainwrite(
+            1,
+            NodeId(0),
+            read.clone(),
+            &[(NodeId(3), wr.clone())],
+            Strategy::Naive,
+            false,
+        );
+        let need = probe.run_until_idle(100_000);
+        assert!(need > 0);
+        // A deadline of exactly `need` must pass (off-by-one regression).
+        let mut s = soc(2, 2);
+        fill_src(&mut s, NodeId(0), 0, 1024);
+        s.chainwrite(1, NodeId(0), read, &[(NodeId(3), wr)], Strategy::Naive, false);
+        assert_eq!(s.run_until_idle(need), need);
+    }
+
+    #[test]
+    #[should_panic(expected = "watchdog 'soc.quiesce' expired")]
+    fn run_until_idle_panics_one_past_the_deadline() {
+        let mut s = soc(2, 2);
+        fill_src(&mut s, NodeId(0), 0, 1024);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), 1024);
+        let wr = AffinePattern::contiguous(s.map.base_of(NodeId(3)), 1024);
+        s.chainwrite(1, NodeId(0), read, &[(NodeId(3), wr)], Strategy::Naive, false);
+        s.run_until_idle(10); // a 1 KB chainwrite needs far more than 10 cycles
     }
 
     #[test]

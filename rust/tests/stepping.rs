@@ -1,0 +1,228 @@
+//! Activity-tracked (event-driven) stepping: equivalence against the
+//! full-tick reference, skip-ahead hints for every protocol wait, and
+//! watchdog deadline regressions.
+//!
+//! The contract under test (`sim::Clocked::next_event`, `Soc::run_until_idle`):
+//! event-driven stepping may skip only provably no-op cycles, so every
+//! reported cycle count — quiesce time, task latency, η_P2MP, traffic
+//! statistics — must be **bit-identical** to ticking every cycle.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use torrent::coordinator::{Coordinator, EngineKind};
+use torrent::dma::mcast::{esp_cfg_cycles, McastEngine, McastTask};
+use torrent::dma::torrent::cfg::{CfgType, TorrentCfg};
+use torrent::dma::torrent::dse::AffinePattern;
+use torrent::dma::torrent::timing::{
+    CFG_DECODE_CYCLES, CFG_ISSUE_CYCLES, FIN_PROC_CYCLES, GRANT_PROC_CYCLES, SEG_BYTES,
+};
+use torrent::dma::torrent::{ChainDest, ChainTask, Torrent};
+use torrent::mem::Scratchpad;
+use torrent::noc::{Mesh, Message, Network, NodeId, Packet};
+use torrent::sched::Strategy;
+use torrent::sim::StepMode;
+use torrent::soc::{Soc, SocConfig};
+use torrent::util::prop::{check, forall};
+
+/// The tentpole property: ≥100 seeded random P2MP tasks (Fig-5-style
+/// size/destination grid points, all engines) run under both steppers
+/// with identical latencies, η_P2MP and traffic counters.
+#[test]
+fn prop_event_driven_bit_identical_to_full_tick() {
+    let mut total_skipped = 0u64;
+    forall(
+        0x57E9,
+        110,
+        |rng| {
+            let (cols, rows) = [(3usize, 3usize), (4, 4), (4, 5)][rng.index(3)];
+            let n_nodes = cols * rows;
+            let n_dst = 1 + rng.index(5);
+            let dests: Vec<NodeId> = rng
+                .sample_distinct(n_nodes - 1, n_dst)
+                .into_iter()
+                .map(|v| NodeId(v + 1))
+                .collect();
+            let bytes = 256 + rng.index(8 * 1024);
+            let engine_idx = rng.index(6) as u8;
+            let with_data = rng.below(4) == 0;
+            (cols, rows, dests, bytes, engine_idx, with_data)
+        },
+        |&(cols, rows, ref dests, bytes, engine_idx, with_data)| {
+            let engine = match engine_idx {
+                0 => EngineKind::Torrent(Strategy::Naive),
+                1 => EngineKind::Torrent(Strategy::Greedy),
+                2 => EngineKind::Torrent(Strategy::Tsp),
+                3 => EngineKind::Idma,
+                4 => EngineKind::Xdma,
+                _ => EngineKind::Mcast,
+            };
+            let run = |mode: StepMode| -> (u64, u64, u64, u64, u64, u64) {
+                let mut c =
+                    Coordinator::with_step_mode(SocConfig::custom(cols, rows, 64 * 1024), mode);
+                let task = c.submit_simple(NodeId(0), dests, bytes, engine, with_data);
+                c.run_to_completion(50_000_000);
+                let rec = c.records.iter().find(|r| r.task == task).unwrap();
+                let res = rec.result.as_ref().expect("task completed");
+                (
+                    c.soc.net.cycle,
+                    res.latency(),
+                    rec.eta().unwrap().to_bits(),
+                    c.soc.net.stats.flit_hops,
+                    c.soc.net.stats.packets_delivered,
+                    c.soc.cycles_skipped,
+                )
+            };
+            let full = run(StepMode::FullTick);
+            let fast = run(StepMode::EventDriven);
+            check(full.0 == fast.0, format!("quiesce cycle {} != {}", full.0, fast.0))?;
+            check(full.1 == fast.1, format!("latency {} != {}", full.1, fast.1))?;
+            check(full.2 == fast.2, "eta_P2MP bits diverged")?;
+            check(full.3 == fast.3, format!("flit_hops {} != {}", full.3, fast.3))?;
+            check(full.4 == fast.4, "packets_delivered diverged")?;
+            check(full.5 == 0, "full-tick stepping must never skip")?;
+            total_skipped += fast.5;
+            Ok(())
+        },
+    );
+    assert!(total_skipped > 0, "event-driven stepping never engaged across 110 workloads");
+}
+
+/// Cut-through forwarding (the FWD_LATENCY-gated data switch) under both
+/// steppers: a 3-destination chain with real bytes must forward through
+/// the middle followers and report identical cycles.
+#[test]
+fn chainwrite_forwarding_identical_across_modes() {
+    let run = |mode: StepMode| -> (u64, u64, u64) {
+        let mut c = Coordinator::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+        let base = c.soc.map.base_of(NodeId(0));
+        let data: Vec<u8> = (0..8 * 1024).map(|i| (i * 13 + 5) as u8).collect();
+        c.soc.nodes[0].mem.write(base, &data);
+        let task = c.submit_simple(
+            NodeId(0),
+            &[NodeId(1), NodeId(6), NodeId(11)],
+            8 * 1024,
+            EngineKind::Torrent(Strategy::Greedy),
+            true,
+        );
+        c.run_to_completion(1_000_000);
+        let lat = c.latency_of(task).unwrap();
+        let order = c.records[0].chain_order.clone().unwrap();
+        let forwarded: u64 = order[..order.len() - 1]
+            .iter()
+            .map(|n| c.soc.nodes[n.0].torrent.stats.bytes_forwarded)
+            .sum();
+        (c.soc.net.cycle, lat, forwarded)
+    };
+    let full = run(StepMode::FullTick);
+    let fast = run(StepMode::EventDriven);
+    assert_eq!(full, fast, "forwarding run diverged between steppers");
+    assert!(full.2 >= 2 * 8 * 1024, "middle followers did not forward the stream");
+}
+
+/// CFG_ISSUE skip-ahead: after issuing one cfg the initiator's next
+/// event is exactly one descriptor-build interval away.
+#[test]
+fn initiator_hints_cfg_issue_wait() {
+    let mut net = Network::new(Mesh::new(3, 1));
+    let mut mem = Scratchpad::new(0, 64 * 1024);
+    let mut t = Torrent::new(NodeId(0));
+    let read = AffinePattern::contiguous(0, 256);
+    let dests = vec![
+        ChainDest { node: NodeId(1), pattern: AffinePattern::contiguous(0x100, 256) },
+        ChainDest { node: NodeId(2), pattern: AffinePattern::contiguous(0x200, 256) },
+    ];
+    t.submit(ChainTask { task: 1, read, dests, with_data: false }, 0);
+    assert_eq!(t.next_event(0), Some(0), "queued task is immediate work");
+    t.tick(&mut net, &mut mem); // pops the task, issues cfg[0]
+    assert_eq!(t.next_event(0), Some(CFG_ISSUE_CYCLES), "cfg[1] waits a descriptor build");
+}
+
+/// CFG_DECODE → GRANT_PROC → FIN_PROC skip-ahead chain on a follower:
+/// each protocol wait is reported exactly, so the event-driven stepper
+/// can jump straight to the cycle where the FSM acts.
+#[test]
+fn follower_hints_decode_grant_finish_waits() {
+    let mut net = Network::new(Mesh::new(2, 1));
+    let mut mem = Scratchpad::new(0, 4096);
+    let mut t = Torrent::new(NodeId(1));
+    let cfg = TorrentCfg {
+        task: 7,
+        cfg_type: CfgType::Write,
+        prev: Some(NodeId(0)),
+        next: None, // tail: generates grant and finish itself
+        position: 0,
+        chain_len: 1,
+        axi_burst_bytes: SEG_BYTES as u32,
+        pattern: AffinePattern::contiguous(0, 0), // zero-byte control-only chain
+    };
+    let pkt = Packet::new(0, NodeId(0), NodeId(1), Message::TorrentCfg { task: 7 })
+        .with_payload(cfg.encode());
+    assert!(t.handle(&pkt, &mut mem, 100));
+    assert_eq!(t.next_event(100), Some(100 + CFG_DECODE_CYCLES), "cfg decode wait");
+
+    net.cycle = 100 + CFG_DECODE_CYCLES;
+    t.tick(&mut net, &mut mem); // arms the grant pipeline
+    assert_eq!(t.next_event(net.cycle), Some(net.cycle + GRANT_PROC_CYCLES), "grant wait");
+
+    net.cycle += GRANT_PROC_CYCLES;
+    t.tick(&mut net, &mut mem); // sends grant, arms the finish pipeline
+    assert_eq!(t.next_event(net.cycle), Some(net.cycle + FIN_PROC_CYCLES), "finish wait");
+
+    net.cycle += FIN_PROC_CYCLES;
+    t.tick(&mut net, &mut mem); // sends finish, retires the follower role
+    assert!(t.is_idle());
+    assert_eq!(t.next_event(net.cycle), None);
+}
+
+/// The ESP multicast baseline's router-programming stretch is a timed
+/// event too — the stepper can skip the whole configuration wait.
+#[test]
+fn mcast_hints_esp_config_wait() {
+    let mut net = Network::new(Mesh::new(2, 1));
+    let mut mem = Scratchpad::new(0, 4096);
+    let mut m = McastEngine::new(NodeId(0));
+    m.submit(
+        McastTask {
+            task: 1,
+            read: AffinePattern::contiguous(0, 1024),
+            dests: vec![NodeId(1)],
+            drop_offset: 0,
+            with_data: false,
+        },
+        0,
+    );
+    assert_eq!(m.next_event(0), Some(0));
+    m.tick(&mut net, &mut mem); // activates; router programming starts
+    assert_eq!(m.next_event(0), Some(esp_cfg_cycles(1)));
+}
+
+/// A stalled system (follower whose grant can never arrive) must expire
+/// the watchdog at the **same cycle** in both step modes — the
+/// event-driven stepper caps its fast-forward at the deadline.
+#[test]
+fn stalled_system_watchdog_identical_across_modes() {
+    let stalled = |mode: StepMode| -> String {
+        let mut s = Soc::with_step_mode(SocConfig::custom(2, 2, 32 * 1024), mode);
+        let cfg = TorrentCfg {
+            task: 9,
+            cfg_type: CfgType::Write,
+            prev: Some(NodeId(0)),
+            next: Some(NodeId(3)), // node 3 never gets a cfg: grant never comes
+            position: 0,
+            chain_len: 2,
+            axi_burst_bytes: SEG_BYTES as u32,
+            pattern: AffinePattern::contiguous(s.map.base_of(NodeId(1)), 64),
+        };
+        s.net.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(1), Message::TorrentCfg { task: 9 })
+                .with_payload(cfg.encode()),
+        );
+        let err = catch_unwind(AssertUnwindSafe(|| s.run_until_idle(500))).unwrap_err();
+        err.downcast_ref::<String>().cloned().expect("watchdog panics with a String")
+    };
+    let full = stalled(StepMode::FullTick);
+    let fast = stalled(StepMode::EventDriven);
+    assert!(full.contains("watchdog 'soc.quiesce' expired"), "unexpected panic: {full}");
+    assert_eq!(full, fast, "watchdog fired at different cycles across step modes");
+}
