@@ -1,7 +1,8 @@
 # Convenience targets; the source of truth is Cargo.toml (Rust) and
 # python/compile/aot.py (artifacts).
 
-.PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline clean
+.PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
+	examples-smoke doc clean
 
 all: tier1
 
@@ -34,6 +35,22 @@ bench-smoke:
 bench-baseline:
 	TORRENT_BENCH_JSON=BENCH_simcore.json TORRENT_BENCH_CALIBRATED=1 \
 		cargo bench --bench simcore
+
+# Build every example and run the fast ones (CI smoke). attention_e2e is
+# build-only here: it exercises the full artifact suite and is covered by
+# the figures/EXPERIMENTS flow.
+examples-smoke:
+	cargo build --release --examples
+	cargo run --release --example quickstart
+	cargo run --release --example chain_visualizer
+	cargo run --release --example batch_pipeline
+	cargo run --release --example multicast_sweep -- --size-kb 4
+
+# API docs for the torrent crate; rustdoc warnings (broken intra-doc
+# links, malformed code blocks) are errors so the redesigned public API
+# stays documented.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p torrent
 
 # Regenerate every paper figure/table via the CLI (EXPERIMENTS.md).
 figures:

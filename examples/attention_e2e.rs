@@ -104,20 +104,24 @@ fn main() -> anyhow::Result<()> {
             })
             .collect::<Vec<_>>()
     };
-    let t_k = coord.submit(P2mpRequest {
-        src,
-        read: AffinePattern::contiguous(base0, k_bytes.len()),
-        dests: mk_dests(&coord, 0, k_bytes.len()),
-        engine: EngineKind::Torrent(Strategy::Tsp),
-        with_data: true,
-    });
-    let t_v = coord.submit(P2mpRequest {
-        src,
-        read: AffinePattern::contiguous(base0 + k_bytes.len() as u64, v_bytes.len()),
-        dests: mk_dests(&coord, k_bytes.len() as u64, v_bytes.len()),
-        engine: EngineKind::Torrent(Strategy::Tsp),
-        with_data: true,
-    });
+    let t_k = coord
+        .submit(
+            P2mpRequest::to_patterns(mk_dests(&coord, 0, k_bytes.len()))
+                .src(src)
+                .read(AffinePattern::contiguous(base0, k_bytes.len()))
+                .engine(EngineKind::Torrent(Strategy::Tsp))
+                .with_data(true),
+        )
+        .expect("valid K request");
+    let t_v = coord
+        .submit(
+            P2mpRequest::to_patterns(mk_dests(&coord, k_bytes.len() as u64, v_bytes.len()))
+                .src(src)
+                .read(AffinePattern::contiguous(base0 + k_bytes.len() as u64, v_bytes.len()))
+                .engine(EngineKind::Torrent(Strategy::Tsp))
+                .with_data(true),
+        )
+        .expect("valid V request");
     coord.run_to_completion(50_000_000);
     let lat_k = coord.latency_of(t_k).expect("K chainwrite done");
     let lat_v = coord.latency_of(t_v).expect("V chainwrite done");
@@ -178,13 +182,15 @@ fn main() -> anyhow::Result<()> {
     // ---- 4. XDMA baseline for the same movement --------------------------
     let mut base = Coordinator::new(SocConfig::fpga_3x3());
     base.soc.nodes[0].mem.write(base0, &k_bytes);
-    let t_x = base.submit(P2mpRequest {
-        src,
-        read: AffinePattern::contiguous(base0, k_bytes.len()),
-        dests: mk_dests(&base, 0, k_bytes.len()),
-        engine: EngineKind::Xdma,
-        with_data: true,
-    });
+    let t_x = base
+        .submit(
+            P2mpRequest::to_patterns(mk_dests(&base, 0, k_bytes.len()))
+                .src(src)
+                .read(AffinePattern::contiguous(base0, k_bytes.len()))
+                .engine(EngineKind::Xdma)
+                .with_data(true),
+        )
+        .expect("valid XDMA request");
     base.run_to_completion(200_000_000);
     let lat_x = base.latency_of(t_x).expect("xdma done");
     println!(

@@ -32,9 +32,11 @@ fn main() {
         for (_, engine) in engines {
             let mut c = Coordinator::new(SocConfig::eval_4x5());
             let dests: Vec<NodeId> = (1..=n_dst).map(NodeId).collect();
-            let task = c.submit_simple(NodeId(0), &dests, size_kb * 1024, engine, false);
+            let task = c
+                .submit_simple(NodeId(0), &dests, size_kb * 1024, engine, false)
+                .expect("valid request");
             c.run_to_completion(100_000_000);
-            let rec = c.records.iter().find(|r| r.task == task).unwrap();
+            let rec = c.record(task).unwrap();
             let res = rec.result.as_ref().expect("completed");
             lat_row.push(res.latency().to_string());
             eta_row.push(fnum(rec.eta().unwrap(), 2));

@@ -20,16 +20,18 @@ fn main() {
 
     // One P2MP request: 16 KB to three clusters, greedy chain order.
     let dests = [NodeId(5), NodeId(10), NodeId(15)];
-    let task = coord.submit_simple(
-        NodeId(0),
-        &dests,
-        payload.len(),
-        EngineKind::Torrent(Strategy::Greedy),
-        true, // move real bytes
-    );
+    let task = coord
+        .submit_simple(
+            NodeId(0),
+            &dests,
+            payload.len(),
+            EngineKind::Torrent(Strategy::Greedy),
+            true, // move real bytes
+        )
+        .expect("valid request");
     coord.run_to_completion(1_000_000);
 
-    let rec = coord.records.iter().find(|r| r.task == task).unwrap();
+    let rec = coord.record(task).unwrap();
     let res = rec.result.as_ref().expect("completed");
     println!("chain order: {:?}", rec.chain_order.as_ref().unwrap());
     println!(

@@ -28,7 +28,9 @@ fn main() {
         let mut lat = vec![];
         for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
             let mut c = Coordinator::new(SocConfig::mesh_8x8());
-            let task = c.submit_simple(NodeId(0), dests, 64 * 1024, EngineKind::Torrent(s), false);
+            let task = c
+                .submit_simple(NodeId(0), dests, 64 * 1024, EngineKind::Torrent(s), false)
+                .expect("valid request");
             c.run_to_completion(50_000_000);
             lat.push(c.latency_of(task).unwrap());
         }
@@ -48,13 +50,17 @@ fn main() {
     for n in [2usize, 4, 8, 16] {
         let mut c = Coordinator::new(SocConfig::eval_4x5());
         let dests: Vec<NodeId> = (1..=n).map(NodeId).collect();
-        let task = c.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Mcast, false);
+        let task = c
+            .submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Mcast, false)
+            .expect("valid request");
         c.run_to_completion(50_000_000);
         let mcast = c.latency_of(task).unwrap();
         let cfg = torrent::dma::mcast::esp_cfg_cycles(n);
         let mut c2 = Coordinator::new(SocConfig::eval_4x5());
         let chain = EngineKind::Torrent(Strategy::Greedy);
-        let task2 = c2.submit_simple(NodeId(0), &dests, 64 * 1024, chain, false);
+        let task2 = c2
+            .submit_simple(NodeId(0), &dests, 64 * 1024, chain, false)
+            .expect("valid request");
         c2.run_to_completion(50_000_000);
         t.row([
             n.to_string(),
@@ -72,7 +78,9 @@ fn main() {
     // The window is a compile-time constant; demonstrate its sufficiency
     // by comparing achieved vs ideal serialization.
     let mut c = Coordinator::new(SocConfig::eval_4x5());
-    let task = c.submit_simple(NodeId(0), &[NodeId(1)], 64 * 1024, EngineKind::Idma, false);
+    let task = c
+        .submit_simple(NodeId(0), &[NodeId(1)], 64 * 1024, EngineKind::Idma, false)
+        .expect("valid request");
     c.run_to_completion(10_000_000);
     let lat = c.latency_of(task).unwrap();
     let ideal = 64 * 1024 / 64;
@@ -91,13 +99,14 @@ fn main() {
         let rate = read.rate_per_cycle();
         let dst = NodeId(4);
         let write = w.write_pattern(c.soc.map.base_of(dst));
-        let task = c.submit(P2mpRequest {
-            src: NodeId(0),
-            read,
-            dests: vec![(dst, write)],
-            engine: EngineKind::Torrent(Strategy::Greedy),
-            with_data: false,
-        });
+        let task = c
+            .submit(
+                P2mpRequest::to_patterns(vec![(dst, write)])
+                    .src(NodeId(0))
+                    .read(read)
+                    .engine(EngineKind::Torrent(Strategy::Greedy)),
+            )
+            .expect("valid request");
         c.run_to_completion(100_000_000);
         t.row([
             w.id.to_string(),

@@ -58,7 +58,8 @@ fn main() {
     let chainwrite = |mode: StepMode| {
         let mut c = Coordinator::with_step_mode(SocConfig::eval_4x5(), mode);
         let dests: Vec<NodeId> = (1..=8).map(NodeId).collect();
-        c.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false);
+        c.submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false)
+            .expect("valid request");
         c.run_to_completion(10_000_000);
         c
     };

@@ -69,9 +69,10 @@ pub fn fig5(quick: bool) -> (Vec<EtaPoint>, Vec<Table>) {
                 }
                 let mut c = Coordinator::new(SocConfig::eval_4x5());
                 let dests: Vec<NodeId> = (1..=n_dst).map(NodeId).collect();
-                let task = c.submit_simple(NodeId(0), &dests, bytes, engine, false);
+                let task =
+                    c.submit_simple(NodeId(0), &dests, bytes, engine, false).expect("valid");
                 c.run_to_completion(60_000_000);
-                let rec = c.records.iter().find(|r| r.task == task).unwrap();
+                let rec = c.record(task).unwrap();
                 let res = rec.result.as_ref().expect("task completed");
                 let eta = rec.eta().unwrap();
                 points.push(EtaPoint {
@@ -139,13 +140,9 @@ pub fn fig7() -> (Table, f64, f64, f64) {
     for n in 1..=8usize {
         let mut c = Coordinator::new(SocConfig::eval_4x5());
         let dests: Vec<NodeId> = (1..=n).map(NodeId).collect();
-        let task = c.submit_simple(
-            NodeId(0),
-            &dests,
-            bytes,
-            EngineKind::Torrent(Strategy::Greedy),
-            false,
-        );
+        let task = c
+            .submit_simple(NodeId(0), &dests, bytes, EngineKind::Torrent(Strategy::Greedy), false)
+            .expect("valid");
         c.run_to_completion(10_000_000);
         let lat = c.latency_of(task).expect("completed");
         xs.push(n as f64);
@@ -189,13 +186,14 @@ pub fn fig9() -> (Vec<Fig9Row>, Table) {
                     (node, w.write_pattern(c.soc.map.base_of(node)))
                 })
                 .collect();
-            let task = c.submit(crate::coordinator::P2mpRequest {
-                src,
-                read,
-                dests,
-                engine,
-                with_data: false,
-            });
+            let task = c
+                .submit(
+                    crate::coordinator::P2mpRequest::to_patterns(dests)
+                        .src(src)
+                        .read(read)
+                        .engine(engine),
+                )
+                .expect("valid fig9 request");
             c.run_to_completion(200_000_000);
             c.latency_of(task).expect("fig9 task completed")
         };
@@ -261,16 +259,12 @@ pub fn fig11() -> Vec<Table> {
     // cluster powers from actual simulated activity.
     let mut c = Coordinator::new(SocConfig::synth_2x2());
     let dests: Vec<NodeId> = vec![NodeId(1), NodeId(2), NodeId(3)];
-    let task = c.submit_simple(
-        NodeId(0),
-        &dests,
-        64 * 1024,
-        EngineKind::Torrent(Strategy::Greedy),
-        false,
-    );
+    let task = c
+        .submit_simple(NodeId(0), &dests, 64 * 1024, EngineKind::Torrent(Strategy::Greedy), false)
+        .expect("valid");
     c.run_to_completion(10_000_000);
     let lat = c.latency_of(task).expect("fig11 chainwrite");
-    let order = c.records[0].chain_order.clone().unwrap();
+    let order = c.record(task).unwrap().chain_order.clone().unwrap();
     let mut p = Table::new("Fig 11(d-f) — cluster power during 64KB 3-dest Chainwrite")
         .header(["cluster", "role", "power[mW]"]);
     let stats0 = &c.soc.nodes[0].torrent.stats;

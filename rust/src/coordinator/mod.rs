@@ -1,67 +1,262 @@
-//! Task-level coordinator: the framework layer a launcher talks to.
+//! Task-service coordinator: the framework layer a launcher talks to.
 //!
-//! Owns the simulated SoC, assigns global task ids, routes P2MP requests
-//! to the right engine (Torrent Chainwrite with a scheduling strategy,
-//! iDMA repeated-unicast, XDMA software P2MP, or ESP-style network
-//! multicast), runs the system to completion and aggregates the metrics
-//! every bench reports (latency, η_P2MP, hops, activity counters).
+//! The coordinator owns the simulated SoC and runs it as a *service*:
+//! many P2MP tasks are in flight concurrently (per-initiator admission
+//! queues feed the engines' own queues), tasks can depend on each other
+//! (`P2mpRequest::after` edges form a DAG, released as dependencies
+//! complete), and every engine is driven uniformly through the
+//! [`dma::Engine`](crate::dma::Engine) trait — there is no per-engine
+//! control flow here.
+//!
+//! Submission is fallible ([`SubmitError`]) and returns a typed
+//! [`TaskHandle`]; progress is observable via [`TaskStatus`]. Three run
+//! modes cover the workloads the benches and examples need:
+//!
+//! * [`Coordinator::run_until_complete`] — drive one task to completion
+//!   (others keep streaming);
+//! * [`Coordinator::run_until_all_done`] — drive every submitted task to
+//!   completion;
+//! * [`Coordinator::run_to_completion`] — the quiescence drain: run
+//!   until the whole SoC is idle (identical stepping to
+//!   `Soc::run_until_idle`, so single-task figure drivers report
+//!   byte- and cycle-identical numbers).
+//!
+//! ```
+//! use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest, TaskStatus};
+//! use torrent::noc::NodeId;
+//! use torrent::sched::Strategy;
+//! use torrent::soc::SocConfig;
+//!
+//! let mut c = Coordinator::new(SocConfig::custom(3, 3, 64 * 1024));
+//! // Stage 1: scatter 4 KB from cluster 0 to two clusters.
+//! let a = c
+//!     .submit(
+//!         P2mpRequest::to(&[NodeId(1), NodeId(4)])
+//!             .src(NodeId(0))
+//!             .bytes(4096)
+//!             .engine(EngineKind::Torrent(Strategy::Greedy)),
+//!     )
+//!     .expect("valid request");
+//! // Stage 2: cluster 1 forwards onward once stage 1 is done.
+//! let b = c
+//!     .submit(
+//!         P2mpRequest::to(&[NodeId(8)])
+//!             .src(NodeId(1))
+//!             .bytes(4096)
+//!             .after(&[a]),
+//!     )
+//!     .expect("valid request");
+//! assert_eq!(b.status(&c), TaskStatus::Queued); // dependency-blocked
+//! c.run_until_all_done(1_000_000);
+//! assert!(c.latency_of(a).is_some() && c.latency_of(b).is_some());
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::fmt;
 
 use crate::analysis::eta_p2mp;
-use crate::dma::idma::IdmaTask;
-use crate::dma::mcast::McastTask;
 use crate::dma::torrent::dse::AffinePattern;
-use crate::dma::xdma::XdmaTask;
-use crate::dma::TaskResult;
+use crate::dma::xdma::XDMA_SUBTASK_BIT;
+use crate::dma::{Engine as _, TaskPhase, TaskResult, TaskSpec};
 use crate::noc::NodeId;
-use crate::sched::Strategy;
+use crate::sched;
+use crate::sim::Watchdog;
 use crate::soc::{Soc, SocConfig};
+use anyhow::anyhow;
 
-/// Which engine serves a P2MP request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EngineKind {
-    /// Torrent Chainwrite with the given chain-order strategy.
-    Torrent(Strategy),
-    /// iDMA: repeated unicast, sequential.
-    Idma,
-    /// XDMA: software P2MP over the distributed frontend.
-    Xdma,
-    /// ESP-style network-layer multicast.
-    Mcast,
-}
+pub use crate::dma::{EngineKind, SubmitError, SubmitErrorKind};
 
-impl EngineKind {
-    pub fn label(&self) -> &'static str {
-        match self {
-            EngineKind::Torrent(Strategy::Naive) => "torrent/naive",
-            EngineKind::Torrent(Strategy::Greedy) => "torrent/greedy",
-            EngineKind::Torrent(Strategy::Tsp) => "torrent/tsp",
-            EngineKind::Idma => "idma",
-            EngineKind::Xdma => "xdma",
-            EngineKind::Mcast => "mcast",
-        }
+/// Coordinator-issued task identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u32);
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "task#{}", self.0)
     }
 }
 
-/// A point-to-multipoint request.
-#[derive(Debug, Clone)]
+/// Handle returned by submission: a copyable reference to one task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskHandle {
+    id: TaskId,
+}
+
+impl TaskHandle {
+    pub fn id(&self) -> TaskId {
+        self.id
+    }
+
+    /// Current lifecycle status on `c` (the coordinator that minted this
+    /// handle).
+    pub fn status(&self, c: &Coordinator) -> TaskStatus {
+        c.status(*self).expect("handle minted by this coordinator")
+    }
+
+    /// Completion latency, if the task has finished.
+    pub fn latency(&self, c: &Coordinator) -> Option<u64> {
+        c.latency_of(*self)
+    }
+}
+
+impl fmt::Display for TaskHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.id.fmt(f)
+    }
+}
+
+impl From<TaskHandle> for TaskId {
+    fn from(h: TaskHandle) -> TaskId {
+        h.id
+    }
+}
+
+/// Task lifecycle as observed from the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskStatus {
+    /// Held in an admission queue behind unfinished dependencies.
+    Queued,
+    /// On an engine: queued there, decoding descriptors or programming
+    /// the transfer (Chainwrite cfg/grant round trip, ESP router set).
+    Configuring,
+    /// Data or finish signalling in flight.
+    Streaming,
+    /// Completed; the [`Record`] holds the [`TaskResult`].
+    Done,
+}
+
+/// A point-to-multipoint request, built fluently:
+///
+/// ```
+/// use torrent::coordinator::{EngineKind, P2mpRequest};
+/// use torrent::noc::NodeId;
+/// let req = P2mpRequest::to(&[NodeId(1), NodeId(2)])
+///     .src(NodeId(0))
+///     .bytes(8 * 1024)
+///     .engine(EngineKind::Idma);
+/// ```
+///
+/// Two construction modes:
+/// * **simple** — [`P2mpRequest::to`] names bare destination nodes; the
+///   coordinator reads `bytes` from the source window base and writes to
+///   the upper half of each destination window (requires `.bytes()`).
+/// * **explicit** — [`P2mpRequest::to_patterns`] carries one write
+///   pattern per destination and requires `.read()`.
+///
+/// In both modes `.src()` may be omitted when a read pattern is given:
+/// the source is derived from the pattern's base address (the
+/// "distributed" in distributed DMA — the engine that owns the data
+/// serves the task, no central engine pulls it across the fabric
+/// first).
+///
+/// `.after(&[handle])` adds dependency edges: the task is dispatched to
+/// its engine only once every named task has completed.
+#[derive(Debug)]
 pub struct P2mpRequest {
-    pub src: NodeId,
-    pub read: AffinePattern,
-    pub dests: Vec<(NodeId, AffinePattern)>,
-    pub engine: EngineKind,
-    pub with_data: bool,
+    src: Option<NodeId>,
+    read: Option<AffinePattern>,
+    dest_nodes: Vec<NodeId>,
+    dest_patterns: Vec<(NodeId, AffinePattern)>,
+    bytes: Option<usize>,
+    engine: EngineKind,
+    with_data: bool,
+    after: Vec<TaskId>,
+}
+
+impl P2mpRequest {
+    fn empty(engine: EngineKind) -> Self {
+        P2mpRequest {
+            src: None,
+            read: None,
+            dest_nodes: Vec::new(),
+            dest_patterns: Vec::new(),
+            bytes: None,
+            engine,
+            with_data: false,
+            after: Vec::new(),
+        }
+    }
+
+    /// Simple mode: bare destination nodes (patterns resolved against
+    /// the SoC map at submission). Default engine: Torrent/greedy.
+    pub fn to(dests: &[NodeId]) -> Self {
+        let mut req = Self::empty(EngineKind::Torrent(sched::Strategy::Greedy));
+        req.dest_nodes = dests.to_vec();
+        req
+    }
+
+    /// Explicit mode: destination (node, local write pattern) pairs.
+    pub fn to_patterns<I>(dests: I) -> Self
+    where
+        I: IntoIterator<Item = (NodeId, AffinePattern)>,
+    {
+        let mut req = Self::empty(EngineKind::Torrent(sched::Strategy::Greedy));
+        req.dest_patterns = dests.into_iter().collect();
+        req
+    }
+
+    /// Initiator node. Optional whenever a read pattern is given (the
+    /// owner of the pattern's base address serves the task).
+    pub fn src(mut self, src: NodeId) -> Self {
+        self.src = Some(src);
+        self
+    }
+
+    /// Source DSE read pattern. Required in explicit mode.
+    pub fn read(mut self, read: AffinePattern) -> Self {
+        self.read = Some(read);
+        self
+    }
+
+    /// Transfer size (simple mode).
+    pub fn bytes(mut self, bytes: usize) -> Self {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    /// Serving engine (default: Torrent with the greedy chain order).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Move real bytes instead of phantom timing-only payloads.
+    pub fn with_data(mut self, with_data: bool) -> Self {
+        self.with_data = with_data;
+        self
+    }
+
+    /// Dependency edges: dispatch only after all of `deps` complete.
+    pub fn after<D: Into<TaskId> + Copy>(mut self, deps: &[D]) -> Self {
+        self.after.extend(deps.iter().map(|&d| d.into()));
+        self
+    }
 }
 
 /// Submission record + (after completion) the result.
 #[derive(Debug)]
 pub struct Record {
-    pub task: u32,
+    pub task: TaskId,
     pub engine: EngineKind,
     pub src: NodeId,
     pub n_dests: usize,
     pub bytes: usize,
+    /// Dependency edges this task waited on.
+    pub deps: Vec<TaskId>,
+    /// Chain traversal order (Torrent engines, set at dispatch).
     pub chain_order: Option<Vec<NodeId>>,
     pub result: Option<TaskResult>,
+    /// Resolved-but-undispatched job (present while dependency-blocked).
+    pending: Option<Pending>,
+}
+
+/// A validated request waiting in an admission queue.
+#[derive(Debug)]
+struct Pending {
+    read: AffinePattern,
+    dests: Vec<(NodeId, AffinePattern)>,
+    with_data: bool,
+    drop_offset: u64,
 }
 
 impl Record {
@@ -73,106 +268,264 @@ impl Record {
     }
 }
 
+fn err(kind: SubmitErrorKind, e: anyhow::Error) -> SubmitError {
+    SubmitError::new(kind, e)
+}
+
 /// The coordinator.
 pub struct Coordinator {
     pub soc: Soc,
     next_task: u32,
+    /// Submission records in task-id order; [`Coordinator::record`] is
+    /// the O(1) accessor.
     pub records: Vec<Record>,
+    /// `TaskId` → `records` index.
+    index: HashMap<u32, usize>,
+    /// Per-initiator admission queues: dependency-blocked tasks wait
+    /// here until their last dependency completes.
+    admission: BTreeMap<NodeId, VecDeque<u32>>,
+    /// Submitted tasks without a collected result yet.
+    open_tasks: usize,
+    /// Engine completions matching no coordinator task (e.g. read-tunnel
+    /// transfers submitted directly to a Torrent). XDMA-internal leg
+    /// results are dropped, not kept here.
+    pub orphan_results: Vec<TaskResult>,
 }
 
 impl Coordinator {
     pub fn new(cfg: SocConfig) -> Self {
-        Coordinator { soc: Soc::new(cfg), next_task: 1, records: Vec::new() }
+        Self::from_soc(Soc::new(cfg))
     }
 
     /// Coordinator over a SoC stepped in an explicit `sim::StepMode`
     /// (differential tests and the stepping benches; the default is the
     /// activity-tracked event-driven stepper).
     pub fn with_step_mode(cfg: SocConfig, mode: crate::sim::StepMode) -> Self {
-        Coordinator { soc: Soc::with_step_mode(cfg, mode), next_task: 1, records: Vec::new() }
+        Self::from_soc(Soc::with_step_mode(cfg, mode))
     }
 
-    /// Submit a request; returns its task id.
-    pub fn submit(&mut self, req: P2mpRequest) -> u32 {
-        let task = self.next_task;
-        self.next_task += 1;
-        let now = self.soc.cycle();
-        let bytes = req.read.total_bytes();
-        let mut chain_order = None;
-        match req.engine {
-            EngineKind::Torrent(strategy) => {
-                let order = self.soc.chainwrite(
-                    task,
-                    req.src,
-                    req.read.clone(),
-                    &req.dests,
-                    strategy,
-                    req.with_data,
-                );
-                chain_order = Some(order);
+    fn from_soc(soc: Soc) -> Self {
+        Coordinator {
+            soc,
+            next_task: 1,
+            records: Vec::new(),
+            index: HashMap::new(),
+            admission: BTreeMap::new(),
+            open_tasks: 0,
+            orphan_results: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Submission
+    // ------------------------------------------------------------------
+
+    /// Submit a request. Validation happens here — engines never see a
+    /// malformed job — and eligible tasks (no unfinished dependencies)
+    /// are dispatched to their engine in the same cycle, so single-task
+    /// timing is identical to submitting to the engine directly.
+    pub fn submit(&mut self, req: P2mpRequest) -> Result<TaskHandle, SubmitError> {
+        let P2mpRequest { src, read, dest_nodes, dest_patterns, bytes, engine, with_data, after } =
+            req;
+        let n_nodes = self.soc.cfg.n_nodes();
+        // Bounds-check a node *before* it reaches `AddrMap::base_of`
+        // (which asserts) — malformed requests must error, not panic.
+        let in_mesh =
+            |n: NodeId, kind: SubmitErrorKind, what: &str| -> Result<NodeId, SubmitError> {
+                if n.0 < n_nodes {
+                    Ok(n)
+                } else {
+                    Err(err(kind, anyhow!("{what} {n:?} outside the {n_nodes}-node mesh")))
+                }
+            };
+        // A source can also be derived from the read pattern's base — the
+        // engine attached to the memory that owns the data serves the
+        // task (`submit_auto` semantics; no src needed in either mode).
+        let resolve_src = |src: Option<NodeId>,
+                           read: Option<&AffinePattern>|
+         -> Result<NodeId, SubmitError> {
+            match (src, read) {
+                (Some(s), _) => in_mesh(s, SubmitErrorKind::UnmappedAddress, "source"),
+                (None, Some(r)) => self.soc.map.node_of(r.base).ok_or_else(|| {
+                    err(
+                        SubmitErrorKind::UnmappedAddress,
+                        anyhow!("source address {:#x} outside the SoC map", r.base),
+                    )
+                }),
+                (None, None) => Err(err(
+                    SubmitErrorKind::Underspecified,
+                    anyhow!("request needs .src() (or .read() to derive the owner from)"),
+                )),
             }
-            EngineKind::Idma => {
-                self.soc.nodes[req.src.0].idma.submit(
-                    IdmaTask {
-                        task,
-                        read: req.read.clone(),
-                        dests: req.dests.clone(),
-                        with_data: req.with_data,
-                    },
-                    now,
-                );
+        };
+
+        // --- resolve source, read pattern and destination patterns ---
+        let explicit = !dest_patterns.is_empty();
+        let (src, read, dests) = if explicit {
+            let read = read.ok_or_else(|| {
+                err(
+                    SubmitErrorKind::Underspecified,
+                    anyhow!("explicit destination patterns need a read pattern"),
+                )
+            })?;
+            if let Some(b) = bytes.filter(|&b| b != read.total_bytes()) {
+                return Err(err(
+                    SubmitErrorKind::SizeMismatch,
+                    anyhow!(".bytes({b}) conflicts with a {} B read pattern", read.total_bytes()),
+                ));
             }
-            EngineKind::Xdma => {
-                self.soc.nodes[req.src.0].xdma.submit(
-                    XdmaTask {
-                        task,
-                        read: req.read.clone(),
-                        dests: req.dests.clone(),
-                        with_data: req.with_data,
-                    },
-                    now,
-                );
+            let src = resolve_src(src, Some(&read))?;
+            for (node, _) in &dest_patterns {
+                in_mesh(*node, SubmitErrorKind::InvalidDestinations, "destination")?;
             }
-            EngineKind::Mcast => {
-                // Multicast drops the block at the same window-local offset
-                // everywhere: derive it from the first destination pattern.
-                let (n0, p0) = &req.dests[0];
-                let offset = p0.base - self.soc.map.base_of(*n0);
-                self.soc.nodes[req.src.0].mcast.submit(
-                    McastTask {
-                        task,
-                        read: req.read.clone(),
-                        dests: req.dests.iter().map(|(n, _)| *n).collect(),
-                        drop_offset: offset,
-                        with_data: req.with_data,
-                    },
-                    now,
-                );
+            (src, read, dest_patterns)
+        } else {
+            if dest_nodes.is_empty() {
+                return Err(err(
+                    SubmitErrorKind::EmptyDestinations,
+                    anyhow!("request names no destinations"),
+                ));
+            }
+            let bytes = bytes.ok_or_else(|| {
+                err(SubmitErrorKind::Underspecified, anyhow!("simple requests need .bytes()"))
+            })?;
+            let half = self.soc.cfg.spm_bytes as u64 / 2;
+            if bytes as u64 > half {
+                return Err(err(
+                    SubmitErrorKind::TooLarge,
+                    anyhow!(
+                        "{bytes} B does not fit half a {} B scratchpad",
+                        self.soc.cfg.spm_bytes
+                    ),
+                ));
+            }
+            let src = resolve_src(src, read.as_ref())?;
+            for &d in &dest_nodes {
+                in_mesh(d, SubmitErrorKind::InvalidDestinations, "destination")?;
+            }
+            let read = match read {
+                Some(r) => {
+                    if r.total_bytes() != bytes {
+                        return Err(err(
+                            SubmitErrorKind::SizeMismatch,
+                            anyhow!(
+                                "read pattern covers {} B, .bytes() says {bytes}",
+                                r.total_bytes()
+                            ),
+                        ));
+                    }
+                    r
+                }
+                None => AffinePattern::contiguous(self.soc.map.base_of(src), bytes),
+            };
+            let dests = dest_nodes
+                .iter()
+                .map(|&d| {
+                    (d, AffinePattern::contiguous(self.soc.map.base_of(d) + half, bytes))
+                })
+                .collect();
+            (src, read, dests)
+        };
+
+        // --- shared validation (both branches produce non-empty,
+        // in-mesh destination sets) ---
+        if read.total_bytes() == 0 {
+            return Err(err(
+                SubmitErrorKind::EmptyTransfer,
+                anyhow!("request moves zero bytes"),
+            ));
+        }
+        let mut seen = BTreeSet::new();
+        for (node, pattern) in &dests {
+            if *node == src || !seen.insert(*node) {
+                return Err(err(
+                    SubmitErrorKind::InvalidDestinations,
+                    anyhow!("destination {node:?} repeats or names the source"),
+                ));
+            }
+            if pattern.total_bytes() != read.total_bytes() {
+                return Err(err(
+                    SubmitErrorKind::SizeMismatch,
+                    anyhow!(
+                        "destination {node:?} pattern covers {} B, read covers {} B",
+                        pattern.total_bytes(),
+                        read.total_bytes()
+                    ),
+                ));
             }
         }
+        // Multicast drops one contiguous block at the same window-local
+        // offset everywhere (per-destination write *patterns* are a
+        // distributed-DMA capability the router-replication baseline
+        // lacks) — every destination pattern must agree, or the engine
+        // would silently write where the caller never asked.
+        let drop_offset = if engine == EngineKind::Mcast {
+            let (n0, p0) = &dests[0];
+            let off = p0.base.checked_sub(self.soc.map.base_of(*n0)).ok_or_else(|| {
+                err(
+                    SubmitErrorKind::UnmappedAddress,
+                    anyhow!("destination pattern base {:#x} below {n0:?}'s window", p0.base),
+                )
+            })?;
+            for (n, p) in &dests {
+                let same_offset = p.base.checked_sub(self.soc.map.base_of(*n)) == Some(off);
+                if !same_offset || p.runs().len() != 1 {
+                    return Err(err(
+                        SubmitErrorKind::InvalidDestinations,
+                        anyhow!(
+                            "multicast writes one contiguous block at a shared window-local \
+                             offset ({off:#x}); {n:?}'s pattern differs"
+                        ),
+                    ));
+                }
+            }
+            off
+        } else {
+            0
+        };
+        for d in &after {
+            if !self.index.contains_key(&d.0) {
+                return Err(err(
+                    SubmitErrorKind::UnknownDependency,
+                    anyhow!("dependency {d} was never submitted here"),
+                ));
+            }
+        }
+
+        // --- admit ---
+        let id = TaskId(self.next_task);
+        self.next_task += 1;
+        debug_assert!(id.0 & XDMA_SUBTASK_BIT == 0, "task id space exhausted");
+        self.index.insert(id.0, self.records.len());
         self.records.push(Record {
-            task,
-            engine: req.engine,
-            src: req.src,
-            n_dests: req.dests.len(),
-            bytes,
-            chain_order,
+            task: id,
+            engine,
+            src,
+            n_dests: dests.len(),
+            bytes: read.total_bytes(),
+            deps: after,
+            chain_order: None,
             result: None,
+            pending: Some(Pending { read, dests, with_data, drop_offset }),
         });
-        task
+        self.open_tasks += 1;
+        // Fast path: a task with no unfinished dependencies goes straight
+        // to its engine (same cycle as the submission). Only blocked
+        // tasks enter the admission queue.
+        let idx = self.records.len() - 1;
+        if self.deps_ready(idx) {
+            self.dispatch(idx);
+        } else {
+            self.admission.entry(src).or_default().push_back(id.0);
+        }
+        Ok(TaskHandle { id })
     }
 
-    /// Route a request to the initiator that owns the source data: the
-    /// Torrent attached to the memory `read.base` resolves to (the
-    /// "distributed" in distributed DMA — no central engine pulls the
-    /// data across the fabric first).
-    pub fn submit_auto(&mut self, mut req: P2mpRequest) -> u32 {
-        let owner = self
-            .soc
-            .map
-            .node_of(req.read.base)
-            .expect("source address outside the SoC map");
-        req.src = owner;
+    /// Route a request to the initiator that owns the source data,
+    /// whatever `.src()` said: the Torrent attached to the memory the
+    /// read pattern resolves to serves the task.
+    pub fn submit_auto(&mut self, mut req: P2mpRequest) -> Result<TaskHandle, SubmitError> {
+        req.src = None;
         self.submit(req)
     }
 
@@ -185,54 +538,218 @@ impl Coordinator {
         bytes: usize,
         engine: EngineKind,
         with_data: bool,
-    ) -> u32 {
-        let half = self.soc.cfg.spm_bytes as u64 / 2;
-        assert!(bytes as u64 <= half, "transfer must fit half a scratchpad");
-        let read = AffinePattern::contiguous(self.soc.map.base_of(src), bytes);
-        let dest_patterns: Vec<(NodeId, AffinePattern)> = dests
-            .iter()
-            .map(|&d| {
-                (d, AffinePattern::contiguous(self.soc.map.base_of(d) + half, bytes))
-            })
-            .collect();
-        self.submit(P2mpRequest { src, read, dests: dest_patterns, engine, with_data })
+    ) -> Result<TaskHandle, SubmitError> {
+        self.submit(
+            P2mpRequest::to(dests).src(src).bytes(bytes).engine(engine).with_data(with_data),
+        )
     }
 
-    /// Run until every engine drains, then collect results into records.
-    /// Stepping follows `self.soc.step_mode`; the underlying loop is
-    /// watchdog-guarded (`sim::Watchdog`, label `soc.quiesce`).
-    pub fn run_to_completion(&mut self, max_cycles: u64) {
-        self.soc.run_until_idle(max_cycles);
-        for rec in &mut self.records {
-            if rec.result.is_some() {
-                continue;
-            }
-            let node = &self.soc.nodes[rec.src.0];
-            let found = match rec.engine {
-                EngineKind::Torrent(_) => {
-                    node.torrent.results.iter().find(|r| r.task == rec.task)
+    // ------------------------------------------------------------------
+    // Scheduler
+    // ------------------------------------------------------------------
+
+    /// All of a record's dependencies have completed.
+    fn deps_ready(&self, idx: usize) -> bool {
+        self.records[idx]
+            .deps
+            .iter()
+            .all(|d| self.records[self.index[&d.0]].result.is_some())
+    }
+
+    /// Release dependency edges: dispatch every admitted task whose
+    /// dependencies have all completed, in deterministic (initiator,
+    /// FIFO) order. Independent tasks bypass dependency-blocked ones, so
+    /// one stalled DAG branch never serializes the rest of an
+    /// initiator's queue. Called only when a completion was observed —
+    /// eligibility cannot change otherwise.
+    fn dispatch_ready(&mut self) {
+        let nodes: Vec<NodeId> = self.admission.keys().copied().collect();
+        for n in nodes {
+            let ids: Vec<u32> = self.admission[&n].iter().copied().collect();
+            let mut blocked = VecDeque::new();
+            for id in ids {
+                let idx = self.index[&id];
+                if self.deps_ready(idx) {
+                    self.dispatch(idx);
+                } else {
+                    blocked.push_back(id);
                 }
-                EngineKind::Idma => node.idma.results.iter().find(|r| r.task == rec.task),
-                EngineKind::Xdma => node.xdma.results.iter().find(|r| r.task == rec.task),
-                EngineKind::Mcast => node.mcast.results.iter().find(|r| r.task == rec.task),
-            };
-            rec.result = found.cloned();
+            }
+            if blocked.is_empty() {
+                self.admission.remove(&n);
+            } else {
+                *self.admission.get_mut(&n).unwrap() = blocked;
+            }
         }
     }
 
-    /// Latency of a completed task.
-    pub fn latency_of(&self, task: u32) -> Option<u64> {
-        self.records
-            .iter()
-            .find(|r| r.task == task)
-            .and_then(|r| r.result.as_ref())
+    /// Hand one admitted task to its engine. Chain-based engines get
+    /// their destinations pre-ordered by the `sched::Strategy` here; the
+    /// resolved request moves into the engine by value (no re-clone of
+    /// read/write patterns).
+    fn dispatch(&mut self, idx: usize) {
+        let Pending { read, dests, with_data, drop_offset } =
+            self.records[idx].pending.take().expect("task dispatched twice");
+        let (task, engine, src) =
+            (self.records[idx].task.0, self.records[idx].engine, self.records[idx].src);
+        let dests = if let EngineKind::Torrent(strategy) = engine {
+            let mesh = self.soc.mesh();
+            let (order, ordered) = sched::schedule_pairs(strategy, &mesh, src, dests);
+            self.records[idx].chain_order = Some(order);
+            ordered
+        } else {
+            dests
+        };
+        let now = self.soc.cycle();
+        self.soc.nodes[src.0]
+            .engine_mut(engine)
+            .submit(TaskSpec { task, read, dests, with_data, drop_offset }, now)
+            .expect("request validated at submission");
+    }
+
+    /// Synchronize records with engine state: drain completions and
+    /// release dependency edges. The run modes call this between
+    /// stepping quanta; call it manually after driving `self.soc`
+    /// directly (e.g. `soc.run_until_idle`) so `record`/`latency_of`
+    /// see the results.
+    pub fn collect(&mut self) {
+        self.collect_and_dispatch();
+    }
+
+    /// Drain engine completions into the records; release dependency
+    /// edges and dispatch newly eligible tasks.
+    fn collect_and_dispatch(&mut self) {
+        let mut completed = false;
+        for node in &mut self.soc.nodes {
+            for engine in node.engines_mut() {
+                for res in engine.drain_results() {
+                    match self.index.get(&res.task) {
+                        Some(&i) if self.records[i].result.is_none() => {
+                            self.records[i].result = Some(res);
+                            self.open_tasks -= 1;
+                            completed = true;
+                        }
+                        _ => {
+                            // Engine-internal legs are bookkeeping only;
+                            // anything else (direct read tunnels) is kept
+                            // for the caller.
+                            if res.task & XDMA_SUBTASK_BIT == 0 {
+                                self.orphan_results.push(res);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if completed {
+            self.dispatch_ready();
+        }
+    }
+
+    /// The scheduler loop shared by every run mode: step the SoC one
+    /// quantum at a time (identical stepping to `Soc::run_until_idle`),
+    /// collecting completions and releasing dependencies between quanta.
+    fn run_scheduler(
+        &mut self,
+        max_cycles: u64,
+        label: &'static str,
+        mut done: impl FnMut(&Coordinator) -> bool,
+    ) {
+        let start = self.soc.cycle();
+        let dog = Watchdog::new(max_cycles, label);
+        self.collect_and_dispatch();
+        while !done(self) {
+            self.soc.step_quantum(start, max_cycles);
+            self.collect_and_dispatch();
+            dog.check(self.soc.cycle() - start);
+        }
+    }
+
+    /// Run until every engine and the fabric drain (the quiescence
+    /// drain). Panics via `sim::Watchdog` after `max_cycles` — including
+    /// when a dependency can never be released.
+    pub fn run_to_completion(&mut self, max_cycles: u64) {
+        self.run_scheduler(max_cycles, "soc.quiesce", |c| {
+            c.admission.is_empty() && c.soc.is_idle()
+        });
+    }
+
+    /// Run until every submitted task has completed (trailing fabric
+    /// activity may remain; follow with [`Coordinator::run_to_completion`]
+    /// to drain it).
+    pub fn run_until_all_done(&mut self, max_cycles: u64) {
+        self.run_scheduler(max_cycles, "coordinator.all_done", |c| c.open_tasks == 0);
+    }
+
+    /// Run until `task` completes; other in-flight tasks keep streaming.
+    /// Returns the task's latency.
+    pub fn run_until_complete(&mut self, task: impl Into<TaskId>, max_cycles: u64) -> u64 {
+        let id = task.into();
+        assert!(self.index.contains_key(&id.0), "{id} was never submitted here");
+        self.run_scheduler(max_cycles, "coordinator.task", |c| {
+            c.record(id).is_some_and(|r| r.result.is_some())
+        });
+        self.latency_of(id).expect("loop exits only on completion")
+    }
+
+    // ------------------------------------------------------------------
+    // Queries
+    // ------------------------------------------------------------------
+
+    /// O(1) record lookup.
+    pub fn record(&self, task: impl Into<TaskId>) -> Option<&Record> {
+        self.index.get(&task.into().0).map(|&i| &self.records[i])
+    }
+
+    /// Latency of a completed task. Results still held by an engine
+    /// (not yet drained by a run mode or [`Coordinator::collect`]) are
+    /// visible here too, consistent with [`Coordinator::status`].
+    pub fn latency_of(&self, task: impl Into<TaskId>) -> Option<u64> {
+        let rec = self.record(task)?;
+        if let Some(res) = rec.result.as_ref() {
+            return Some(res.latency());
+        }
+        if rec.pending.is_some() {
+            return None;
+        }
+        self.soc.nodes[rec.src.0]
+            .engine(rec.engine)
+            .peek_result(rec.task.0)
             .map(|res| res.latency())
+    }
+
+    /// Lifecycle status of a task (`None` for ids this coordinator never
+    /// issued).
+    pub fn status(&self, task: impl Into<TaskId>) -> Option<TaskStatus> {
+        let rec = self.record(task)?;
+        if rec.result.is_some() {
+            return Some(TaskStatus::Done);
+        }
+        if rec.pending.is_some() {
+            return Some(TaskStatus::Queued);
+        }
+        let engine = self.soc.nodes[rec.src.0].engine(rec.engine);
+        if engine.peek_result(rec.task.0).is_some() {
+            return Some(TaskStatus::Done);
+        }
+        Some(match engine.phase_of(rec.task.0, self.soc.cycle()) {
+            Some(TaskPhase::Configuring) => TaskStatus::Configuring,
+            // `None` is unreachable for a dispatched, uncompleted task;
+            // report the engine as mid-transfer rather than panicking.
+            Some(TaskPhase::Streaming) | None => TaskStatus::Streaming,
+        })
+    }
+
+    /// Number of submitted tasks not yet completed.
+    pub fn open_tasks(&self) -> usize {
+        self.open_tasks
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::Strategy;
 
     fn coord() -> Coordinator {
         Coordinator::new(SocConfig::custom(3, 3, 64 * 1024))
@@ -248,10 +765,11 @@ mod tests {
         ] {
             let mut c = coord();
             let dests = vec![NodeId(1), NodeId(4), NodeId(8)];
-            let t = c.submit_simple(NodeId(0), &dests, 8 * 1024, engine, false);
+            let t = c.submit_simple(NodeId(0), &dests, 8 * 1024, engine, false).unwrap();
             c.run_to_completion(2_000_000);
             let lat = c.latency_of(t).unwrap_or_else(|| panic!("{engine:?} incomplete"));
             assert!(lat > 0, "{engine:?}");
+            assert_eq!(t.status(&c), TaskStatus::Done);
         }
     }
 
@@ -262,20 +780,16 @@ mod tests {
         let mut c = coord();
         let dests: Vec<NodeId> = (1..9).map(NodeId).collect();
         let bytes = 16 * 1024;
-        let t_chain = c.submit_simple(
-            NodeId(0),
-            &dests,
-            bytes,
-            EngineKind::Torrent(Strategy::Tsp),
-            false,
-        );
+        let t_chain = c
+            .submit_simple(NodeId(0), &dests, bytes, EngineKind::Torrent(Strategy::Tsp), false)
+            .unwrap();
         c.run_to_completion(4_000_000);
         let mut c2 = coord();
-        let t_idma = c2.submit_simple(NodeId(0), &dests, bytes, EngineKind::Idma, false);
+        let t_idma =
+            c2.submit_simple(NodeId(0), &dests, bytes, EngineKind::Idma, false).unwrap();
         c2.run_to_completion(4_000_000);
-        let eta_chain = c.records.iter().find(|r| r.task == t_chain).unwrap().eta().unwrap();
-        let eta_idma =
-            c2.records.iter().find(|r| r.task == t_idma).unwrap().eta().unwrap();
+        let eta_chain = c.record(t_chain).unwrap().eta().unwrap();
+        let eta_idma = c2.record(t_idma).unwrap().eta().unwrap();
         assert!(eta_chain > 2.0, "chainwrite eta {eta_chain}");
         assert!(eta_idma <= 1.05, "idma eta {eta_idma}");
     }
@@ -283,22 +797,196 @@ mod tests {
     #[test]
     fn torrent_records_chain_order() {
         let mut c = coord();
-        let t = c.submit_simple(
-            NodeId(0),
-            &[NodeId(2), NodeId(6)],
-            1024,
-            EngineKind::Torrent(Strategy::Greedy),
-            false,
-        );
-        let rec = c.records.iter().find(|r| r.task == t).unwrap();
+        let t = c
+            .submit_simple(
+                NodeId(0),
+                &[NodeId(2), NodeId(6)],
+                1024,
+                EngineKind::Torrent(Strategy::Greedy),
+                false,
+            )
+            .unwrap();
+        let rec = c.record(t).unwrap();
         assert_eq!(rec.chain_order.as_ref().unwrap().len(), 2);
     }
 
     #[test]
     fn task_ids_are_unique_and_increasing() {
         let mut c = coord();
-        let a = c.submit_simple(NodeId(0), &[NodeId(1)], 64, EngineKind::Idma, false);
-        let b = c.submit_simple(NodeId(4), &[NodeId(5)], 64, EngineKind::Idma, false);
-        assert!(b > a);
+        let a = c.submit_simple(NodeId(0), &[NodeId(1)], 64, EngineKind::Idma, false).unwrap();
+        let b = c.submit_simple(NodeId(4), &[NodeId(5)], 64, EngineKind::Idma, false).unwrap();
+        assert!(b.id() > a.id());
+    }
+
+    #[test]
+    fn empty_destination_set_is_rejected_not_a_panic() {
+        // The Mcast arm used to index req.dests[0] unconditionally.
+        for engine in [EngineKind::Mcast, EngineKind::Idma, EngineKind::Torrent(Strategy::Naive)]
+        {
+            let mut c = coord();
+            let e = c.submit(P2mpRequest::to(&[]).src(NodeId(0)).bytes(64).engine(engine));
+            assert_eq!(e.unwrap_err().kind, SubmitErrorKind::EmptyDestinations, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn unmapped_source_address_is_rejected_not_a_panic() {
+        // submit_auto used to `expect` on the address lookup.
+        let mut c = coord();
+        let read = AffinePattern::contiguous(u64::MAX - 4096, 1024);
+        let dests =
+            vec![(NodeId(1), AffinePattern::contiguous(c.soc.map.base_of(NodeId(1)), 1024))];
+        let e = c.submit_auto(P2mpRequest::to_patterns(dests).read(read));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::UnmappedAddress);
+    }
+
+    #[test]
+    fn mcast_pattern_below_window_is_rejected() {
+        // The Mcast drop offset is pattern base minus window base; a
+        // pattern below the destination's window used to underflow.
+        let mut c = coord();
+        let read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(0)), 1024);
+        let dests = vec![(NodeId(3), AffinePattern::contiguous(0, 1024))];
+        let e = c.submit(
+            P2mpRequest::to_patterns(dests).src(NodeId(0)).read(read).engine(EngineKind::Mcast),
+        );
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::UnmappedAddress);
+    }
+
+    #[test]
+    fn oversized_and_underspecified_requests_are_rejected() {
+        let mut c = coord();
+        let e = c.submit_simple(NodeId(0), &[NodeId(1)], 1 << 30, EngineKind::Idma, false);
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::TooLarge);
+        let e = c.submit(P2mpRequest::to(&[NodeId(1)]).bytes(64));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::Underspecified);
+        let e = c.submit(P2mpRequest::to(&[NodeId(1)]).src(NodeId(0)));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::Underspecified);
+        let e = c.submit(P2mpRequest::to(&[NodeId(1), NodeId(1)]).src(NodeId(0)).bytes(64));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::InvalidDestinations);
+        let e = c.submit(P2mpRequest::to(&[NodeId(0)]).src(NodeId(0)).bytes(64));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::InvalidDestinations);
+    }
+
+    #[test]
+    fn out_of_mesh_nodes_are_rejected_not_a_panic() {
+        // `AddrMap::base_of` asserts; malformed requests must error first.
+        let mut c = coord();
+        let e = c.submit_simple(NodeId(0), &[NodeId(99)], 64, EngineKind::Idma, false);
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::InvalidDestinations);
+        let e = c.submit_simple(NodeId(99), &[NodeId(1)], 64, EngineKind::Idma, false);
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::UnmappedAddress);
+        let read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(0)), 64);
+        let dests = vec![(NodeId(42), AffinePattern::contiguous(0x0, 64))];
+        let e = c.submit(P2mpRequest::to_patterns(dests).src(NodeId(0)).read(read));
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::InvalidDestinations);
+    }
+
+    #[test]
+    fn simple_mode_derives_source_from_read_pattern() {
+        // submit_auto semantics work without .src() in simple mode too.
+        let mut c = coord();
+        let read = AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)), 1024);
+        let t = c
+            .submit(P2mpRequest::to(&[NodeId(1)]).read(read).bytes(1024))
+            .unwrap();
+        assert_eq!(c.record(t).unwrap().src, NodeId(4));
+    }
+
+    #[test]
+    fn results_are_visible_after_driving_the_soc_directly() {
+        // `status`/`latency_of` must agree when the engine still holds
+        // the result; `collect()` then syncs the record.
+        let mut c = coord();
+        let t = c.submit_simple(NodeId(0), &[NodeId(1)], 1024, EngineKind::Idma, false).unwrap();
+        c.soc.run_until_idle(1_000_000);
+        assert_eq!(t.status(&c), TaskStatus::Done);
+        let lat = c.latency_of(t).expect("latency visible before collect");
+        assert!(c.record(t).unwrap().result.is_none());
+        c.collect();
+        assert_eq!(c.record(t).unwrap().result.as_ref().unwrap().latency(), lat);
+        assert_eq!(c.open_tasks(), 0);
+    }
+
+    #[test]
+    fn zero_byte_transfers_are_rejected_not_hung() {
+        // iDMA (and friends) detect completion off in-flight traffic; a
+        // zero-byte job would stall until the watchdog.
+        let mut c = coord();
+        let e = c.submit_simple(NodeId(0), &[NodeId(1)], 0, EngineKind::Idma, false);
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::EmptyTransfer);
+    }
+
+    #[test]
+    fn mcast_rejects_inconsistent_destination_offsets() {
+        // Router replication lands every copy at one shared offset; a
+        // per-destination pattern the engine cannot honor must error,
+        // not silently write elsewhere.
+        let mut c = coord();
+        let base = |n: usize| c.soc.map.base_of(NodeId(n));
+        let read = AffinePattern::contiguous(base(0), 1024);
+        let dests = vec![
+            (NodeId(1), AffinePattern::contiguous(base(1) + 0x100, 1024)),
+            (NodeId(2), AffinePattern::contiguous(base(2) + 0x200, 1024)),
+        ];
+        let e = c.submit(
+            P2mpRequest::to_patterns(dests).src(NodeId(0)).read(read).engine(EngineKind::Mcast),
+        );
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::InvalidDestinations);
+    }
+
+    #[test]
+    fn unknown_dependency_is_rejected() {
+        let mut c = coord();
+        let e = c.submit(
+            P2mpRequest::to(&[NodeId(1)]).src(NodeId(0)).bytes(64).after(&[TaskId(99)]),
+        );
+        assert_eq!(e.unwrap_err().kind, SubmitErrorKind::UnknownDependency);
+    }
+
+    #[test]
+    fn dependency_edges_gate_dispatch_and_release_on_completion() {
+        let mut c = coord();
+        let chain = EngineKind::Torrent(Strategy::Greedy);
+        let a = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, chain, false).unwrap();
+        let b = c
+            .submit(
+                P2mpRequest::to(&[NodeId(8)])
+                    .src(NodeId(4))
+                    .bytes(4096)
+                    .engine(EngineKind::Idma)
+                    .after(&[a]),
+            )
+            .unwrap();
+        assert_ne!(a.status(&c), TaskStatus::Queued, "independent task must dispatch");
+        assert_eq!(b.status(&c), TaskStatus::Queued, "dependent task must wait");
+        let lat_a = c.run_until_complete(a, 1_000_000);
+        assert!(lat_a > 0);
+        c.run_until_all_done(1_000_000);
+        let fin = |t: TaskHandle| c.record(t).unwrap().result.as_ref().unwrap().finished_at;
+        assert!(fin(b) > fin(a), "dependency order violated");
+        assert_eq!(c.open_tasks(), 0);
+    }
+
+    #[test]
+    fn concurrent_tasks_overlap_across_initiators() {
+        // Two independent chains from different initiators must overlap
+        // in time, not serialize.
+        let mut c = Coordinator::new(SocConfig::custom(4, 4, 64 * 1024));
+        let ta = c
+            .submit_simple(NodeId(0), &[NodeId(5), NodeId(6)], 8 * 1024,
+                EngineKind::Torrent(Strategy::Greedy), false)
+            .unwrap();
+        let tb = c
+            .submit_simple(NodeId(15), &[NodeId(9), NodeId(10)], 8 * 1024,
+                EngineKind::Torrent(Strategy::Greedy), false)
+            .unwrap();
+        c.run_until_all_done(1_000_000);
+        let res = |t: TaskHandle| c.record(t).unwrap().result.clone().unwrap();
+        let (ra, rb) = (res(ta), res(tb));
+        assert!(
+            ra.submitted_at < rb.finished_at && rb.submitted_at < ra.finished_at,
+            "tasks did not overlap: {ra:?} {rb:?}"
+        );
     }
 }

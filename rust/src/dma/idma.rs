@@ -17,7 +17,7 @@ use crate::mem::Scratchpad;
 use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
 
 use super::torrent::dse::AffinePattern;
-use super::TaskResult;
+use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
 
 /// Descriptor-processing cycles per issued burst.
 pub const IDMA_DESC_CYCLES: u64 = 2;
@@ -189,5 +189,54 @@ impl Idma {
 impl Active {
     fn total_bytes(&self) -> usize {
         self.task.read.total_bytes() * self.task.dests.len()
+    }
+}
+
+/// Uniform dispatch surface; delegates to the inherent methods above.
+impl Engine for Idma {
+    fn label(&self) -> &'static str {
+        "idma"
+    }
+
+    fn submit(&mut self, spec: TaskSpec, now: u64) -> Result<(), SubmitError> {
+        spec.validate()?;
+        let TaskSpec { task, read, dests, with_data, .. } = spec;
+        Idma::submit(self, IdmaTask { task, read, dests, with_data }, now);
+        Ok(())
+    }
+
+    fn handle(&mut self, pkt: &Packet, _ctx: &mut EngineCtx<'_>, now: u64) -> bool {
+        Idma::handle(self, pkt, now)
+    }
+
+    fn tick(&mut self, ctx: &mut EngineCtx<'_>) {
+        Idma::tick(self, ctx.net, ctx.mem)
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        Idma::next_event(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        Idma::is_idle(self)
+    }
+
+    fn drain_results(&mut self) -> Vec<TaskResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    fn peek_result(&self, task: u32) -> Option<&TaskResult> {
+        self.results.iter().find(|r| r.task == task)
+    }
+
+    fn phase_of(&self, task: u32, _now: u64) -> Option<TaskPhase> {
+        if self.queue.iter().any(|(t, _)| t.task == task) {
+            // Descriptor expansion has not started yet.
+            return Some(TaskPhase::Configuring);
+        }
+        self.active
+            .as_ref()
+            .filter(|a| a.task.task == task)
+            .map(|_| TaskPhase::Streaming)
     }
 }

@@ -18,7 +18,7 @@ use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
 
 use super::torrent::dse::AffinePattern;
 use super::torrent::timing::SEG_BYTES;
-use super::TaskResult;
+use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
 
 /// Router-programming cost model: `BASE + PER_DEST·N + QUAD·N²` cycles.
 /// The quadratic term reflects per-router destination-set table updates
@@ -187,6 +187,62 @@ impl McastEngine {
             a.sent_all = true;
         }
         let _ = FLIT_BYTES;
+    }
+}
+
+/// Uniform dispatch surface; delegates to the inherent methods above.
+/// The write side of a [`TaskSpec`] collapses to the destination node
+/// set plus the shared `drop_offset` — router-replicated streams land at
+/// one window-local offset everywhere (per-destination write *patterns*
+/// are a distributed-DMA capability the ESP baseline lacks).
+impl Engine for McastEngine {
+    fn label(&self) -> &'static str {
+        "mcast"
+    }
+
+    fn submit(&mut self, spec: TaskSpec, now: u64) -> Result<(), SubmitError> {
+        spec.validate()?;
+        let TaskSpec { task, read, dests, with_data, drop_offset } = spec;
+        let dests = dests.into_iter().map(|(n, _)| n).collect();
+        McastEngine::submit(self, McastTask { task, read, dests, drop_offset, with_data }, now);
+        Ok(())
+    }
+
+    fn handle(&mut self, pkt: &Packet, _ctx: &mut EngineCtx<'_>, now: u64) -> bool {
+        McastEngine::handle(self, pkt, now)
+    }
+
+    fn tick(&mut self, ctx: &mut EngineCtx<'_>) {
+        McastEngine::tick(self, ctx.net, ctx.mem)
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        McastEngine::next_event(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        McastEngine::is_idle(self)
+    }
+
+    fn drain_results(&mut self) -> Vec<TaskResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    fn peek_result(&self, task: u32) -> Option<&TaskResult> {
+        self.results.iter().find(|r| r.task == task)
+    }
+
+    fn phase_of(&self, task: u32, now: u64) -> Option<TaskPhase> {
+        if self.queue.iter().any(|(t, _)| t.task == task) {
+            return Some(TaskPhase::Configuring);
+        }
+        let a = self.active.as_ref().filter(|a| a.task.task == task)?;
+        Some(if now < a.cfg_done_at {
+            // Router destination-set programming in progress.
+            TaskPhase::Configuring
+        } else {
+            TaskPhase::Streaming
+        })
     }
 }
 

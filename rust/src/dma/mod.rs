@@ -1,5 +1,5 @@
 //! Application-layer DMA engines — the paper's contribution and its two
-//! baselines.
+//! baselines — behind one object-safe [`Engine`] trait.
 //!
 //! * [`torrent`] — the Torrent distributed DMA: DSE (ND-affine address
 //!   generation), data switch (stream duplication / cut-through
@@ -12,13 +12,54 @@
 //!   descriptor overhead on non-contiguous patterns.
 //! * [`mcast`] — source engine for the ESP-style network-layer multicast
 //!   baseline (replication in the routers, §II-B).
+//!
+//! The [`Engine`] trait is the extension point the XDMA paper
+//! (arXiv 2508.08396) argues for: the coordinator and the SoC event loop
+//! dispatch uniformly through it (`submit` / `handle` / `tick` /
+//! `next_event` / `drain_results`), so adding a fifth P2MP mechanism
+//! means implementing the trait and adding one [`EngineKind`] arm — no
+//! caller changes.
 
 pub mod idma;
 pub mod mcast;
 pub mod torrent;
 pub mod xdma;
 
-pub use torrent::{ChainTask, ChainDest, Torrent};
+pub use torrent::{ChainDest, ChainTask, Torrent};
+
+use crate::mem::Scratchpad;
+use crate::noc::{Network, NodeId, Packet};
+use crate::sched::Strategy;
+use anyhow::anyhow;
+use std::fmt;
+
+use self::torrent::dse::AffinePattern;
+
+/// Which engine serves a P2MP request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Torrent Chainwrite with the given chain-order strategy.
+    Torrent(Strategy),
+    /// iDMA: repeated unicast, sequential.
+    Idma,
+    /// XDMA: software P2MP over the distributed frontend.
+    Xdma,
+    /// ESP-style network-layer multicast.
+    Mcast,
+}
+
+impl EngineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Torrent(Strategy::Naive) => "torrent/naive",
+            EngineKind::Torrent(Strategy::Greedy) => "torrent/greedy",
+            EngineKind::Torrent(Strategy::Tsp) => "torrent/tsp",
+            EngineKind::Idma => "idma",
+            EngineKind::Xdma => "xdma",
+            EngineKind::Mcast => "mcast",
+        }
+    }
+}
 
 /// Completion record every engine produces for a finished task.
 #[derive(Debug, Clone)]
@@ -38,5 +79,225 @@ pub struct TaskResult {
 impl TaskResult {
     pub fn latency(&self) -> u64 {
         self.finished_at - self.submitted_at
+    }
+}
+
+/// Engine-agnostic description of one P2MP job, accepted by every
+/// [`Engine`]. For chain-based engines `dests` is already in chain order
+/// (the coordinator applies a `sched::Strategy` before dispatch).
+#[derive(Debug)]
+pub struct TaskSpec {
+    pub task: u32,
+    /// Source DSE read pattern (in the initiator's scratchpad).
+    pub read: AffinePattern,
+    /// Destinations with their local write patterns.
+    pub dests: Vec<(NodeId, AffinePattern)>,
+    /// Move real bytes (integrity-checked runs) or phantom timing-only.
+    pub with_data: bool,
+    /// Window-local drop offset (network-multicast engines; zero
+    /// otherwise — router-replicated streams land at one shared offset,
+    /// patterned per-destination writes are a distributed-DMA capability).
+    pub drop_offset: u64,
+}
+
+impl TaskSpec {
+    /// Shared submission validation: a non-empty destination set whose
+    /// write patterns each cover exactly the read stream.
+    pub fn validate(&self) -> Result<(), SubmitError> {
+        if self.dests.is_empty() {
+            return Err(SubmitError::new(
+                SubmitErrorKind::EmptyDestinations,
+                anyhow!("task {} has an empty destination set", self.task),
+            ));
+        }
+        let total = self.read.total_bytes();
+        if total == 0 {
+            // Engines signal completion off in-flight traffic; a job
+            // that never injects anything would hang until the watchdog.
+            return Err(SubmitError::new(
+                SubmitErrorKind::EmptyTransfer,
+                anyhow!("task {} moves zero bytes", self.task),
+            ));
+        }
+        for (node, pattern) in &self.dests {
+            if pattern.total_bytes() != total {
+                return Err(SubmitError::new(
+                    SubmitErrorKind::SizeMismatch,
+                    anyhow!(
+                        "task {}: destination {:?} pattern covers {} B, read covers {} B",
+                        self.task,
+                        node,
+                        pattern.total_bytes(),
+                        total
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a submission was rejected. The coordinator and the engines return
+/// this instead of panicking on malformed requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitErrorKind {
+    /// The destination set is empty.
+    EmptyDestinations,
+    /// The request moves zero bytes (engines detect completion off
+    /// in-flight traffic, so an empty job would never finish).
+    EmptyTransfer,
+    /// The request is missing a required field (source, read pattern or
+    /// transfer size, depending on the construction mode).
+    Underspecified,
+    /// An address does not resolve inside the SoC address map.
+    UnmappedAddress,
+    /// Destinations repeat a node, include the source, or name a node
+    /// outside the mesh.
+    InvalidDestinations,
+    /// A destination write pattern does not cover the read stream.
+    SizeMismatch,
+    /// A simple-mode transfer does not fit half a scratchpad window.
+    TooLarge,
+    /// A dependency references a task id this coordinator never issued.
+    UnknownDependency,
+}
+
+/// Submission failure: a stable [`SubmitErrorKind`] for callers to match
+/// on plus a human-readable message (built with the vendored `anyhow`).
+#[derive(Debug)]
+pub struct SubmitError {
+    pub kind: SubmitErrorKind,
+    msg: String,
+}
+
+impl SubmitError {
+    pub fn new(kind: SubmitErrorKind, err: anyhow::Error) -> Self {
+        SubmitError { kind, msg: err.to_string() }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}: {}", self.kind, self.msg)
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Coarse protocol phase of an in-flight task (drives
+/// `coordinator::TaskStatus`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskPhase {
+    /// Queued at the engine, decoding descriptors, or programming the
+    /// fabric (ESP router set, Chainwrite cfg/grant round trip).
+    Configuring,
+    /// Data (or finish signalling) is moving.
+    Streaming,
+}
+
+/// Per-call context handed to an engine: the fabric and the node's local
+/// scratchpad. The borrows live only for the duration of one `handle` /
+/// `tick` call, so the SoC can rebuild the context per node per cycle.
+pub struct EngineCtx<'a> {
+    pub net: &'a mut Network,
+    pub mem: &'a mut Scratchpad,
+}
+
+/// The unified application-layer DMA engine interface.
+///
+/// Implemented by [`Torrent`], [`idma::Idma`], [`xdma::Xdma`] and
+/// [`mcast::McastEngine`]; `soc::Soc` ticks and dispatches packets
+/// through it and `coordinator::Coordinator` submits and collects
+/// through it, so neither contains per-engine control flow.
+///
+/// Engines with private sub-transfers (XDMA's software-P2MP legs) hand
+/// them to the node's Torrent frontend through the *frontend-leg* hooks:
+/// after each engine's `tick` the SoC collects `take_frontend_legs` and
+/// offers the batch to subsequent engines via `accept_frontend_legs` —
+/// the Torrent (ticked right after the XDMA) drains it the same cycle,
+/// so leg timing is identical to a direct submission.
+pub trait Engine {
+    /// Short diagnostic name ("torrent", "idma", ...).
+    fn label(&self) -> &'static str;
+
+    /// Accept a validated P2MP job. Returns an error instead of
+    /// panicking on malformed specs (empty destination sets, pattern
+    /// size mismatches).
+    fn submit(&mut self, spec: TaskSpec, now: u64) -> Result<(), SubmitError>;
+
+    /// Consume a packet addressed to this engine. Every engine of the
+    /// node sees every delivered packet; return `true` only for traffic
+    /// this engine owns (an eavesdropping engine returns `false`).
+    fn handle(&mut self, pkt: &Packet, ctx: &mut EngineCtx<'_>, now: u64) -> bool;
+
+    /// Advance one cycle.
+    fn tick(&mut self, ctx: &mut EngineCtx<'_>);
+
+    /// Activity hint — the `sim::Clocked::next_event` contract: earliest
+    /// cycle at which ticking this engine changes observable state;
+    /// `None` = idle or purely message-driven.
+    fn next_event(&self, now: u64) -> Option<u64>;
+
+    /// True when nothing is queued or in flight on this engine.
+    fn is_idle(&self) -> bool;
+
+    /// Remove and return all completion records accumulated so far.
+    fn drain_results(&mut self) -> Vec<TaskResult>;
+
+    /// Non-destructive lookup of a completion record still held by the
+    /// engine (a task can be `Done` before the coordinator drains it).
+    fn peek_result(&self, task: u32) -> Option<&TaskResult>;
+
+    /// Coarse phase of an in-flight task, `None` if unknown here.
+    fn phase_of(&self, task: u32, now: u64) -> Option<TaskPhase>;
+
+    /// Chain legs this engine wants the node's Torrent frontend to run.
+    /// Default: none.
+    fn take_frontend_legs(&mut self) -> Vec<(ChainTask, u64)> {
+        Vec::new()
+    }
+
+    /// Offer relayed frontend legs to this engine; the chain frontend
+    /// drains the vector into its queue. Default: ignore.
+    fn accept_frontend_legs(&mut self, _legs: &mut Vec<(ChainTask, u64)>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_spec_rejects_empty_destinations() {
+        let spec = TaskSpec {
+            task: 1,
+            read: AffinePattern::contiguous(0, 64),
+            dests: vec![],
+            with_data: false,
+            drop_offset: 0,
+        };
+        let err = spec.validate().unwrap_err();
+        assert_eq!(err.kind, SubmitErrorKind::EmptyDestinations);
+    }
+
+    #[test]
+    fn task_spec_rejects_size_mismatch() {
+        let spec = TaskSpec {
+            task: 2,
+            read: AffinePattern::contiguous(0, 64),
+            dests: vec![(NodeId(1), AffinePattern::contiguous(0x1000, 128))],
+            with_data: false,
+            drop_offset: 0,
+        };
+        let err = spec.validate().unwrap_err();
+        assert_eq!(err.kind, SubmitErrorKind::SizeMismatch);
+        assert!(err.to_string().contains("SizeMismatch"), "{err}");
+    }
+
+    #[test]
+    fn engine_kind_labels_are_stable() {
+        assert_eq!(EngineKind::Torrent(Strategy::Tsp).label(), "torrent/tsp");
+        assert_eq!(EngineKind::Idma.label(), "idma");
+        assert_eq!(EngineKind::Xdma.label(), "xdma");
+        assert_eq!(EngineKind::Mcast.label(), "mcast");
     }
 }

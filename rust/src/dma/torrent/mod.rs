@@ -36,7 +36,7 @@ use crate::noc::{Gate, Message, Network, NodeId, Packet, PacketId, FLIT_BYTES};
 use self::cfg::{CfgType, TorrentCfg};
 use self::dse::AffinePattern;
 use self::timing::*;
-use super::TaskResult;
+use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
 
 /// One Chainwrite destination: node + local DSE write pattern.
 #[derive(Debug, Clone)]
@@ -642,6 +642,69 @@ impl Torrent {
                 });
                 self.stats.tasks_completed += 1;
             }
+        }
+    }
+}
+
+/// Uniform dispatch surface. The inherent methods above keep their
+/// context-typed signatures (unit tests drive them directly); the trait
+/// impl delegates, converting [`TaskSpec`] destinations — already in
+/// chain order, the coordinator applies the `sched::Strategy` — into
+/// [`ChainDest`]s.
+impl Engine for Torrent {
+    fn label(&self) -> &'static str {
+        "torrent"
+    }
+
+    fn submit(&mut self, spec: TaskSpec, now: u64) -> Result<(), SubmitError> {
+        spec.validate()?;
+        let TaskSpec { task, read, dests, with_data, .. } = spec;
+        let dests = dests
+            .into_iter()
+            .map(|(node, pattern)| ChainDest { node, pattern })
+            .collect();
+        Torrent::submit(self, ChainTask { task, read, dests, with_data }, now);
+        Ok(())
+    }
+
+    fn handle(&mut self, pkt: &Packet, ctx: &mut EngineCtx<'_>, now: u64) -> bool {
+        Torrent::handle(self, pkt, ctx.mem, now)
+    }
+
+    fn tick(&mut self, ctx: &mut EngineCtx<'_>) {
+        Torrent::tick(self, ctx.net, ctx.mem)
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        Torrent::next_event(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        Torrent::is_idle(self)
+    }
+
+    fn drain_results(&mut self) -> Vec<TaskResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    fn peek_result(&self, task: u32) -> Option<&TaskResult> {
+        self.results.iter().find(|r| r.task == task)
+    }
+
+    fn phase_of(&self, task: u32, _now: u64) -> Option<TaskPhase> {
+        if self.queue.iter().any(|(t, _)| t.task == task) {
+            return Some(TaskPhase::Configuring);
+        }
+        let init = self.active.as_ref().filter(|i| i.task.task == task)?;
+        Some(match init.phase {
+            InitPhase::Dispatch { .. } | InitPhase::WaitGrant => TaskPhase::Configuring,
+            InitPhase::SendData { .. } | InitPhase::WaitFinish => TaskPhase::Streaming,
+        })
+    }
+
+    fn accept_frontend_legs(&mut self, legs: &mut Vec<(ChainTask, u64)>) {
+        for (task, at) in legs.drain(..) {
+            Torrent::submit(self, task, at);
         }
     }
 }

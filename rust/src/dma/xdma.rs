@@ -9,16 +9,27 @@
 //! and the per-transfer handshake across the whole destination set.
 //!
 //! Implementation: XDMA *is* a P2P-only Torrent frontend, so this engine
-//! drives the node's [`Torrent`] with single-destination chain tasks, one
-//! at a time.
+//! drives the node's [`Torrent`](super::Torrent) with single-destination
+//! chain tasks, one at a time. The coupling is fully message-shaped: each leg is
+//! relayed through the SoC via [`Engine::take_frontend_legs`] (the
+//! frontend drains it the same cycle, so leg timing equals a direct
+//! submission), and leg completion is observed by eavesdropping the
+//! `TorrentFinish` the frontend receives — no direct borrow of the
+//! sibling engine.
 
 use std::collections::VecDeque;
 
-use crate::noc::NodeId;
+use crate::noc::{Message, NodeId, Packet};
 
 use super::torrent::dse::AffinePattern;
-use super::torrent::{ChainDest, ChainTask, Torrent};
-use super::TaskResult;
+use super::torrent::{ChainDest, ChainTask};
+use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
+
+/// High bit tagging XDMA-internal sub-transfers, so leg ids never
+/// collide with coordinator-assigned task ids (the coordinator drops
+/// drained results carrying this tag instead of treating them as
+/// orphaned tasks).
+pub const XDMA_SUBTASK_BIT: u32 = 0x8000_0000;
 
 /// A software-P2MP job.
 #[derive(Debug, Clone)]
@@ -45,14 +56,24 @@ pub struct Xdma {
     queue: VecDeque<(XdmaTask, u64)>,
     active: Option<Active>,
     pub results: Vec<TaskResult>,
-    /// Sub-task id space: high bit tags XDMA-internal transfers so they
-    /// never collide with coordinator-assigned Chainwrite ids.
+    /// Sub-task id space, tagged with [`XDMA_SUBTASK_BIT`].
     next_subtask: u32,
+    /// Legs awaiting relay to the node's Torrent frontend. The SoC
+    /// drains this between this engine's tick and the frontend's, so a
+    /// leg starts the same cycle it was emitted.
+    outbox: Vec<(ChainTask, u64)>,
 }
 
 impl Xdma {
     pub fn new(node: NodeId) -> Self {
-        Xdma { node, queue: VecDeque::new(), active: None, results: Vec::new(), next_subtask: 0 }
+        Xdma {
+            node,
+            queue: VecDeque::new(),
+            active: None,
+            results: Vec::new(),
+            next_subtask: 0,
+            outbox: Vec::new(),
+        }
     }
 
     pub fn submit(&mut self, task: XdmaTask, now: u64) {
@@ -61,7 +82,7 @@ impl Xdma {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.active.is_none() && self.queue.is_empty()
+        self.active.is_none() && self.queue.is_empty() && self.outbox.is_empty()
     }
 
     /// Activity hint (the `sim::Clocked::next_event` contract). An
@@ -77,9 +98,25 @@ impl Xdma {
         }
     }
 
-    /// Drive the node's Torrent frontend. Call once per cycle *before*
-    /// the Torrent's own tick.
-    pub fn tick(&mut self, torrent: &mut Torrent, now: u64) {
+    /// Eavesdrop the frontend's finish signalling: a `TorrentFinish` for
+    /// the in-flight leg id marks the leg complete. Returns `false`
+    /// always — the Torrent frontend owns (and consumes) the message.
+    pub fn handle(&mut self, pkt: &Packet, _now: u64) -> bool {
+        if let Message::TorrentFinish { task } = pkt.msg {
+            if let Some(a) = self.active.as_mut() {
+                if a.inflight == Some(task) {
+                    a.inflight = None;
+                }
+            }
+        }
+        false
+    }
+
+    /// Per-cycle logic: pop the queue, retire completed jobs, emit the
+    /// next P2P leg into the outbox. Call once per cycle *before* the
+    /// node's Torrent tick, then drain [`Xdma::take_frontend_legs`] into
+    /// the frontend.
+    pub fn tick(&mut self, now: u64) {
         if self.active.is_none() {
             if let Some((task, submitted_at)) = self.queue.pop_front() {
                 self.active = Some(Active {
@@ -91,40 +128,91 @@ impl Xdma {
             }
         }
         let Some(a) = self.active.as_mut() else { return };
+        if a.inflight.is_some() {
+            return;
+        }
+        if a.next_dest == a.task.dests.len() {
+            // All legs done.
+            self.results.push(TaskResult {
+                task: a.task.task,
+                submitted_at: a.submitted_at,
+                finished_at: now,
+                bytes: a.task.read.total_bytes(),
+                n_dests: a.task.dests.len(),
+            });
+            self.active = None;
+            return;
+        }
+        let (node, pattern) = a.task.dests[a.next_dest].clone();
+        let sub = XDMA_SUBTASK_BIT | self.next_subtask;
+        self.next_subtask += 1;
+        self.outbox.push((
+            ChainTask {
+                task: sub,
+                read: a.task.read.clone(),
+                dests: vec![ChainDest { node, pattern }],
+                with_data: a.task.with_data,
+            },
+            now,
+        ));
+        a.inflight = Some(sub);
+        a.next_dest += 1;
+    }
 
-        // Completion of the in-flight P2P leg?
-        if let Some(sub) = a.inflight {
-            if torrent.results.iter().any(|r| r.task == sub) {
-                a.inflight = None;
-            }
+    /// Drain legs emitted by [`Xdma::tick`] for the Torrent frontend.
+    pub fn take_frontend_legs(&mut self) -> Vec<(ChainTask, u64)> {
+        std::mem::take(&mut self.outbox)
+    }
+}
+
+/// Uniform dispatch surface; delegates to the inherent methods above.
+impl Engine for Xdma {
+    fn label(&self) -> &'static str {
+        "xdma"
+    }
+
+    fn submit(&mut self, spec: TaskSpec, now: u64) -> Result<(), SubmitError> {
+        spec.validate()?;
+        let TaskSpec { task, read, dests, with_data, .. } = spec;
+        Xdma::submit(self, XdmaTask { task, read, dests, with_data }, now);
+        Ok(())
+    }
+
+    fn handle(&mut self, pkt: &Packet, _ctx: &mut EngineCtx<'_>, now: u64) -> bool {
+        Xdma::handle(self, pkt, now)
+    }
+
+    fn tick(&mut self, ctx: &mut EngineCtx<'_>) {
+        Xdma::tick(self, ctx.net.cycle)
+    }
+
+    fn next_event(&self, now: u64) -> Option<u64> {
+        Xdma::next_event(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        Xdma::is_idle(self)
+    }
+
+    fn drain_results(&mut self) -> Vec<TaskResult> {
+        std::mem::take(&mut self.results)
+    }
+
+    fn peek_result(&self, task: u32) -> Option<&TaskResult> {
+        self.results.iter().find(|r| r.task == task)
+    }
+
+    fn phase_of(&self, task: u32, _now: u64) -> Option<TaskPhase> {
+        if self.queue.iter().any(|(t, _)| t.task == task) {
+            return Some(TaskPhase::Configuring);
         }
-        if a.inflight.is_none() {
-            if a.next_dest == a.task.dests.len() {
-                // All legs done.
-                self.results.push(TaskResult {
-                    task: a.task.task,
-                    submitted_at: a.submitted_at,
-                    finished_at: now,
-                    bytes: a.task.read.total_bytes(),
-                    n_dests: a.task.dests.len(),
-                });
-                self.active = None;
-                return;
-            }
-            let (node, pattern) = a.task.dests[a.next_dest].clone();
-            let sub = 0x8000_0000 | self.next_subtask;
-            self.next_subtask += 1;
-            torrent.submit(
-                ChainTask {
-                    task: sub,
-                    read: a.task.read.clone(),
-                    dests: vec![ChainDest { node, pattern }],
-                    with_data: a.task.with_data,
-                },
-                now,
-            );
-            a.inflight = Some(sub);
-            a.next_dest += 1;
-        }
+        self.active
+            .as_ref()
+            .filter(|a| a.task.task == task)
+            .map(|_| TaskPhase::Streaming)
+    }
+
+    fn take_frontend_legs(&mut self) -> Vec<(ChainTask, u64)> {
+        Xdma::take_frontend_legs(self)
     }
 }

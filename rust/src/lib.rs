@@ -60,22 +60,27 @@
 //!
 //! ## Example: run a P2MP transfer on the cycle simulator
 //!
+//! Requests are built fluently, submission is fallible and returns a
+//! typed handle, and tasks can depend on each other (`.after`) — see
+//! [`coordinator`] and `examples/batch_pipeline.rs` for dependency DAGs:
+//!
 //! ```
-//! use torrent::coordinator::{Coordinator, EngineKind};
+//! use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
 //! use torrent::noc::NodeId;
 //! use torrent::sched::Strategy;
 //! use torrent::soc::SocConfig;
 //!
 //! let mut c = Coordinator::new(SocConfig::custom(3, 3, 64 * 1024));
-//! let task = c.submit_simple(
-//!     NodeId(0),                           // initiator
-//!     &[NodeId(1), NodeId(4)],             // destinations
-//!     4096,                                // bytes
-//!     EngineKind::Torrent(Strategy::Greedy),
-//!     false,                               // timing-only (no payload bytes)
-//! );
-//! c.run_to_completion(1_000_000);
-//! assert!(c.latency_of(task).is_some());
+//! let task = c
+//!     .submit(
+//!         P2mpRequest::to(&[NodeId(1), NodeId(4)]) // destinations
+//!             .src(NodeId(0))                      // initiator
+//!             .bytes(4096)
+//!             .engine(EngineKind::Torrent(Strategy::Greedy)),
+//!     )
+//!     .expect("valid request");
+//! let latency = c.run_until_complete(task, 1_000_000);
+//! assert!(latency > 0);
 //! ```
 
 pub mod analysis;

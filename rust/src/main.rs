@@ -106,9 +106,15 @@ fn run_custom(args: &Args) {
         c.soc.nodes[0].mem.write(base, &bytes);
     }
     let dests: Vec<NodeId> = (1..=n_dests).map(NodeId).collect();
-    let task = c.submit_simple(NodeId(0), &dests, size_kb * 1024, engine, with_data);
+    let task = match c.submit_simple(NodeId(0), &dests, size_kb * 1024, engine, with_data) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("invalid request: {e}");
+            std::process::exit(2);
+        }
+    };
     c.run_to_completion(1_000_000_000);
-    let rec = c.records.iter().find(|r| r.task == task).unwrap();
+    let rec = c.record(task).unwrap();
     let res = rec.result.as_ref().expect("completed");
     println!(
         "{} {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",

@@ -33,9 +33,53 @@ pub fn schedule(strategy: Strategy, mesh: &Mesh, src: NodeId, dests: &[NodeId]) 
     }
 }
 
+/// [`schedule`] lifted to keyed payloads (write patterns, descriptors):
+/// returns the visit order plus the `(node, payload)` pairs permuted
+/// into that order. The single chain-ordering path shared by
+/// `Soc::chainwrite` and the coordinator's dispatcher.
+pub fn schedule_pairs<T>(
+    strategy: Strategy,
+    mesh: &Mesh,
+    src: NodeId,
+    dests: Vec<(NodeId, T)>,
+) -> (Vec<NodeId>, Vec<(NodeId, T)>) {
+    let nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
+    let order = schedule(strategy, mesh, src, &nodes);
+    let mut slots: Vec<Option<(NodeId, T)>> = dests.into_iter().map(Some).collect();
+    let ordered = order
+        .iter()
+        .map(|n| {
+            slots
+                .iter_mut()
+                .find_map(|s| match s {
+                    Some((d, _)) if d == n => s.take(),
+                    _ => None,
+                })
+                .expect("scheduled order permutes the destination set")
+        })
+        .collect();
+    (order, ordered)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_pairs_keeps_payloads_with_their_nodes() {
+        let m = Mesh::new(4, 4);
+        let dests: Vec<(NodeId, &str)> =
+            vec![(NodeId(5), "five"), (NodeId(10), "ten"), (NodeId(3), "three")];
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+            let (order, ordered) = schedule_pairs(s, &m, NodeId(0), dests.clone());
+            assert_eq!(order.len(), dests.len(), "{s:?}");
+            for ((n, payload), o) in ordered.iter().zip(&order) {
+                assert_eq!(n, o, "{s:?} pair order must match the visit order");
+                let want = dests.iter().find(|(d, _)| d == n).unwrap().1;
+                assert_eq!(*payload, want, "{s:?} payload moved to the wrong node");
+            }
+        }
+    }
 
     #[test]
     fn schedule_dispatches_all_strategies() {

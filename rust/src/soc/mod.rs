@@ -20,10 +20,10 @@ use crate::dma::idma::Idma;
 use crate::dma::mcast::{McastEngine, McastSink};
 use crate::dma::torrent::dse::AffinePattern;
 use crate::dma::torrent::{ChainDest, ChainTask, Torrent};
-use crate::dma::TaskResult;
+use crate::dma::{Engine, EngineCtx, EngineKind, TaskResult};
 use crate::mem::{AddrMap, Scratchpad};
 use crate::noc::{Mesh, Network, NodeId};
-use crate::sched::{schedule, Strategy};
+use crate::sched::{schedule_pairs, Strategy};
 use crate::sim::{StepMode, Watchdog};
 
 pub use config::SocConfig;
@@ -37,6 +37,42 @@ pub struct SocNode {
     pub mcast_sink: McastSink,
     pub slave: AxiSlave,
     pub mem: Scratchpad,
+}
+
+impl SocNode {
+    /// The node's four P2MP engines as [`Engine`] trait objects, in the
+    /// deterministic dispatch order the event loop uses. XDMA precedes
+    /// the Torrent frontend: chain legs it emits are offered to the
+    /// engines ticked after it, so a leg starts the same cycle.
+    pub fn engines(&self) -> [&dyn Engine; 4] {
+        [&self.xdma, &self.torrent, &self.idma, &self.mcast]
+    }
+
+    /// Mutable form of [`SocNode::engines`], same order.
+    pub fn engines_mut(&mut self) -> [&mut dyn Engine; 4] {
+        [&mut self.xdma, &mut self.torrent, &mut self.idma, &mut self.mcast]
+    }
+
+    /// The engine serving `kind` — the single `EngineKind` → engine
+    /// mapping in the codebase; everything else dispatches uniformly.
+    pub fn engine(&self, kind: EngineKind) -> &dyn Engine {
+        match kind {
+            EngineKind::Torrent(_) => &self.torrent,
+            EngineKind::Idma => &self.idma,
+            EngineKind::Xdma => &self.xdma,
+            EngineKind::Mcast => &self.mcast,
+        }
+    }
+
+    /// Mutable form of [`SocNode::engine`].
+    pub fn engine_mut(&mut self, kind: EngineKind) -> &mut dyn Engine {
+        match kind {
+            EngineKind::Torrent(_) => &mut self.torrent,
+            EngineKind::Idma => &mut self.idma,
+            EngineKind::Xdma => &mut self.xdma,
+            EngineKind::Mcast => &mut self.mcast,
+        }
+    }
 }
 
 /// The simulated SoC.
@@ -98,26 +134,48 @@ impl Soc {
     /// Advance one cycle: deliver inboxes, tick engines, tick the fabric.
     pub fn tick(&mut self) {
         let now = self.net.cycle;
-        // 1. Dispatch delivered packets to the owning component.
+        // 1. Dispatch delivered packets: every engine sees every packet
+        //    (uniform dispatch through `dma::Engine`; owners consume,
+        //    eavesdroppers return false), then the multicast sink and
+        //    the AXI slave get their turn.
         for i in 0..self.nodes.len() {
             while let Some(pkt) = self.net.recv(NodeId(i)) {
-                let node = &mut self.nodes[i];
-                let consumed = node.torrent.handle(&pkt, &mut node.mem, now)
-                    || node.idma.handle(&pkt, now)
-                    || node.mcast.handle(&pkt, now)
-                    || node.mcast_sink.handle(NodeId(i), &pkt, &mut node.mem, &mut self.net)
-                    || node.slave.handle(NodeId(i), &pkt, &mut node.mem, now);
+                let SocNode { torrent, idma, xdma, mcast, mcast_sink, slave, mem } =
+                    &mut self.nodes[i];
+                let mut consumed = false;
+                {
+                    let mut ctx = EngineCtx { net: &mut self.net, mem: &mut *mem };
+                    let engines: [&mut dyn Engine; 4] =
+                        [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
+                    for e in engines {
+                        consumed |= e.handle(&pkt, &mut ctx, now);
+                    }
+                }
+                consumed = consumed
+                    || mcast_sink.handle(NodeId(i), &pkt, mem, &mut self.net)
+                    || slave.handle(NodeId(i), &pkt, mem, now);
                 assert!(consumed, "undeliverable packet at node {i}: {:?}", pkt.msg);
             }
         }
-        // 2. Engine logic.
+        // 2. Engine logic, uniformly through the trait. Frontend legs
+        //    emitted by one engine (XDMA's P2P sub-transfers) are offered
+        //    to the engines ticked after it; the Torrent frontend drains
+        //    them before its own tick, so legs start the same cycle.
         for i in 0..self.nodes.len() {
-            let node = &mut self.nodes[i];
-            node.xdma.tick(&mut node.torrent, now);
-            node.torrent.tick(&mut self.net, &mut node.mem);
-            node.idma.tick(&mut self.net, &mut node.mem);
-            node.mcast.tick(&mut self.net, &mut node.mem);
-            node.slave.tick(NodeId(i), &mut self.net);
+            let SocNode { torrent, idma, xdma, mcast, slave, mem, .. } = &mut self.nodes[i];
+            let mut legs: Vec<(ChainTask, u64)> = Vec::new();
+            {
+                let mut ctx = EngineCtx { net: &mut self.net, mem: &mut *mem };
+                let engines: [&mut dyn Engine; 4] =
+                    [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
+                for e in engines {
+                    e.accept_frontend_legs(&mut legs);
+                    e.tick(&mut ctx);
+                    legs.extend(e.take_frontend_legs());
+                }
+            }
+            debug_assert!(legs.is_empty(), "frontend legs left unclaimed at node {i}");
+            slave.tick(NodeId(i), &mut self.net);
         }
         // 3. Fabric.
         self.net.tick();
@@ -128,11 +186,7 @@ impl Soc {
         self.net.is_idle()
             && self.net.inboxes_empty()
             && self.nodes.iter().all(|n| {
-                n.torrent.is_idle()
-                    && n.idma.is_idle()
-                    && n.xdma.is_idle()
-                    && n.mcast.is_idle()
-                    && n.slave.is_idle()
+                n.engines().into_iter().all(|e| e.is_idle()) && n.slave.is_idle()
             })
     }
 
@@ -154,10 +208,9 @@ impl Soc {
             }
         };
         for n in &self.nodes {
-            fold(n.torrent.next_event(now));
-            fold(n.idma.next_event(now));
-            fold(n.xdma.next_event(now));
-            fold(n.mcast.next_event(now));
+            for e in n.engines() {
+                fold(e.next_event(now));
+            }
             fold(n.slave.next_event(now));
         }
         min
@@ -187,34 +240,28 @@ impl Soc {
         }
     }
 
+    /// One scheduling quantum of [`Soc::run_until_idle`]: an event-driven
+    /// fast-forward (when [`Soc::step_mode`] allows it) followed by
+    /// exactly one tick. Exposed so the coordinator's scheduler loop can
+    /// interleave task dispatch/collection with stepping while keeping
+    /// cycle counts bit-identical to an uninterrupted `run_until_idle`.
+    pub fn step_quantum(&mut self, start: u64, max_cycles: u64) {
+        if self.step_mode == StepMode::EventDriven {
+            self.fast_forward(start, max_cycles);
+        }
+        self.tick();
+        self.ticks_executed += 1;
+    }
+
     /// Run until quiescent; panics (watchdog) after `max_cycles`. Steps
     /// according to [`Soc::step_mode`]; both modes report bit-identical
     /// cycle counts — event-driven stepping only skips ticks that are
     /// provable no-ops.
     pub fn run_until_idle(&mut self, max_cycles: u64) -> u64 {
-        if self.step_mode == StepMode::FullTick {
-            return self.run_until_idle_full_tick(max_cycles);
-        }
         let start = self.net.cycle;
         let dog = Watchdog::new(max_cycles, "soc.quiesce");
         while !self.is_idle() {
-            self.fast_forward(start, max_cycles);
-            self.tick();
-            self.ticks_executed += 1;
-            dog.check(self.net.cycle - start);
-        }
-        self.net.cycle - start
-    }
-
-    /// The reference stepper: tick every component on every cycle. Kept
-    /// callable in all modes as the differential baseline the equivalence
-    /// property test (`rust/tests/stepping.rs`) runs against.
-    pub fn run_until_idle_full_tick(&mut self, max_cycles: u64) -> u64 {
-        let start = self.net.cycle;
-        let dog = Watchdog::new(max_cycles, "soc.quiesce");
-        while !self.is_idle() {
-            self.tick();
-            self.ticks_executed += 1;
+            self.step_quantum(start, max_cycles);
             dog.check(self.net.cycle - start);
         }
         self.net.cycle - start
@@ -232,14 +279,10 @@ impl Soc {
         with_data: bool,
     ) -> Vec<NodeId> {
         let mesh = self.mesh();
-        let dest_nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
-        let order = schedule(strategy, &mesh, src, &dest_nodes);
-        let ordered: Vec<ChainDest> = order
-            .iter()
-            .map(|n| {
-                let (_, p) = dests.iter().find(|(d, _)| d == n).unwrap();
-                ChainDest { node: *n, pattern: p.clone() }
-            })
+        let (order, ordered) = schedule_pairs(strategy, &mesh, src, dests.to_vec());
+        let ordered: Vec<ChainDest> = ordered
+            .into_iter()
+            .map(|(node, pattern)| ChainDest { node, pattern })
             .collect();
         let now = self.net.cycle;
         self.nodes[src.0].torrent.submit(

@@ -20,19 +20,20 @@ fn overlapping_chains_through_shared_follower() {
     let bytes = 32 * 1024;
     // Chain A: 0 -> {1, 4}; Chain B: 8 -> {4, 2}; node 4 is shared.
     let naive = EngineKind::Torrent(Strategy::Naive);
-    let ta = c.submit_simple(NodeId(0), &[NodeId(1), NodeId(4)], bytes, naive, false);
+    let ta = c.submit_simple(NodeId(0), &[NodeId(1), NodeId(4)], bytes, naive, false).unwrap();
     let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(8)), bytes);
     let dests_b = vec![
         (NodeId(4), AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x20000, bytes)),
         (NodeId(2), AffinePattern::contiguous(c.soc.map.base_of(NodeId(2)) + 0x20000, bytes)),
     ];
-    let tb = c.submit(P2mpRequest {
-        src: NodeId(8),
-        read: read_b,
-        dests: dests_b,
-        engine: EngineKind::Torrent(Strategy::Naive),
-        with_data: false,
-    });
+    let tb = c
+        .submit(
+            P2mpRequest::to_patterns(dests_b)
+                .src(NodeId(8))
+                .read(read_b)
+                .engine(EngineKind::Torrent(Strategy::Naive)),
+        )
+        .unwrap();
     c.run_to_completion(50_000_000);
     assert!(c.latency_of(ta).is_some(), "chain A deadlocked");
     assert!(c.latency_of(tb).is_some(), "chain B deadlocked");
@@ -58,13 +59,15 @@ fn fabric_saturation_many_concurrent_chains() {
             (NodeId(d1), AffinePattern::contiguous(base1, bytes)),
             (NodeId(d2), AffinePattern::contiguous(base2, bytes)),
         ];
-        tasks.push(c.submit(P2mpRequest {
-            src: NodeId(src),
-            read,
-            dests,
-            engine: EngineKind::Torrent(Strategy::Greedy),
-            with_data: false,
-        }));
+        tasks.push(
+            c.submit(
+                P2mpRequest::to_patterns(dests)
+                    .src(NodeId(src))
+                    .read(read)
+                    .engine(EngineKind::Torrent(Strategy::Greedy)),
+            )
+            .unwrap(),
+        );
     }
     c.run_to_completion(100_000_000);
     for t in tasks {
@@ -79,7 +82,7 @@ fn one_byte_chainwrite() {
     let mut c = coord();
     c.soc.nodes[0].mem.write(c.soc.map.base_of(NodeId(0)), &[0xAB]);
     let chain = EngineKind::Torrent(Strategy::Greedy);
-    let t = c.submit_simple(NodeId(0), &[NodeId(8)], 1, chain, true);
+    let t = c.submit_simple(NodeId(0), &[NodeId(8)], 1, chain, true).unwrap();
     c.run_to_completion(1_000_000);
     assert!(c.latency_of(t).is_some());
     let half = c.soc.cfg.spm_bytes as u64 / 2;
@@ -185,13 +188,16 @@ fn worst_case_strided_write_pattern() {
     let data: Vec<u8> = (0..bytes).map(|i| (i % 241) as u8).collect();
     c.soc.nodes[0].mem.write(base0, &data);
     let dst_base = c.soc.map.base_of(NodeId(4)) + 0x1000;
-    let t = c.submit(P2mpRequest {
-        src: NodeId(0),
-        read: AffinePattern::contiguous(base0, bytes),
-        dests: vec![(NodeId(4), AffinePattern::strided(dst_base, rows, 4, 32))],
-        engine: EngineKind::Torrent(Strategy::Greedy),
-        with_data: true,
-    });
+    let write = AffinePattern::strided(dst_base, rows, 4, 32);
+    let t = c
+        .submit(
+            P2mpRequest::to_patterns(vec![(NodeId(4), write)])
+                .src(NodeId(0))
+                .read(AffinePattern::contiguous(base0, bytes))
+                .engine(EngineKind::Torrent(Strategy::Greedy))
+                .with_data(true),
+        )
+        .unwrap();
     c.run_to_completion(10_000_000);
     assert!(c.latency_of(t).is_some());
     for r in 0..rows {

@@ -1,7 +1,7 @@
 //! Cross-module integration tests: full transfers on small SoCs with
 //! data-integrity checks, mechanism equivalence, and workload-level runs.
 
-use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest, TaskHandle};
 use torrent::dma::torrent::dse::AffinePattern;
 use torrent::noc::NodeId;
 use torrent::sched::Strategy;
@@ -34,7 +34,7 @@ fn all_mechanisms_deliver_identical_data() {
     ] {
         let mut c = coord(3, 3, 64 * 1024);
         let data = seed_source(&mut c, NodeId(0), len);
-        let task = c.submit_simple(NodeId(0), &dests, len, engine, true);
+        let task = c.submit_simple(NodeId(0), &dests, len, engine, true).unwrap();
         c.run_to_completion(10_000_000);
         assert!(c.latency_of(task).is_some(), "{engine:?} never finished");
         let half = c.soc.cfg.spm_bytes as u64 / 2;
@@ -61,13 +61,9 @@ fn chain_strategies_equivalent_payloads() {
     for strategy in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
         let mut c = coord(3, 3, 32 * 1024);
         let data = seed_source(&mut c, NodeId(0), len);
-        let task = c.submit_simple(
-            NodeId(0),
-            &dests,
-            len,
-            EngineKind::Torrent(strategy),
-            true,
-        );
+        let task = c
+            .submit_simple(NodeId(0), &dests, len, EngineKind::Torrent(strategy), true)
+            .unwrap();
         c.run_to_completion(10_000_000);
         latencies.push(c.latency_of(task).unwrap());
         let half = c.soc.cfg.spm_bytes as u64 / 2;
@@ -107,13 +103,15 @@ fn table2_p1_relayout_preserves_matrix() {
     let write = torrent::workloads::table2::blocked_logical_order(
         base_dst, rows, cols, w.out_layout,
     );
-    let task = c.submit(P2mpRequest {
-        src,
-        read,
-        dests: vec![(dst, write)],
-        engine: EngineKind::Torrent(Strategy::Greedy),
-        with_data: true,
-    });
+    let task = c
+        .submit(
+            P2mpRequest::to_patterns(vec![(dst, write)])
+                .src(src)
+                .read(read)
+                .engine(EngineKind::Torrent(Strategy::Greedy))
+                .with_data(true),
+        )
+        .unwrap();
     c.run_to_completion(50_000_000);
     assert!(c.latency_of(task).is_some());
 
@@ -144,12 +142,11 @@ fn queued_tasks_complete_in_submission_order() {
     let mut c = coord(3, 3, 64 * 1024);
     seed_source(&mut c, NodeId(0), 4096);
     let chain = EngineKind::Torrent(Strategy::Greedy);
-    let t1 = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, chain, false);
-    let t2 = c.submit_simple(NodeId(0), &[NodeId(8)], 4096, chain, false);
+    let t1 = c.submit_simple(NodeId(0), &[NodeId(4)], 4096, chain, false).unwrap();
+    let t2 = c.submit_simple(NodeId(0), &[NodeId(8)], 4096, chain, false).unwrap();
     c.run_to_completion(10_000_000);
-    let finished_at = |c: &Coordinator, t: u32| {
-        let rec = c.records.iter().find(|r| r.task == t).unwrap();
-        rec.result.as_ref().unwrap().finished_at
+    let finished_at = |c: &Coordinator, t: TaskHandle| {
+        c.record(t).unwrap().result.as_ref().unwrap().finished_at
     };
     let r1 = finished_at(&c, t1);
     let r2 = finished_at(&c, t2);
@@ -170,7 +167,7 @@ fn node_is_initiator_and_follower_simultaneously() {
     };
     // Task A: 0 -> {4, 8}; Task B: 4 -> {2, 6}. Node 4 plays both roles.
     let chain = EngineKind::Torrent(Strategy::Greedy);
-    let ta = c.submit_simple(NodeId(0), &[NodeId(4), NodeId(8)], 4096, chain, true);
+    let ta = c.submit_simple(NodeId(0), &[NodeId(4), NodeId(8)], 4096, chain, true).unwrap();
     let read_b = AffinePattern::contiguous(c.soc.map.base_of(NodeId(4)) + 0x4000, 4096);
     let dests_b: Vec<(NodeId, AffinePattern)> = [2usize, 6]
         .iter()
@@ -179,13 +176,15 @@ fn node_is_initiator_and_follower_simultaneously() {
             (NodeId(n), pat)
         })
         .collect();
-    let tb = c.submit(P2mpRequest {
-        src: NodeId(4),
-        read: read_b,
-        dests: dests_b,
-        engine: EngineKind::Torrent(Strategy::Greedy),
-        with_data: true,
-    });
+    let tb = c
+        .submit(
+            P2mpRequest::to_patterns(dests_b)
+                .src(NodeId(4))
+                .read(read_b)
+                .engine(EngineKind::Torrent(Strategy::Greedy))
+                .with_data(true),
+        )
+        .unwrap();
     c.run_to_completion(10_000_000);
     assert!(c.latency_of(ta).is_some() && c.latency_of(tb).is_some());
     let half = c.soc.cfg.spm_bytes as u64 / 2;
@@ -201,7 +200,7 @@ fn minimal_transfer_sizes() {
         let mut c = coord(2, 2, 32 * 1024);
         let data = seed_source(&mut c, NodeId(0), len);
         let chain = EngineKind::Torrent(Strategy::Greedy);
-        let task = c.submit_simple(NodeId(0), &[NodeId(3)], len, chain, true);
+        let task = c.submit_simple(NodeId(0), &[NodeId(3)], len, chain, true).unwrap();
         c.run_to_completion(1_000_000);
         assert!(c.latency_of(task).is_some(), "len {len}");
         let half = c.soc.cfg.spm_bytes as u64 / 2;
@@ -222,9 +221,11 @@ fn eval_soc_16_destinations() {
     let len = 64 * 1024;
     seed_source(&mut c, NodeId(0), len);
     let dests: Vec<NodeId> = (1..=16).map(NodeId).collect();
-    let task = c.submit_simple(NodeId(0), &dests, len, EngineKind::Torrent(Strategy::Tsp), true);
+    let task = c
+        .submit_simple(NodeId(0), &dests, len, EngineKind::Torrent(Strategy::Tsp), true)
+        .unwrap();
     c.run_to_completion(50_000_000);
-    let rec = c.records.iter().find(|r| r.task == task).unwrap();
+    let rec = c.record(task).unwrap();
     assert!(rec.result.is_some());
     let eta = rec.eta().unwrap();
     assert!(eta > 5.0, "eta {eta} too low for 16-dest chainwrite at 64KB");

@@ -172,15 +172,10 @@ fn prop_random_chainwrites_complete_with_sane_eta() {
         },
         |(bytes, dests, _seed)| {
             let mut c = Coordinator::new(SocConfig::custom(3, 3, 256 * 1024));
-            let task = c.submit_simple(
-                NodeId(0),
-                dests,
-                *bytes,
-                EngineKind::Torrent(Strategy::Greedy),
-                false,
-            );
+            let chain = EngineKind::Torrent(Strategy::Greedy);
+            let task = c.submit_simple(NodeId(0), dests, *bytes, chain, false).unwrap();
             c.run_to_completion(50_000_000);
-            let rec = c.records.iter().find(|r| r.task == task).unwrap();
+            let rec = c.record(task).unwrap();
             let res = rec.result.as_ref().ok_or("task incomplete")?;
             let eta = rec.eta().unwrap();
             check(eta <= dests.len() as f64 + 1e-9, format!("eta {eta} > N_dst"))?;
@@ -205,13 +200,8 @@ fn prop_latency_monotone_in_size() {
         let mut prev = 0u64;
         for kb in [1usize, 4, 16, 64] {
             let mut c = Coordinator::new(SocConfig::custom(3, 3, 256 * 1024));
-            let task = c.submit_simple(
-                NodeId(0),
-                &[NodeId(1), NodeId(4), NodeId(8)],
-                kb * 1024,
-                engine,
-                false,
-            );
+            let dests = [NodeId(1), NodeId(4), NodeId(8)];
+            let task = c.submit_simple(NodeId(0), &dests, kb * 1024, engine, false).unwrap();
             c.run_to_completion(50_000_000);
             let lat = c.latency_of(task).unwrap();
             assert!(lat >= prev, "{engine:?}: {kb}KB lat {lat} < previous {prev}");

@@ -59,9 +59,9 @@ fn prop_event_driven_bit_identical_to_full_tick() {
             let run = |mode: StepMode| -> (u64, u64, u64, u64, u64, u64) {
                 let mut c =
                     Coordinator::with_step_mode(SocConfig::custom(cols, rows, 64 * 1024), mode);
-                let task = c.submit_simple(NodeId(0), dests, bytes, engine, with_data);
+                let task = c.submit_simple(NodeId(0), dests, bytes, engine, with_data).unwrap();
                 c.run_to_completion(50_000_000);
-                let rec = c.records.iter().find(|r| r.task == task).unwrap();
+                let rec = c.record(task).unwrap();
                 let res = rec.result.as_ref().expect("task completed");
                 (
                     c.soc.net.cycle,
@@ -97,16 +97,18 @@ fn chainwrite_forwarding_identical_across_modes() {
         let base = c.soc.map.base_of(NodeId(0));
         let data: Vec<u8> = (0..8 * 1024).map(|i| (i * 13 + 5) as u8).collect();
         c.soc.nodes[0].mem.write(base, &data);
-        let task = c.submit_simple(
-            NodeId(0),
-            &[NodeId(1), NodeId(6), NodeId(11)],
-            8 * 1024,
-            EngineKind::Torrent(Strategy::Greedy),
-            true,
-        );
+        let task = c
+            .submit_simple(
+                NodeId(0),
+                &[NodeId(1), NodeId(6), NodeId(11)],
+                8 * 1024,
+                EngineKind::Torrent(Strategy::Greedy),
+                true,
+            )
+            .unwrap();
         c.run_to_completion(1_000_000);
         let lat = c.latency_of(task).unwrap();
-        let order = c.records[0].chain_order.clone().unwrap();
+        let order = c.record(task).unwrap().chain_order.clone().unwrap();
         let forwarded: u64 = order[..order.len() - 1]
             .iter()
             .map(|n| c.soc.nodes[n.0].torrent.stats.bytes_forwarded)
