@@ -2,7 +2,7 @@
 # python/compile/aot.py (artifacts).
 
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
-	examples-smoke doc clean
+	examples-smoke doc clean topo-sweep topo-matrix golden-bless
 
 all: tier1
 
@@ -39,12 +39,27 @@ bench-baseline:
 # Build every example and run the fast ones (CI smoke). attention_e2e is
 # build-only here: it exercises the full artifact suite and is covered by
 # the figures/EXPERIMENTS flow.
-examples-smoke:
+examples-smoke: topo-sweep
 	cargo build --release --examples
 	cargo run --release --example quickstart
 	cargo run --release --example chain_visualizer
 	cargo run --release --example batch_pipeline
 	cargo run --release --example multicast_sweep -- --size-kb 4
+
+# The cross-fabric hop study (EXPERIMENTS.md §Topology sweep).
+topo-sweep:
+	cargo run --release -- topo-sweep --trials 32
+
+# One tier of the differential suite per fabric (CI topology-matrix).
+# Usage: make topo-matrix TOPOLOGY=torus   (defaults to all fabrics)
+topo-matrix:
+	TORRENT_TOPOLOGY=$(TOPOLOGY) cargo test --release --test topologies
+
+# Measure and commit the golden mesh cycle pins (rust/tests/
+# golden_cycles.tsv). Run once on the first machine with a toolchain;
+# afterwards any drift in mesh cycle counts fails `cargo test`.
+golden-bless:
+	TORRENT_GOLDEN_BLESS=1 cargo test --test golden_cycles -- --nocapture
 
 # API docs for the torrent crate; rustdoc warnings (broken intra-doc
 # links, malformed code blocks) are errors so the redesigned public API

@@ -4,7 +4,7 @@
 
 use crate::coordinator::{Coordinator, EngineKind};
 use crate::dma::torrent::dse::AffinePattern;
-use crate::noc::{Mesh, NodeId};
+use crate::noc::{Mesh, NodeId, Ring, Topo, Topology, Torus};
 use crate::sched::{self, Strategy};
 use crate::soc::SocConfig;
 use crate::util::stats::linregress;
@@ -123,6 +123,46 @@ pub fn fig6(seed: u64, trials: usize) -> Table {
                 .chain(acc.iter().map(|v| fnum(*v, 3)))
                 .collect::<Vec<_>>(),
         );
+    }
+    t
+}
+
+/// Topology sweep: the Fig-6 hop metric re-run across the three fabrics
+/// (8×8 mesh, 8×8 torus, 64-ring — equal node counts, so every fabric
+/// sees the *same* seeded destination sets). Quantifies how much of the
+/// greedy-vs-TSP gap §IV-C attributes to the chain order survives a
+/// wraparound fabric, and pins torus ≤ mesh per strategy.
+pub fn topology_sweep(seed: u64, trials: usize) -> Table {
+    let fabrics: [Topo; 3] = [
+        Topo::Mesh(Mesh::new(8, 8)),
+        Topo::Torus(Torus::new(8, 8)),
+        Topo::Ring(Ring::new(64)),
+    ];
+    let src = NodeId(0);
+    let mut t = Table::new("Topology sweep — average hops per destination (64 nodes)")
+        .header(["fabric", "N_dst", "unicast", "chain/naive", "chain/greedy", "chain/TSP"]);
+    for topo in fabrics {
+        for n_dst in [4usize, 8, 16, 32] {
+            let sets = workloads::random_dest_sets(&topo, src, n_dst, trials, seed + n_dst as u64);
+            let mut acc = [0.0f64; 4];
+            for dests in &sets {
+                let uni = sched::unicast_hops(&topo, src, dests) as f64;
+                let naive = sched::chain_hops(&topo, src, &sched::naive_order(dests)) as f64;
+                let greedy =
+                    sched::chain_hops(&topo, src, &sched::greedy_order(&topo, src, dests)) as f64;
+                let tsp =
+                    sched::chain_hops(&topo, src, &sched::tsp_order(&topo, src, dests)) as f64;
+                for (a, v) in acc.iter_mut().zip([uni, naive, greedy, tsp]) {
+                    *a += v / n_dst as f64 / sets.len() as f64;
+                }
+            }
+            t.row(
+                std::iter::once(topo.name().to_string())
+                    .chain(std::iter::once(n_dst.to_string()))
+                    .chain(acc.iter().map(|v| fnum(*v, 3)))
+                    .collect::<Vec<_>>(),
+            );
+        }
     }
     t
 }
@@ -331,6 +371,38 @@ mod tests {
         // At N=63 every optimized mechanism approaches 1 hop/dest.
         let last = rendered.lines().last().unwrap();
         assert!(last.trim_start().starts_with("63"), "{last}");
+    }
+
+    #[test]
+    fn topology_sweep_orders_fabrics_sanely() {
+        // Differential invariants the sweep must respect: for identical
+        // destination sets, the torus TSP chain never costs more than
+        // the mesh TSP chain (wrap links only add shortcuts), and on
+        // every fabric TSP <= naive.
+        let seed = 31;
+        let trials = 8;
+        let src = NodeId(0);
+        let fabrics = [Topo::Mesh(Mesh::new(8, 8)), Topo::Torus(Torus::new(8, 8))];
+        for n_dst in [4usize, 8] {
+            let sets =
+                workloads::random_dest_sets(&fabrics[0], src, n_dst, trials, seed + n_dst as u64);
+            for dests in &sets {
+                let cost = |topo: &Topo| {
+                    sched::chain_hops(topo, src, &sched::tsp_order(topo, src, dests))
+                };
+                let (mesh, torus) = (cost(&fabrics[0]), cost(&fabrics[1]));
+                assert!(torus <= mesh, "torus {torus} > mesh {mesh} for {dests:?}");
+                for topo in &fabrics {
+                    let naive = sched::chain_hops(topo, src, &sched::naive_order(dests));
+                    assert!(cost(topo) <= naive, "{}", topo.name());
+                }
+            }
+        }
+        // And the rendered table carries all three fabrics.
+        let table = topology_sweep(seed, 4).render();
+        for fabric in ["mesh", "torus", "ring"] {
+            assert!(table.contains(fabric), "missing {fabric} rows:\n{table}");
+        }
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //!
 //! This crate contains:
 //!
-//! * a cycle-stepped 2D-mesh wormhole NoC simulator with XY routing and an
+//! * a cycle-stepped topology-generic wormhole NoC simulator (2D mesh
+//!   with XY routing, wraparound torus, bidirectional ring) with an
 //!   ESP-style network-layer multicast router baseline ([`noc`]);
 //! * an AXI4 transaction layer ([`axi`]) and banked scratchpads ([`mem`]);
 //! * the Torrent architecture — DSE, data switch, backend, Chainwrite

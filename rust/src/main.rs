@@ -7,8 +7,9 @@
 //! torrent fig7                            # config overhead (Fig 7)
 //! torrent fig9                            # DeepSeek-V3 workloads (Fig 9)
 //! torrent fig11                           # area/power (Fig 11, Fig 1d)
-//! torrent run [--config soc.toml] [--size KB] [--dests N] [--engine E]
-//!             [--strategy naive|greedy|tsp] [--data]
+//! torrent topo-sweep [--seed N] [--trials N]  # hops across mesh/torus/ring
+//! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
+//!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
 //! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
 //! ```
 //!
@@ -18,16 +19,18 @@
 
 use torrent::analysis::{experiments, table1};
 use torrent::coordinator::{Coordinator, EngineKind};
-use torrent::noc::NodeId;
+use torrent::noc::{NodeId, TopologyKind};
 use torrent::runtime::{Engine, Tensor};
 use torrent::sched::Strategy;
 use torrent::soc::SocConfig;
 use torrent::util::cli::Args;
 
-const USAGE: &str = "torrent <table1|fig5|fig6|fig7|fig9|fig11|run|artifacts> [options]
+const USAGE: &str =
+    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|run|artifacts> [options]
   fig5   [--quick]
   fig6   [--seed N] [--trials N]
-  run    [--config soc.toml] [--size KB] [--dests N]
+  topo-sweep [--seed N] [--trials N]
+  run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
          [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
   artifacts [--dir artifacts]";
 
@@ -68,6 +71,11 @@ fn main() {
                 println!();
             }
         }
+        "topo-sweep" => {
+            let seed = args.u64_or("seed", 2025);
+            let trials = args.usize_or("trials", 64);
+            experiments::topology_sweep(seed, trials).print();
+        }
         "run" => run_custom(&args),
         "artifacts" => smoke_artifacts(&args),
         _ => println!("{USAGE}"),
@@ -82,6 +90,12 @@ fn run_custom(args: &Args) {
             SocConfig::from_toml(&text).expect("parse --config")
         }
         None => SocConfig::eval_4x5(),
+    };
+    let cfg = match args.get("topology") {
+        Some(t) => cfg.with_topology(TopologyKind::parse(t).unwrap_or_else(|| {
+            panic!("--topology: unknown fabric {t:?} (mesh|torus|ring)")
+        })),
+        None => cfg,
     };
     let size_kb = args.usize_or("size", 64);
     let n_dests = args.usize_or("dests", 4);
@@ -98,6 +112,7 @@ fn run_custom(args: &Args) {
     };
     let with_data = args.flag("data");
     assert!(n_dests < cfg.n_nodes(), "--dests must leave room for the source");
+    let topo_label = cfg.topology.label();
 
     let mut c = Coordinator::new(cfg);
     if with_data {
@@ -117,8 +132,9 @@ fn run_custom(args: &Args) {
     let rec = c.record(task).unwrap();
     let res = rec.result.as_ref().expect("completed");
     println!(
-        "{} {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",
+        "{} on {}: {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",
         engine.label(),
+        topo_label,
         size_kb,
         n_dests,
         res.latency(),

@@ -1,5 +1,7 @@
-//! Cycle-stepped 2D-mesh wormhole NoC with XY routing, virtual channels,
-//! credit flow control and an ESP-style network-layer multicast baseline.
+//! Cycle-stepped wormhole NoC with virtual channels, credit flow control
+//! and an ESP-style network-layer multicast baseline, over a pluggable
+//! fabric: 2D mesh (XY routing), 2D torus (wraparound XY) or ring
+//! (bidirectional shortest-arc) — see [`topology`].
 //!
 //! Layering follows the paper's Fig 2: this module is the *network* and
 //! *link* layers; `crate::axi` is the transport layer; the DMA engines in
@@ -14,4 +16,4 @@ pub mod topology;
 pub use network::{Gate, NetStats, Network};
 pub use packet::{Flit, Message, Packet, PacketId, FLIT_BYTES};
 pub use router::{BUF_FLITS, LINK_CYCLES, NUM_VCS, ROUTER_PIPELINE};
-pub use topology::{Coord, Dir, Mesh, NodeId};
+pub use topology::{Coord, Dir, Mesh, NodeId, Ring, Topo, Topology, TopologyKind, Torus};

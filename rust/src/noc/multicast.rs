@@ -7,20 +7,22 @@
 //! free slot (the paper's "may stall if some VCs are unavailable").
 //!
 //! This module computes the per-router fork: destinations are partitioned
-//! by their XY next hop, producing the multicast tree edges used both by
-//! the cycle simulator's multicast routers and by the Fig-6 analytic hop
-//! model.
+//! by their next hop under the fabric's routing function (`Topology`),
+//! producing the multicast tree edges used both by the cycle simulator's
+//! multicast routers and by the Fig-6 analytic hop model. On a mesh the
+//! tree is the paper's XY tree; on a torus or ring the same partition
+//! follows the wraparound shortest-direction routes.
 
-use super::topology::{Dir, Mesh, NodeId};
+use super::topology::{Dir, NodeId, Topology};
 
-/// Partition a destination set by XY next-hop direction at router `cur`.
+/// Partition a destination set by next-hop direction at router `cur`.
 ///
 /// Returns `(dir, subset)` pairs; a `Dir::Local` entry appears iff `cur`
 /// itself is a destination. Subsets preserve input order.
-pub fn mcast_fork(mesh: &Mesh, cur: NodeId, dsts: &[NodeId]) -> Vec<(Dir, Vec<NodeId>)> {
+pub fn mcast_fork(topo: &dyn Topology, cur: NodeId, dsts: &[NodeId]) -> Vec<(Dir, Vec<NodeId>)> {
     let mut out: Vec<(Dir, Vec<NodeId>)> = Vec::new();
     for &d in dsts {
-        let dir = mesh.xy_next_hop(cur, d);
+        let dir = topo.next_hop(cur, d);
         match out.iter_mut().find(|(od, _)| *od == dir) {
             Some((_, v)) => v.push(d),
             None => out.push((dir, vec![d])),
@@ -29,20 +31,20 @@ pub fn mcast_fork(mesh: &Mesh, cur: NodeId, dsts: &[NodeId]) -> Vec<(Dir, Vec<No
     out
 }
 
-/// Total directed-link count of the XY multicast tree from `src` to
+/// Total directed-link count of the routed multicast tree from `src` to
 /// `dsts` — the Fig-6 hop metric for network-layer multicast ("one packet
 /// is routed following standard XY-routing, and is divided when routes to
 /// different destinations do not overlap").
-pub fn mcast_tree_hops(mesh: &Mesh, src: NodeId, dsts: &[NodeId]) -> usize {
+pub fn mcast_tree_hops(topo: &dyn Topology, src: NodeId, dsts: &[NodeId]) -> usize {
     // Walk the tree: count each traversed link once (shared prefixes shared).
     let mut hops = 0;
     let mut frontier: Vec<(NodeId, Vec<NodeId>)> = vec![(src, dsts.to_vec())];
     while let Some((cur, set)) = frontier.pop() {
-        for (dir, subset) in mcast_fork(mesh, cur, &set) {
+        for (dir, subset) in mcast_fork(topo, cur, &set) {
             if dir == Dir::Local {
-                continue; // delivered here; ejection is not a mesh link
+                continue; // delivered here; ejection is not a fabric link
             }
-            let next = mesh.neighbour(cur, dir).expect("tree left the mesh");
+            let next = topo.neighbour(cur, dir).expect("tree left the fabric");
             hops += 1;
             frontier.push((next, subset));
         }
@@ -53,6 +55,7 @@ pub fn mcast_tree_hops(mesh: &Mesh, src: NodeId, dsts: &[NodeId]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::topology::{Mesh, Ring, Torus};
 
     #[test]
     fn fork_partitions_by_direction() {
@@ -102,5 +105,24 @@ mod tests {
         let dsts: Vec<NodeId> = [9, 18, 27, 36, 45, 54, 63].map(NodeId).to_vec();
         let uni: usize = dsts.iter().map(|&d| m.manhattan(NodeId(0), d)).sum();
         assert!(mcast_tree_hops(&m, NodeId(0), &dsts) <= uni);
+    }
+
+    #[test]
+    fn torus_tree_uses_wrap_links() {
+        // 0=(0,0) -> {12=(0,3), 3=(3,0)}: one South wrap + one West wrap.
+        let t = Torus::new(4, 4);
+        assert_eq!(mcast_tree_hops(&t, NodeId(0), &[NodeId(12), NodeId(3)]), 2);
+        let m = Mesh::new(4, 4);
+        assert_eq!(mcast_tree_hops(&m, NodeId(0), &[NodeId(12), NodeId(3)]), 6);
+    }
+
+    #[test]
+    fn ring_fork_splits_both_arcs() {
+        let r = Ring::new(8);
+        let forks = mcast_fork(&r, NodeId(0), &[NodeId(2), NodeId(6)]);
+        let dirs: Vec<Dir> = forks.iter().map(|(d, _)| *d).collect();
+        assert!(dirs.contains(&Dir::East) && dirs.contains(&Dir::West));
+        // Shared-arc prefix counted once: {1, 2} costs 2 links, not 3.
+        assert_eq!(mcast_tree_hops(&r, NodeId(0), &[NodeId(1), NodeId(2)]), 2);
     }
 }

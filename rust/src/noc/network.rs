@@ -1,5 +1,8 @@
-//! The full mesh network: routers + link delay lines + endpoint (NI)
-//! injection/ejection queues, advanced one cycle at a time.
+//! The full fabric: routers + link delay lines + endpoint (NI)
+//! injection/ejection queues, advanced one cycle at a time. The fabric
+//! geometry is a [`Topo`] (mesh, torus or ring — `noc::topology`); every
+//! structural decision (credits, link targets, route computation) goes
+//! through the [`Topology`] trait.
 //!
 //! Endpoint API used by the DMA engines:
 //!
@@ -20,7 +23,7 @@ use std::rc::Rc;
 
 use super::packet::{flits_of, Flit, Packet, PacketId};
 use super::router::{vc_of, Router, LINK_CYCLES, ROUTER_PIPELINE};
-use super::topology::{Dir, Mesh, NodeId};
+use super::topology::{Dir, NodeId, Topo, Topology};
 use crate::sim::Watchdog;
 
 /// Shared cut-through gate: number of flits allowed to leave so far.
@@ -50,7 +53,7 @@ pub struct NetStats {
 }
 
 pub struct Network {
-    pub mesh: Mesh,
+    pub topo: Topo,
     pub cycle: u64,
     routers: Vec<Router>,
     /// `links[node][dir]`: flits in flight toward `neighbour(node, dir)`,
@@ -79,12 +82,13 @@ pub struct Network {
 }
 
 impl Network {
-    pub fn new(mesh: Mesh) -> Self {
-        let n = mesh.n_nodes();
+    pub fn new(topo: impl Into<Topo>) -> Self {
+        let topo = topo.into();
+        let n = topo.n_nodes();
         Network {
-            mesh,
+            topo,
             cycle: 0,
-            routers: mesh.nodes().map(|id| Router::new(&mesh, id)).collect(),
+            routers: (0..n).map(|i| Router::new(&topo, NodeId(i))).collect(),
             links: (0..n).map(|_| Default::default()).collect(),
             inject: (0..n).map(|_| VecDeque::new()).collect(),
             inbox: (0..n).map(|_| VecDeque::new()).collect(),
@@ -284,7 +288,7 @@ impl Network {
                         self.link_flits -= 1;
                         debug_assert_eq!(vc, vc_);
                         let dst = self
-                            .mesh
+                            .topo
                             .neighbour(NodeId(node), d)
                             .expect("link to nowhere");
                         self.routers[dst.0].accept(d.opposite(), vc, flit);
@@ -322,7 +326,7 @@ impl Network {
                 continue;
             }
             sends.clear();
-            self.routers[node].tick_into(&self.mesh, &mut sends);
+            self.routers[node].tick_into(&self.topo, &mut sends);
             // Return credits for freed input slots.
             let freed = std::mem::take(&mut self.routers[node].freed);
             for (port_idx, vc) in freed {
@@ -331,7 +335,7 @@ impl Network {
                     continue; // injection checks space directly
                 }
                 let upstream = self
-                    .mesh
+                    .topo
                     .neighbour(NodeId(node), port)
                     .expect("freed slot from edge port");
                 self.routers[upstream.0].return_credit(port.opposite(), vc);
@@ -402,6 +406,7 @@ mod tests {
     use super::*;
     use crate::noc::packet::Message;
     use crate::noc::router::{LINK_CYCLES, ROUTER_PIPELINE};
+    use crate::noc::topology::{Mesh, Ring, Torus};
 
     const HOP: u64 = LINK_CYCLES + ROUTER_PIPELINE;
 
@@ -476,8 +481,47 @@ mod tests {
         // Shared-prefix replication: strictly fewer flit-hops than 3 unicasts.
         let flits = 1 + 256 / 64;
         let unicast_hops: usize =
-            dsts.iter().map(|&d| n.mesh.manhattan(NodeId(0), d)).sum::<usize>() * flits;
+            dsts.iter().map(|&d| n.topo.distance(NodeId(0), d)).sum::<usize>() * flits;
         assert!((n.stats.flit_hops as usize) < unicast_hops);
+    }
+
+    #[test]
+    fn torus_delivers_over_wrap_links_with_fewer_hops() {
+        // 0 -> 15 on a 4x4 torus: 2 wrap hops instead of the mesh's 6.
+        let run = |topo: Topo| -> (u64, bool) {
+            let mut n = Network::new(topo);
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(15), Message::Raw(5)).with_payload(vec![7; 128]),
+            );
+            n.run_until_idle(10_000);
+            let got = n.recv(NodeId(15)).expect("delivered");
+            (n.stats.flit_hops, got.payload.as_ref().unwrap()[..] == [7; 128][..])
+        };
+        let (mesh_hops, mesh_ok) = run(Topo::Mesh(Mesh::new(4, 4)));
+        let (torus_hops, torus_ok) = run(Topo::Torus(Torus::new(4, 4)));
+        assert!(mesh_ok && torus_ok);
+        assert!(torus_hops < mesh_hops, "torus {torus_hops} >= mesh {mesh_hops}");
+    }
+
+    #[test]
+    fn ring_routes_both_arcs_and_drains() {
+        let mut n = Network::new(Ring::new(8));
+        let data: Vec<u8> = (0..256).map(|i| i as u8).collect();
+        // 2 East hops to node 2, 2 West (wrap) hops to node 6.
+        for dst in [2usize, 6] {
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(dst), Message::Raw(dst as u64))
+                    .with_payload(data.clone()),
+            );
+        }
+        n.run_until_idle(10_000);
+        for dst in [2usize, 6] {
+            let p = n.recv(NodeId(dst)).expect("delivered");
+            assert_eq!(&**p.payload.as_ref().unwrap(), &data);
+        }
+        assert!(n.is_idle());
     }
 
     #[test]

@@ -10,16 +10,20 @@
 //! one flit/cycle — matching a FlooNoC-style 64 B/CC mesh.
 //!
 //! Multicast (ESP baseline): at RC a head flit with a destination set is
-//! partitioned by XY next hop (`mcast_fork`); replication happens at
-//! SA/ST and is *synchronized* — a flit advances only when every branch
+//! partitioned by next hop (`mcast_fork`); replication happens at SA/ST
+//! and is *synchronized* — a flit advances only when every branch
 //! output has credit, reproducing the VA stalls the paper describes.
+//!
+//! The router is topology-generic: route computation and the credit
+//! wiring go through `&dyn Topology` (mesh XY, torus wraparound XY or
+//! ring shortest-arc — `noc::topology`); nothing here assumes a mesh.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
 
 use super::multicast::mcast_fork;
 use super::packet::{Flit, Message, Packet};
-use super::topology::{Dir, Mesh, NodeId};
+use super::topology::{Dir, NodeId, Topology};
 
 /// Virtual channels: VC0 = control (cfg/grant/finish/acks), VC1 = data.
 /// Separating the classes keeps the Chainwrite control plane live under
@@ -60,7 +64,7 @@ struct VcState {
 /// Per-output wormhole lock: (input port, vc) holding the output.
 type OutLock = Option<(usize, usize)>;
 
-/// A single mesh router.
+/// A single fabric router.
 pub struct Router {
     pub node: NodeId,
     /// `input[port][vc]`
@@ -80,13 +84,13 @@ pub struct Router {
 }
 
 impl Router {
-    pub fn new(mesh: &Mesh, node: NodeId) -> Self {
+    pub fn new(topo: &dyn Topology, node: NodeId) -> Self {
         let mut credits = [[0usize; NUM_VCS]; 5];
         for d in Dir::ALL {
             let have = match d {
                 Dir::Local => usize::MAX / 2, // ejection always sinks
                 _ => {
-                    if mesh.neighbour(node, d).is_some() {
+                    if topo.neighbour(node, d).is_some() {
                         BUF_FLITS
                     } else {
                         0
@@ -146,9 +150,9 @@ impl Router {
     }
 
     /// Compute the route for the packet at the head of `(port, vc)`.
-    fn compute_route(&self, mesh: &Mesh, pkt: &Rc<Packet>) -> RouteLock {
+    fn compute_route(&self, topo: &dyn Topology, pkt: &Rc<Packet>) -> RouteLock {
         if let Some(dsts) = &pkt.mcast_dsts {
-            let branches = mcast_fork(mesh, self.node, dsts)
+            let branches = mcast_fork(topo, self.node, dsts)
                 .into_iter()
                 .map(|(dir, subset)| {
                     // Per-branch packet clone carrying only that branch's
@@ -166,7 +170,7 @@ impl Router {
                 .collect();
             RouteLock { branches }
         } else {
-            let dir = mesh.xy_next_hop(self.node, pkt.dst);
+            let dir = topo.next_hop(self.node, pkt.dst);
             RouteLock { branches: vec![(dir, pkt.clone())] }
         }
     }
@@ -175,15 +179,15 @@ impl Router {
     /// leave this router as `(out_dir, vc, flit)`; the network layer puts
     /// them on the link delay lines. At most one flit per output port.
     /// Convenience wrapper over [`Router::tick_into`] (unit tests).
-    pub fn tick(&mut self, mesh: &Mesh) -> Vec<(Dir, usize, Flit)> {
+    pub fn tick(&mut self, topo: &dyn Topology) -> Vec<(Dir, usize, Flit)> {
         let mut moved = Vec::new();
-        self.tick_into(mesh, &mut moved);
+        self.tick_into(topo, &mut moved);
         moved
     }
 
     /// Allocation-free variant: appends this cycle's moves to `moved`
     /// (§Perf: the network reuses one buffer across all routers).
-    pub fn tick_into(&mut self, mesh: &Mesh, moved: &mut Vec<(Dir, usize, Flit)>) {
+    pub fn tick_into(&mut self, topo: &dyn Topology, moved: &mut Vec<(Dir, usize, Flit)>) {
         let mut out_taken = [false; 5];
         self.freed.clear();
 
@@ -206,7 +210,7 @@ impl Router {
             };
             if front_is_head {
                 let pkt = self.inputs[port][vc].buf.front().unwrap().packet.clone();
-                let route = self.compute_route(mesh, &pkt);
+                let route = self.compute_route(topo, &pkt);
                 self.inputs[port][vc].route = Some(route);
             }
 
@@ -265,6 +269,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::topology::Mesh;
 
     fn mk(mesh: &Mesh, node: usize) -> Router {
         Router::new(mesh, NodeId(node))

@@ -1,15 +1,32 @@
-//! 2D-mesh topology and dimension-ordered (XY) routing.
+//! NoC topologies and minimal routing.
 //!
 //! The paper's evaluation SoCs are FlooNoC 2D meshes: 4×5 (20 clusters,
 //! §IV-A), 8×8 (Fig 6 hop study) and 3×3 (FPGA, §IV-E), all XY-routed.
 //! `NodeId`s are row-major: node = y * cols + x, so cluster C0 is the
 //! origin corner — matching the paper's "start from dest closest to C0".
+//!
+//! Chainwrite's central claim is that the chain *order* must be derived
+//! from the fabric (§III-D, §IV-C), so the fabric itself is abstracted
+//! behind the [`Topology`] trait: [`Mesh`] (XY dimension-ordered),
+//! [`Torus`] (wraparound XY, shortest-direction per dimension) and
+//! [`Ring`] (bidirectional, shortest arc). The routers, the multicast
+//! fork, and every `sched` strategy consume the trait — none of them
+//! hard-code mesh geometry. [`Topo`] is the `Copy` dispatch enum the
+//! simulator stores (no boxing on the per-flit hot path).
+//!
+//! Routing contract (shared by all three, property-tested in
+//! `rust/tests/topologies.rs`): `next_hop` strictly decreases
+//! `distance` to the destination, `path` has `distance + 1` nodes, and
+//! `links` are exactly the consecutive pairs of `path`. Tie-breaks are
+//! deterministic — equal-length arcs resolve East (X) / North (Y) — so
+//! every schedule and cycle count is run-to-run reproducible.
 
-/// Node index in row-major order over the mesh.
+/// Node index in row-major order over the fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NodeId(pub usize);
 
-/// (x, y) mesh coordinate; x is the column, y the row.
+/// (x, y) layout coordinate; x is the column, y the row. A [`Ring`]
+/// reports y = 0 for every node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Coord {
     pub x: usize,
@@ -51,7 +68,60 @@ impl Dir {
     }
 }
 
-/// A `cols` × `rows` 2D mesh.
+/// A routed point-to-point fabric.
+///
+/// Object-safe so the router pipeline, the multicast fork and the chain
+/// schedulers take `&dyn Topology`; concrete fabrics (`&Mesh`, `&Torus`,
+/// `&Ring`, `&Topo`) coerce at the call site. Implementations must keep
+/// `next_hop` monotone (each hop strictly decreases `distance`) — the
+/// default `path`/`links` bodies, the wormhole routers and the greedy
+/// scheduler's in-place path walk all rely on it terminating.
+pub trait Topology {
+    /// Short fabric label for reports ("mesh", "torus", "ring").
+    fn name(&self) -> &'static str;
+
+    fn n_nodes(&self) -> usize;
+
+    /// Layout position of `n` (plots, visualizers).
+    fn coord(&self, n: NodeId) -> Coord;
+
+    /// Inverse of [`Topology::coord`].
+    fn node(&self, c: Coord) -> NodeId;
+
+    /// Routing distance in hops (the Fig-6 metric's unit).
+    fn distance(&self, a: NodeId, b: NodeId) -> usize;
+
+    /// Output port taken at `cur` toward `dst`; `Local` iff `cur == dst`.
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir;
+
+    /// Neighbour of `n` through port `d`, if that link exists.
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId>;
+
+    /// Longest shortest-path in the fabric. Upper bound for Alg. 1's
+    /// hop-count init (`sched::greedy_order`).
+    fn diameter(&self) -> usize;
+
+    /// Full routed path from `from` to `to`, inclusive of both endpoints.
+    fn path(&self, from: NodeId, to: NodeId) -> Vec<NodeId> {
+        let mut path = vec![from];
+        let mut cur = from;
+        while cur != to {
+            let d = self.next_hop(cur, to);
+            cur = self.neighbour(cur, d).expect("routing left the fabric");
+            path.push(cur);
+        }
+        path
+    }
+
+    /// The directed links (node pairs) of the routed path — the "edges"
+    /// used by Alg. 1's overlap test.
+    fn links(&self, from: NodeId, to: NodeId) -> Vec<(NodeId, NodeId)> {
+        let p = self.path(from, to);
+        p.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+}
+
+/// A `cols` × `rows` 2D mesh, XY (dimension-ordered) routed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Mesh {
     pub cols: usize,
@@ -135,25 +205,337 @@ impl Mesh {
 
     /// Full XY path from `from` to `to`, inclusive of both endpoints.
     pub fn xy_path(&self, from: NodeId, to: NodeId) -> Vec<NodeId> {
-        let mut path = vec![from];
-        let mut cur = from;
-        while cur != to {
-            let d = self.xy_next_hop(cur, to);
-            cur = self.neighbour(cur, d).expect("XY routing left the mesh");
-            path.push(cur);
-        }
-        path
+        Topology::path(self, from, to)
     }
 
     /// The directed links (node pairs) of the XY path — the "edges" used
     /// by Alg. 1's overlap test.
     pub fn xy_links(&self, from: NodeId, to: NodeId) -> Vec<(NodeId, NodeId)> {
-        let p = self.xy_path(from, to);
-        p.windows(2).map(|w| (w[0], w[1])).collect()
+        Topology::links(self, from, to)
     }
 
     pub fn nodes(&self) -> impl Iterator<Item = NodeId> {
         (0..self.n_nodes()).map(NodeId)
+    }
+}
+
+impl Topology for Mesh {
+    fn name(&self) -> &'static str {
+        "mesh"
+    }
+
+    fn n_nodes(&self) -> usize {
+        Mesh::n_nodes(self)
+    }
+
+    fn coord(&self, n: NodeId) -> Coord {
+        Mesh::coord(self, n)
+    }
+
+    fn node(&self, c: Coord) -> NodeId {
+        Mesh::node(self, c)
+    }
+
+    fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        self.manhattan(a, b)
+    }
+
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        self.xy_next_hop(cur, dst)
+    }
+
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        Mesh::neighbour(self, n, d)
+    }
+
+    fn diameter(&self) -> usize {
+        (self.cols - 1) + (self.rows - 1)
+    }
+}
+
+/// A `cols` × `rows` 2D torus: the mesh plus wraparound links in both
+/// dimensions. Routing is dimension-ordered (X fully first, then Y) and
+/// takes the shorter wrap direction per dimension; equal arcs break
+/// East / North. A dimension of size 1 has no wrap link (it would be a
+/// self-loop) and size 2 keeps both directed ports (two parallel links
+/// between the pair, as in a physical 2-ary torus).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus {
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Torus {
+    pub fn new(cols: usize, rows: usize) -> Self {
+        assert!(cols >= 1 && rows >= 1);
+        Torus { cols, rows }
+    }
+
+    /// Shortest wrap distance between offsets `a` and `b` modulo `len`.
+    fn arc(len: usize, a: usize, b: usize) -> usize {
+        let fwd = (b + len - a) % len;
+        fwd.min(len - fwd)
+    }
+
+    /// True when moving in the increasing direction is the shorter (or
+    /// tied) arc from `a` to `b` modulo `len`.
+    fn forward_is_short(len: usize, a: usize, b: usize) -> bool {
+        let fwd = (b + len - a) % len;
+        fwd <= len - fwd
+    }
+}
+
+impl Topology for Torus {
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    fn coord(&self, n: NodeId) -> Coord {
+        assert!(n.0 < self.n_nodes(), "node {n:?} out of torus {self:?}");
+        Coord { x: n.0 % self.cols, y: n.0 / self.cols }
+    }
+
+    fn node(&self, c: Coord) -> NodeId {
+        assert!(c.x < self.cols && c.y < self.rows, "{c:?} out of torus {self:?}");
+        NodeId(c.y * self.cols + c.x)
+    }
+
+    fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        let (ca, cb) = (self.coord(a), self.coord(b));
+        Self::arc(self.cols, ca.x, cb.x) + Self::arc(self.rows, ca.y, cb.y)
+    }
+
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        let (c, d) = (self.coord(cur), self.coord(dst));
+        if c.x != d.x {
+            if Self::forward_is_short(self.cols, c.x, d.x) {
+                Dir::East
+            } else {
+                Dir::West
+            }
+        } else if c.y != d.y {
+            if Self::forward_is_short(self.rows, c.y, d.y) {
+                Dir::North
+            } else {
+                Dir::South
+            }
+        } else {
+            Dir::Local
+        }
+    }
+
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        let c = self.coord(n);
+        let nc = match d {
+            Dir::Local => return Some(n),
+            Dir::North if self.rows > 1 => Coord { x: c.x, y: (c.y + 1) % self.rows },
+            Dir::South if self.rows > 1 => Coord { x: c.x, y: (c.y + self.rows - 1) % self.rows },
+            Dir::East if self.cols > 1 => Coord { x: (c.x + 1) % self.cols, y: c.y },
+            Dir::West if self.cols > 1 => Coord { x: (c.x + self.cols - 1) % self.cols, y: c.y },
+            _ => return None,
+        };
+        Some(self.node(nc))
+    }
+
+    fn diameter(&self) -> usize {
+        self.cols / 2 + self.rows / 2
+    }
+}
+
+/// An `n`-node bidirectional ring: East is node `i + 1 (mod n)`, West is
+/// `i - 1 (mod n)`. Routing follows the shorter arc; equal arcs break
+/// East. Layout coordinates are `(i, 0)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ring {
+    pub n: usize,
+}
+
+impl Ring {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Ring { n }
+    }
+}
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn coord(&self, n: NodeId) -> Coord {
+        assert!(n.0 < self.n, "node {n:?} out of ring {self:?}");
+        Coord { x: n.0, y: 0 }
+    }
+
+    fn node(&self, c: Coord) -> NodeId {
+        assert!(c.x < self.n && c.y == 0, "{c:?} out of ring {self:?}");
+        NodeId(c.x)
+    }
+
+    fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        Torus::arc(self.n, self.coord(a).x, self.coord(b).x)
+    }
+
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        if cur == dst {
+            Dir::Local
+        } else if Torus::forward_is_short(self.n, self.coord(cur).x, self.coord(dst).x) {
+            Dir::East
+        } else {
+            Dir::West
+        }
+    }
+
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        let i = self.coord(n).x;
+        match d {
+            Dir::Local => Some(n),
+            Dir::East if self.n > 1 => Some(NodeId((i + 1) % self.n)),
+            Dir::West if self.n > 1 => Some(NodeId((i + self.n - 1) % self.n)),
+            _ => None,
+        }
+    }
+
+    fn diameter(&self) -> usize {
+        self.n / 2
+    }
+}
+
+/// Fabric selector for configs and the CLI (`--topology mesh|torus|ring`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologyKind {
+    #[default]
+    Mesh,
+    Torus,
+    Ring,
+}
+
+impl TopologyKind {
+    pub const ALL: [TopologyKind; 3] =
+        [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mesh" => Some(TopologyKind::Mesh),
+            "torus" => Some(TopologyKind::Torus),
+            "ring" => Some(TopologyKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::Ring => "ring",
+        }
+    }
+}
+
+/// The concrete fabric a [`Network`](crate::noc::Network) runs on.
+/// `Copy` enum dispatch — no boxing or vtable on the per-flit hot path,
+/// and it coerces to `&dyn Topology` wherever the trait is consumed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topo {
+    Mesh(Mesh),
+    Torus(Torus),
+    Ring(Ring),
+}
+
+impl Topo {
+    /// Build the fabric `kind` over a `cols` × `rows` node grid. A ring
+    /// threads all `cols * rows` nodes (same node count and address map
+    /// as the grid fabrics, so configs swap topology without resizing).
+    pub fn build(kind: TopologyKind, cols: usize, rows: usize) -> Topo {
+        match kind {
+            TopologyKind::Mesh => Topo::Mesh(Mesh::new(cols, rows)),
+            TopologyKind::Torus => Topo::Torus(Torus::new(cols, rows)),
+            TopologyKind::Ring => Topo::Ring(Ring::new(cols * rows)),
+        }
+    }
+
+    pub fn kind(&self) -> TopologyKind {
+        match self {
+            Topo::Mesh(_) => TopologyKind::Mesh,
+            Topo::Torus(_) => TopologyKind::Torus,
+            Topo::Ring(_) => TopologyKind::Ring,
+        }
+    }
+
+    fn inner(&self) -> &dyn Topology {
+        match self {
+            Topo::Mesh(m) => m,
+            Topo::Torus(t) => t,
+            Topo::Ring(r) => r,
+        }
+    }
+}
+
+impl From<Mesh> for Topo {
+    fn from(m: Mesh) -> Topo {
+        Topo::Mesh(m)
+    }
+}
+
+impl From<Torus> for Topo {
+    fn from(t: Torus) -> Topo {
+        Topo::Torus(t)
+    }
+}
+
+impl From<Ring> for Topo {
+    fn from(r: Ring) -> Topo {
+        Topo::Ring(r)
+    }
+}
+
+impl Topology for Topo {
+    fn name(&self) -> &'static str {
+        self.inner().name()
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.inner().n_nodes()
+    }
+
+    fn coord(&self, n: NodeId) -> Coord {
+        self.inner().coord(n)
+    }
+
+    fn node(&self, c: Coord) -> NodeId {
+        self.inner().node(c)
+    }
+
+    fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        self.inner().distance(a, b)
+    }
+
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        self.inner().next_hop(cur, dst)
+    }
+
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        self.inner().neighbour(n, d)
+    }
+
+    fn diameter(&self) -> usize {
+        self.inner().diameter()
+    }
+
+    fn path(&self, from: NodeId, to: NodeId) -> Vec<NodeId> {
+        self.inner().path(from, to)
+    }
+
+    fn links(&self, from: NodeId, to: NodeId) -> Vec<(NodeId, NodeId)> {
+        self.inner().links(from, to)
     }
 }
 
@@ -225,5 +607,102 @@ mod tests {
     fn next_hop_local_at_destination() {
         let m = Mesh::new(3, 3);
         assert_eq!(m.xy_next_hop(NodeId(4), NodeId(4)), Dir::Local);
+    }
+
+    #[test]
+    fn torus_wraps_both_dimensions() {
+        let t = Torus::new(4, 4);
+        // Corner (3,3) wraps East to (0,3) and North to (3,0).
+        assert_eq!(t.neighbour(NodeId(15), Dir::East), Some(NodeId(12)));
+        assert_eq!(t.neighbour(NodeId(15), Dir::North), Some(NodeId(3)));
+        assert_eq!(t.neighbour(NodeId(0), Dir::West), Some(NodeId(3)));
+        assert_eq!(t.neighbour(NodeId(0), Dir::South), Some(NodeId(12)));
+    }
+
+    #[test]
+    fn torus_distance_uses_shortest_arc() {
+        let t = Torus::new(4, 4);
+        // (0,0) -> (3,3): 1 hop West + 1 hop South via the wrap links.
+        assert_eq!(t.distance(NodeId(0), NodeId(15)), 2);
+        let mesh = Mesh::new(4, 4);
+        assert!(t.distance(NodeId(0), NodeId(15)) <= mesh.manhattan(NodeId(0), NodeId(15)));
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn torus_next_hop_breaks_ties_east_and_north() {
+        // 4 columns, dx = 2 both ways: deterministic East. Same for Y.
+        let t = Torus::new(4, 4);
+        assert_eq!(t.next_hop(NodeId(0), NodeId(2)), Dir::East);
+        assert_eq!(t.next_hop(NodeId(0), NodeId(8)), Dir::North);
+    }
+
+    #[test]
+    fn torus_routes_x_first_via_wrap() {
+        let t = Torus::new(4, 4);
+        // (0,0) -> (3,1): West wrap then North.
+        assert_eq!(
+            t.path(NodeId(0), NodeId(7)),
+            vec![NodeId(0), NodeId(3), NodeId(7)]
+        );
+    }
+
+    #[test]
+    fn torus_degenerate_dimensions_have_no_self_links() {
+        let t = Torus::new(1, 4);
+        assert_eq!(t.neighbour(NodeId(0), Dir::East), None);
+        assert_eq!(t.neighbour(NodeId(0), Dir::West), None);
+        assert_eq!(t.neighbour(NodeId(0), Dir::North), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn ring_shortest_arc_and_tie_break() {
+        let r = Ring::new(8);
+        assert_eq!(r.distance(NodeId(1), NodeId(7)), 2); // wrap: 1 -> 0 -> 7
+        assert_eq!(r.next_hop(NodeId(1), NodeId(7)), Dir::West);
+        assert_eq!(r.next_hop(NodeId(0), NodeId(4)), Dir::East); // tie -> East
+        assert_eq!(r.distance(NodeId(0), NodeId(4)), 4);
+        assert_eq!(r.diameter(), 4);
+        assert_eq!(r.neighbour(NodeId(0), Dir::North), None);
+        assert_eq!(r.neighbour(NodeId(7), Dir::East), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn ring_path_follows_one_arc() {
+        let r = Ring::new(6);
+        assert_eq!(
+            r.path(NodeId(5), NodeId(1)),
+            vec![NodeId(5), NodeId(0), NodeId(1)]
+        );
+        assert_eq!(
+            r.links(NodeId(5), NodeId(1)),
+            vec![(NodeId(5), NodeId(0)), (NodeId(0), NodeId(1))]
+        );
+    }
+
+    #[test]
+    fn topo_builds_and_dispatches_every_kind() {
+        for kind in TopologyKind::ALL {
+            let topo = Topo::build(kind, 3, 4);
+            assert_eq!(topo.kind(), kind);
+            assert_eq!(topo.n_nodes(), 12, "{kind:?}");
+            assert_eq!(topo.name(), kind.label());
+            assert_eq!(topo.distance(NodeId(0), NodeId(0)), 0);
+        }
+        assert_eq!(TopologyKind::parse("torus"), Some(TopologyKind::Torus));
+        assert_eq!(TopologyKind::parse("hypercube"), None);
+    }
+
+    #[test]
+    fn mesh_trait_view_matches_inherent_api() {
+        let m = Mesh::new(5, 4);
+        let t: &dyn Topology = &m;
+        for a in m.nodes() {
+            for b in m.nodes() {
+                assert_eq!(t.distance(a, b), m.manhattan(a, b));
+                assert_eq!(t.next_hop(a, b), m.xy_next_hop(a, b));
+                assert_eq!(t.path(a, b), m.xy_path(a, b));
+            }
+        }
     }
 }

@@ -1,8 +1,9 @@
-//! Naive and greedy (paper Alg. 1) chain ordering.
+//! Naive and greedy (paper Alg. 1) chain ordering, over any
+//! [`Topology`] (the link-overlap test walks the fabric's own routes).
 
 use std::collections::HashSet;
 
-use crate::noc::{Mesh, NodeId};
+use crate::noc::{NodeId, Topology};
 
 /// Chain-sequence strategy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,13 +25,13 @@ pub fn naive_order(dests: &[NodeId]) -> Vec<NodeId> {
 
 /// Paper Algorithm 1 — Chain Write Greedy Optimization.
 ///
-/// Iteratively extend the chain with the destination whose XY path from
-/// the chain tail (a) shares no link with any previously used path and
-/// (b) is shortest; fall back to the plain nearest destination when no
-/// link-disjoint candidate exists. Link-disjointness keeps the chain's
-/// hop-to-hop transfers from serializing on shared mesh links while the
-/// stream is pipelined through all destinations.
-pub fn greedy_order(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+/// Iteratively extend the chain with the destination whose routed path
+/// from the chain tail (a) shares no link with any previously used path
+/// and (b) is shortest; fall back to the plain nearest destination when
+/// no link-disjoint candidate exists. Link-disjointness keeps the
+/// chain's hop-to-hop transfers from serializing on shared fabric links
+/// while the stream is pipelined through all destinations.
+pub fn greedy_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
     if dests.is_empty() {
         return vec![];
     }
@@ -39,26 +40,29 @@ pub fn greedy_order(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
     // matching the paper's min() over the destination list).
     let start = *remaining
         .iter()
-        .min_by_key(|&&d| (mesh.manhattan(src, d), d))
+        .min_by_key(|&&d| (topo.distance(src, d), d))
         .unwrap();
     remaining.retain(|&d| d != start);
     let mut order = vec![start];
-    let mut used: HashSet<(NodeId, NodeId)> = mesh.xy_links(src, start).into_iter().collect();
+    let mut used: HashSet<(NodeId, NodeId)> = topo.links(src, start).into_iter().collect();
 
     while !remaining.is_empty() {
         let tail = *order.last().unwrap();
-        let max_hops = mesh.cols + mesh.rows; // Alg.1 line 6 init
+        // Alg.1 line 6 init: any real path is at most `diameter` hops, so
+        // diameter + 1 accepts every candidate (on a mesh this matches the
+        // original cols + rows bound exactly — both exceed every path).
+        let max_hops = topo.diameter() + 1;
         let mut best: Option<(NodeId, usize)> = None;
         for &cand in &remaining {
-            // Walk the XY path in place (§Perf: no Vec per candidate) and
-            // bail out at the first used link.
+            // Walk the routed path in place (§Perf: no Vec per candidate)
+            // and bail out at the first used link.
             let bound = best.map(|(_, h)| h).unwrap_or(max_hops);
             let mut cur = tail;
             let mut hops = 0usize;
             let mut disjoint = true;
             while cur != cand && hops < bound {
-                let d = mesh.xy_next_hop(cur, cand);
-                let next = mesh.neighbour(cur, d).expect("XY left the mesh");
+                let d = topo.next_hop(cur, cand);
+                let next = topo.neighbour(cur, d).expect("routing left the fabric");
                 if used.contains(&(cur, next)) {
                     disjoint = false;
                     break;
@@ -75,10 +79,10 @@ pub fn greedy_order(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
             // Fallback (Alg.1 line 13): shortest path regardless of overlap.
             None => *remaining
                 .iter()
-                .min_by_key(|&&c| (mesh.manhattan(tail, c), c))
+                .min_by_key(|&&c| (topo.distance(tail, c), c))
                 .unwrap(),
         };
-        for l in mesh.xy_links(tail, chosen) {
+        for l in topo.links(tail, chosen) {
             used.insert(l);
         }
         order.push(chosen);
@@ -90,6 +94,7 @@ pub fn greedy_order(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::{Mesh, Ring};
     use crate::sched::hops::chain_hops;
 
     #[test]
@@ -158,5 +163,16 @@ mod tests {
         let o = greedy_order(&m, NodeId(0), &dests);
         assert_eq!(o, [1, 2, 4, 6].map(NodeId).to_vec());
         assert_eq!(chain_hops(&m, NodeId(0), &o), 6);
+    }
+
+    #[test]
+    fn greedy_on_a_ring_chains_around_one_arc() {
+        // {1, 2, 3} East of the source on an 8-ring: greedy walks the
+        // arc with disjoint links, 1 hop per destination.
+        let r = Ring::new(8);
+        let dests: Vec<NodeId> = [3, 1, 2].map(NodeId).to_vec();
+        let o = greedy_order(&r, NodeId(0), &dests);
+        assert_eq!(o, [1, 2, 3].map(NodeId).to_vec());
+        assert_eq!(chain_hops(&r, NodeId(0), &o), 3);
     }
 }

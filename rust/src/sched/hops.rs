@@ -1,30 +1,32 @@
 //! Hop-count models — the implementation-agnostic Fig-6 metric
-//! ("number of edges the data traverses divided by N_dst").
+//! ("number of edges the data traverses divided by N_dst"), over any
+//! [`Topology`] (legs cost the fabric's routing distance).
 
-use crate::noc::{Mesh, NodeId};
+use crate::noc::{NodeId, Topology};
 
 /// Total links the Chainwrite stream traverses: src -> order[0] -> ... ->
-/// order[n-1], each leg XY-routed (= Manhattan length).
-pub fn chain_hops(mesh: &Mesh, src: NodeId, order: &[NodeId]) -> usize {
+/// order[n-1], each leg routed by the fabric (= routing distance).
+pub fn chain_hops(topo: &dyn Topology, src: NodeId, order: &[NodeId]) -> usize {
     let mut hops = 0;
     let mut cur = src;
     for &d in order {
-        hops += mesh.manhattan(cur, d);
+        hops += topo.distance(cur, d);
         cur = d;
     }
     hops
 }
 
 /// Total links for repeated unicast: every destination is a separate
-/// XY-routed transfer from the source.
-pub fn unicast_hops(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> usize {
-    dests.iter().map(|&d| mesh.manhattan(src, d)).sum()
+/// routed transfer from the source.
+pub fn unicast_hops(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> usize {
+    dests.iter().map(|&d| topo.distance(src, d)).sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::noc::multicast::mcast_tree_hops;
+    use crate::noc::{Mesh, Ring, Torus};
 
     #[test]
     fn chain_hops_sums_legs() {
@@ -62,5 +64,20 @@ mod tests {
         assert!(
             mcast_tree_hops(&m, NodeId(0), &dests) <= unicast_hops(&m, NodeId(0), &dests)
         );
+    }
+
+    #[test]
+    fn wraparound_fabrics_never_cost_more_than_the_mesh() {
+        // Same order, same node ids: every torus/ring leg is at most the
+        // mesh leg (the shortest-arc min includes the non-wrap route).
+        let mesh = Mesh::new(4, 4);
+        let torus = Torus::new(4, 4);
+        let ring = Ring::new(16);
+        let order: Vec<NodeId> = [15, 3, 12, 7].map(NodeId).to_vec();
+        let m = chain_hops(&mesh, NodeId(0), &order);
+        assert!(chain_hops(&torus, NodeId(0), &order) <= m);
+        assert!(unicast_hops(&torus, NodeId(0), &order) <= unicast_hops(&mesh, NodeId(0), &order));
+        // The 16-ring wraps the far half of the id space.
+        assert_eq!(ring.distance(NodeId(0), NodeId(15)), 1);
     }
 }

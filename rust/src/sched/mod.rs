@@ -2,14 +2,16 @@
 //!
 //! Chainwrite exposes the destination traversal order explicitly; §IV-C
 //! shows the order decides whether Chainwrite matches network-layer
-//! multicast. Three strategies:
+//! multicast. The strategies consume the fabric through the
+//! [`Topology`] trait (`distance`/`next_hop`/`links`), so the same
+//! three orders apply to meshes, tori and rings. Three strategies:
 //!
 //! * [`naive_order`] — follow cluster IDs (the paper's baseline that
 //!   "suffers from redundant paths");
-//! * [`greedy_order`] — Alg. 1: pick the next destination whose XY path
-//!   does not overlap already-used links, minimizing path length
+//! * [`greedy_order`] — Alg. 1: pick the next destination whose routed
+//!   path does not overlap already-used links, minimizing path length
 //!   (just-in-time optimization);
-//! * [`tsp_order`] — open-path TSP on the XY distance matrix; exact
+//! * [`tsp_order`] — open-path TSP on the routing-distance matrix; exact
 //!   Held–Karp for small sets, nearest-neighbour + 2-opt beyond (the
 //!   paper used OR-Tools; see DESIGN.md §3).
 
@@ -21,15 +23,22 @@ pub use chain::{greedy_order, naive_order, Strategy};
 pub use hops::{chain_hops, unicast_hops};
 pub use tsp::tsp_order;
 
-use crate::noc::{Mesh, NodeId};
+use std::collections::{HashMap, VecDeque};
+
+use crate::noc::{NodeId, Topology};
 
 /// Dispatch by strategy. `src` is the initiator; returns the destination
 /// visit order (a permutation of `dests`).
-pub fn schedule(strategy: Strategy, mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+pub fn schedule(
+    strategy: Strategy,
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: &[NodeId],
+) -> Vec<NodeId> {
     match strategy {
         Strategy::Naive => naive_order(dests),
-        Strategy::Greedy => greedy_order(mesh, src, dests),
-        Strategy::Tsp => tsp_order(mesh, src, dests),
+        Strategy::Greedy => greedy_order(topo, src, dests),
+        Strategy::Tsp => tsp_order(topo, src, dests),
     }
 }
 
@@ -37,24 +46,30 @@ pub fn schedule(strategy: Strategy, mesh: &Mesh, src: NodeId, dests: &[NodeId]) 
 /// returns the visit order plus the `(node, payload)` pairs permuted
 /// into that order. The single chain-ordering path shared by
 /// `Soc::chainwrite` and the coordinator's dispatcher.
+///
+/// Payload slots are indexed by `NodeId`, so the reorder is O(n) — the
+/// old linear slot scan was O(n²) and showed up at the paper's largest
+/// destination sets (63 on the 8×8 study). Duplicate nodes (not
+/// produced by the validated coordinator path, but legal here) keep
+/// their submission order: slots drain per-node FIFO.
 pub fn schedule_pairs<T>(
     strategy: Strategy,
-    mesh: &Mesh,
+    topo: &dyn Topology,
     src: NodeId,
     dests: Vec<(NodeId, T)>,
 ) -> (Vec<NodeId>, Vec<(NodeId, T)>) {
     let nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
-    let order = schedule(strategy, mesh, src, &nodes);
-    let mut slots: Vec<Option<(NodeId, T)>> = dests.into_iter().map(Some).collect();
+    let order = schedule(strategy, topo, src, &nodes);
+    let mut slots: HashMap<NodeId, VecDeque<(NodeId, T)>> = HashMap::with_capacity(dests.len());
+    for pair in dests {
+        slots.entry(pair.0).or_default().push_back(pair);
+    }
     let ordered = order
         .iter()
         .map(|n| {
             slots
-                .iter_mut()
-                .find_map(|s| match s {
-                    Some((d, _)) if d == n => s.take(),
-                    _ => None,
-                })
+                .get_mut(n)
+                .and_then(|q| q.pop_front())
                 .expect("scheduled order permutes the destination set")
         })
         .collect();
@@ -64,6 +79,7 @@ pub fn schedule_pairs<T>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::{Mesh, Ring, Torus};
 
     #[test]
     fn schedule_pairs_keeps_payloads_with_their_nodes() {
@@ -82,6 +98,36 @@ mod tests {
     }
 
     #[test]
+    fn schedule_pairs_64_distinct_dests_stay_keyed() {
+        // The O(n) indexed reorder at the paper's largest set size: a
+        // duplicate-free 64-dest set on a 65-node fabric.
+        let m = Mesh::new(13, 5);
+        let dests: Vec<(NodeId, usize)> = (1..65).map(|n| (NodeId(n), n * 7)).collect();
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+            let (order, ordered) = schedule_pairs(s, &m, NodeId(0), dests.clone());
+            assert_eq!(order.len(), 64, "{s:?}");
+            let mut sorted: Vec<NodeId> = order.clone();
+            sorted.sort();
+            assert_eq!(sorted, (1..65).map(NodeId).collect::<Vec<_>>(), "{s:?}");
+            for ((n, payload), o) in ordered.iter().zip(&order) {
+                assert_eq!(n, o, "{s:?}");
+                assert_eq!(*payload, n.0 * 7, "{s:?} payload detached from its node");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_pairs_duplicates_drain_fifo() {
+        // Duplicate destination nodes keep submission order per node —
+        // the contract the old linear scan provided implicitly.
+        let m = Mesh::new(4, 1);
+        let dests = vec![(NodeId(2), "first"), (NodeId(2), "second")];
+        let (order, ordered) = schedule_pairs(Strategy::Naive, &m, NodeId(0), dests);
+        assert_eq!(order, vec![NodeId(2), NodeId(2)]);
+        assert_eq!(ordered, vec![(NodeId(2), "first"), (NodeId(2), "second")]);
+    }
+
+    #[test]
     fn schedule_dispatches_all_strategies() {
         let m = Mesh::new(4, 4);
         let dests = vec![NodeId(5), NodeId(10), NodeId(3)];
@@ -92,6 +138,22 @@ mod tests {
             let mut want = dests.clone();
             want.sort();
             assert_eq!(sorted, want, "{s:?} must permute the destination set");
+        }
+    }
+
+    #[test]
+    fn schedule_permutes_on_every_topology() {
+        let fabrics: [&dyn Topology; 3] = [&Mesh::new(4, 4), &Torus::new(4, 4), &Ring::new(16)];
+        let dests = vec![NodeId(15), NodeId(3), NodeId(9), NodeId(12)];
+        for topo in fabrics {
+            for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+                let order = schedule(s, topo, NodeId(0), &dests);
+                let mut sorted = order.clone();
+                sorted.sort();
+                let mut want = dests.clone();
+                want.sort();
+                assert_eq!(sorted, want, "{s:?} on {}", topo.name());
+            }
         }
     }
 }

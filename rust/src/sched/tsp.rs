@@ -6,37 +6,39 @@
 //! dynamic program) up to [`EXACT_LIMIT`] destinations and falls back to
 //! nearest-neighbour construction + 2-opt refinement beyond that —
 //! near-optimal at the paper's largest set (63 destinations) while
-//! staying dependency-free.
+//! staying dependency-free. Distances come from the fabric's
+//! [`Topology::distance`], so the same solver orders chains on meshes,
+//! tori and rings.
 
-use crate::noc::{Mesh, NodeId};
+use crate::noc::{NodeId, Topology};
 
 /// Held–Karp is O(2^n · n²); 15 destinations ≈ 7.4 M steps — instant.
 pub const EXACT_LIMIT: usize = 15;
 
 /// Open-path TSP order of `dests` starting from `src`.
-pub fn tsp_order(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+pub fn tsp_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
     match dests.len() {
         0 => vec![],
         1 => vec![dests[0]],
-        n if n <= EXACT_LIMIT => held_karp(mesh, src, dests),
-        _ => two_opt(mesh, src, nearest_neighbour(mesh, src, dests)),
+        n if n <= EXACT_LIMIT => held_karp(topo, src, dests),
+        _ => two_opt(topo, src, nearest_neighbour(topo, src, dests)),
     }
 }
 
-/// XY-routing distance (= Manhattan on a mesh).
-fn dist(mesh: &Mesh, a: NodeId, b: NodeId) -> u32 {
-    mesh.manhattan(a, b) as u32
+/// Routing distance (= Manhattan on a mesh, shortest-arc on tori/rings).
+fn dist(topo: &dyn Topology, a: NodeId, b: NodeId) -> u32 {
+    topo.distance(a, b) as u32
 }
 
 /// Exact open-path Held–Karp.
-fn held_karp(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+fn held_karp(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
     let n = dests.len();
     let full: usize = (1 << n) - 1;
     // dp[mask][i] = min cost of starting at src, visiting mask, ending at i.
     let mut dp = vec![vec![u32::MAX; n]; 1 << n];
     let mut parent = vec![vec![usize::MAX; n]; 1 << n];
     for i in 0..n {
-        dp[1 << i][i] = dist(mesh, src, dests[i]);
+        dp[1 << i][i] = dist(topo, src, dests[i]);
     }
     for mask in 1..=full {
         for last in 0..n {
@@ -49,7 +51,7 @@ fn held_karp(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
                     continue;
                 }
                 let nm = mask | (1 << next);
-                let cost = base + dist(mesh, dests[last], dests[next]);
+                let cost = base + dist(topo, dests[last], dests[next]);
                 if cost < dp[nm][next] {
                     dp[nm][next] = cost;
                     parent[nm][next] = last;
@@ -74,7 +76,7 @@ fn held_karp(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
 }
 
 /// Nearest-neighbour construction.
-fn nearest_neighbour(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+fn nearest_neighbour(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
     let mut remaining = dests.to_vec();
     let mut order = Vec::with_capacity(dests.len());
     let mut cur = src;
@@ -82,7 +84,7 @@ fn nearest_neighbour(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> 
         let (idx, _) = remaining
             .iter()
             .enumerate()
-            .min_by_key(|(_, &d)| (dist(mesh, cur, d), d))
+            .min_by_key(|(_, &d)| (dist(topo, cur, d), d))
             .unwrap();
         cur = remaining.swap_remove(idx);
         order.push(cur);
@@ -92,7 +94,7 @@ fn nearest_neighbour(mesh: &Mesh, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> 
 
 /// 2-opt refinement for the open path src -> order[..]. Reversing the
 /// segment (i..=j) changes cost by the two boundary edges only.
-fn two_opt(mesh: &Mesh, src: NodeId, mut order: Vec<NodeId>) -> Vec<NodeId> {
+fn two_opt(topo: &dyn Topology, src: NodeId, mut order: Vec<NodeId>) -> Vec<NodeId> {
     let n = order.len();
     if n < 3 {
         return order;
@@ -113,10 +115,10 @@ fn two_opt(mesh: &Mesh, src: NodeId, mut order: Vec<NodeId>) -> Vec<NodeId> {
                 let a = node_at(&order, i as isize - 1);
                 let b = order[i];
                 let c = order[j];
-                let before = dist(mesh, a, b)
-                    + if j + 1 < n { dist(mesh, c, order[j + 1]) } else { 0 };
-                let after = dist(mesh, a, c)
-                    + if j + 1 < n { dist(mesh, b, order[j + 1]) } else { 0 };
+                let before = dist(topo, a, b)
+                    + if j + 1 < n { dist(topo, c, order[j + 1]) } else { 0 };
+                let after = dist(topo, a, c)
+                    + if j + 1 < n { dist(topo, b, order[j + 1]) } else { 0 };
                 if after < before {
                     order[i..=j].reverse();
                     improved = true;
@@ -130,6 +132,7 @@ fn two_opt(mesh: &Mesh, src: NodeId, mut order: Vec<NodeId>) -> Vec<NodeId> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::{Mesh, Torus};
     use crate::sched::hops::chain_hops;
     use crate::util::rng::Rng;
 
@@ -195,6 +198,23 @@ mod tests {
         let m = Mesh::new(4, 4);
         assert!(tsp_order(&m, NodeId(0), &[]).is_empty());
         assert_eq!(tsp_order(&m, NodeId(0), &[NodeId(9)]), vec![NodeId(9)]);
+    }
+
+    #[test]
+    fn torus_exact_matches_brute_force_and_beats_mesh() {
+        let t = Torus::new(5, 5);
+        let m = Mesh::new(5, 5);
+        let dests: Vec<NodeId> = [24, 4, 20, 13, 7].map(NodeId).to_vec();
+        let got = chain_hops(&t, NodeId(0), &tsp_order(&t, NodeId(0), &dests));
+        let best = permutations(&dests)
+            .into_iter()
+            .map(|p| chain_hops(&t, NodeId(0), &p))
+            .min()
+            .unwrap();
+        assert_eq!(got, best);
+        // Wrap links can only shorten the optimal chain (corner-heavy set).
+        let mesh_best = chain_hops(&m, NodeId(0), &tsp_order(&m, NodeId(0), &dests));
+        assert!(got <= mesh_best, "torus {got} > mesh {mesh_best}");
     }
 
     fn permutations(xs: &[NodeId]) -> Vec<Vec<NodeId>> {

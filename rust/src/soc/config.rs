@@ -3,14 +3,18 @@
 //! systems without recompiling.
 
 use crate::mem::addr_map::DEFAULT_WINDOW;
+use crate::noc::{Topo, TopologyKind};
 
 /// Static description of a simulated SoC.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SocConfig {
-    /// Mesh columns (x extent).
+    /// Grid columns (x extent).
     pub cols: usize,
-    /// Mesh rows (y extent).
+    /// Grid rows (y extent).
     pub rows: usize,
+    /// NoC fabric over the `cols` × `rows` node grid. Default mesh (the
+    /// paper's FlooNoC systems); a ring threads all `cols * rows` nodes.
+    pub topology: TopologyKind,
     /// Scratchpad bytes per node.
     pub spm_bytes: usize,
     /// Address window per node (≥ spm_bytes, power of two).
@@ -26,6 +30,7 @@ impl SocConfig {
         SocConfig {
             cols: 4,
             rows: 5,
+            topology: TopologyKind::Mesh,
             spm_bytes: 1 << 20,
             window: DEFAULT_WINDOW,
             name: "eval-4x5".into(),
@@ -38,6 +43,7 @@ impl SocConfig {
         SocConfig {
             cols: 8,
             rows: 8,
+            topology: TopologyKind::Mesh,
             spm_bytes: 256 << 10,
             window: DEFAULT_WINDOW,
             name: "mesh-8x8".into(),
@@ -51,6 +57,7 @@ impl SocConfig {
         SocConfig {
             cols: 3,
             rows: 3,
+            topology: TopologyKind::Mesh,
             spm_bytes: 4 << 20,
             window: 4 << 20,
             name: "fpga-3x3".into(),
@@ -62,6 +69,7 @@ impl SocConfig {
         SocConfig {
             cols: 2,
             rows: 2,
+            topology: TopologyKind::Mesh,
             spm_bytes: 256 << 10,
             window: DEFAULT_WINDOW,
             name: "synth-2x2".into(),
@@ -74,10 +82,23 @@ impl SocConfig {
         SocConfig {
             cols,
             rows,
+            topology: TopologyKind::Mesh,
             spm_bytes,
             window: DEFAULT_WINDOW,
             name: format!("custom-{cols}x{rows}"),
         }
+    }
+
+    /// Swap the NoC fabric while keeping the node grid and memory map
+    /// (`SocConfig::eval_4x5().with_topology(TopologyKind::Torus)`).
+    pub fn with_topology(mut self, topology: TopologyKind) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// The concrete fabric this config describes.
+    pub fn build_topo(&self) -> Topo {
+        Topo::build(self.topology, self.cols, self.rows)
     }
 
     /// Parse a TOML-subset config:
@@ -86,6 +107,7 @@ impl SocConfig {
     /// name = "my-soc"
     /// cols = 4
     /// rows = 5
+    /// topology = "torus"   # mesh (default) | torus | ring
     /// spm_kib = 1024
     /// ```
     ///
@@ -110,6 +132,12 @@ impl SocConfig {
                 "name" => cfg.name = v.trim_matches('"').to_string(),
                 "cols" => cfg.cols = int(v)?,
                 "rows" => cfg.rows = int(v)?,
+                "topology" => {
+                    let t = v.trim_matches('"');
+                    cfg.topology = TopologyKind::parse(t).ok_or_else(|| {
+                        format!("line {}: unknown topology {t:?} (mesh|torus|ring)", ln + 1)
+                    })?;
+                }
                 "spm_kib" => cfg.spm_bytes = int(v)? << 10,
                 "window_mib" => cfg.window = (int(v)? as u64) << 20,
                 other => return Err(format!("line {}: unknown key {other:?}", ln + 1)),
@@ -146,6 +174,7 @@ mod tests {
             name = "t"
             cols = 6
             rows = 2
+            topology = "torus"
             spm_kib = 512
             "#,
         )
@@ -153,6 +182,7 @@ mod tests {
         assert_eq!(cfg.name, "t");
         assert_eq!(cfg.cols, 6);
         assert_eq!(cfg.rows, 2);
+        assert_eq!(cfg.topology, TopologyKind::Torus);
         assert_eq!(cfg.spm_bytes, 512 << 10);
     }
 
@@ -161,6 +191,20 @@ mod tests {
         assert!(SocConfig::from_toml("bogus = 1").is_err());
         assert!(SocConfig::from_toml("cols = banana").is_err());
         assert!(SocConfig::from_toml("colsbanana").is_err());
+        assert!(SocConfig::from_toml("topology = \"hypercube\"").is_err());
+    }
+
+    #[test]
+    fn topology_defaults_to_mesh_and_builds_each_fabric() {
+        use crate::noc::{NodeId, Topo, Topology};
+        assert_eq!(SocConfig::eval_4x5().topology, TopologyKind::Mesh);
+        let torus = SocConfig::custom(4, 4, 64 << 10).with_topology(TopologyKind::Torus);
+        assert!(matches!(torus.build_topo(), Topo::Torus(_)));
+        // A ring threads the full grid: same node count as the mesh.
+        let ring = SocConfig::custom(4, 4, 64 << 10).with_topology(TopologyKind::Ring);
+        let topo = ring.build_topo();
+        assert_eq!(topo.n_nodes(), 16);
+        assert_eq!(topo.distance(NodeId(0), NodeId(15)), 1);
     }
 
     #[test]

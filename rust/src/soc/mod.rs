@@ -1,10 +1,13 @@
-//! SoC assembly: mesh + per-node memory, AXI slave, and all four DMA
-//! engines, advanced in lock-step.
+//! SoC assembly: NoC fabric + per-node memory, AXI slave, and all four
+//! DMA engines, advanced in lock-step.
 //!
 //! Presets mirror the paper's three evaluation systems:
 //! [`SocConfig::eval_4x5`] (20-cluster Occamy-derived SoC, §IV-A),
 //! [`SocConfig::fpga_3x3`] (9-cluster VPK180 prototype, §IV-E) and
-//! [`SocConfig::synth_2x2`] (4-cluster 16 nm synthesis SoC, §IV-F).
+//! [`SocConfig::synth_2x2`] (4-cluster 16 nm synthesis SoC, §IV-F) —
+//! all meshes, and each swappable to a torus or ring via
+//! [`SocConfig::with_topology`] (the address map and engines are
+//! fabric-agnostic; only routing and chain schedules change).
 //!
 //! [`Soc::run_until_idle`] steps the system in the configured
 //! [`StepMode`]: the default event-driven mode fast-forwards the shared
@@ -22,7 +25,7 @@ use crate::dma::torrent::dse::AffinePattern;
 use crate::dma::torrent::{ChainDest, ChainTask, Torrent};
 use crate::dma::{Engine, EngineCtx, EngineKind, TaskResult};
 use crate::mem::{AddrMap, Scratchpad};
-use crate::noc::{Mesh, Network, NodeId};
+use crate::noc::{Network, NodeId, Topo, Topology};
 use crate::sched::{schedule_pairs, Strategy};
 use crate::sim::{StepMode, Watchdog};
 
@@ -91,10 +94,10 @@ pub struct Soc {
 
 impl Soc {
     pub fn new(cfg: SocConfig) -> Self {
-        let mesh = Mesh::new(cfg.cols, cfg.rows);
-        let map = AddrMap::new(mesh.n_nodes(), cfg.window);
-        let nodes = mesh
-            .nodes()
+        let topo = cfg.build_topo();
+        let map = AddrMap::new(topo.n_nodes(), cfg.window);
+        let nodes = (0..topo.n_nodes())
+            .map(NodeId)
             .map(|id| SocNode {
                 torrent: Torrent::new(id),
                 idma: Idma::new(id),
@@ -107,7 +110,7 @@ impl Soc {
             .collect();
         Soc {
             cfg,
-            net: Network::new(mesh),
+            net: Network::new(topo),
             nodes,
             map,
             step_mode: StepMode::default(),
@@ -123,8 +126,10 @@ impl Soc {
         soc
     }
 
-    pub fn mesh(&self) -> Mesh {
-        self.net.mesh
+    /// The NoC fabric (mesh, torus or ring). `Copy`; coerces to
+    /// `&dyn Topology` wherever the schedulers want the trait.
+    pub fn topo(&self) -> Topo {
+        self.net.topo
     }
 
     pub fn cycle(&self) -> u64 {
@@ -278,8 +283,8 @@ impl Soc {
         strategy: Strategy,
         with_data: bool,
     ) -> Vec<NodeId> {
-        let mesh = self.mesh();
-        let (order, ordered) = schedule_pairs(strategy, &mesh, src, dests.to_vec());
+        let topo = self.topo();
+        let (order, ordered) = schedule_pairs(strategy, &topo, src, dests.to_vec());
         let ordered: Vec<ChainDest> = ordered
             .into_iter()
             .map(|(node, pattern)| ChainDest { node, pattern })
@@ -406,6 +411,34 @@ mod tests {
         assert!(l4 > l1 && l8 > l4);
         // Chainwrite: 8 dests must cost far less than 8 separate copies.
         assert!(l8 < l1 * 4, "chainwrite not amortizing: l1={l1} l8={l8}");
+    }
+
+    #[test]
+    fn chainwrite_moves_bytes_on_torus_and_ring() {
+        use crate::noc::TopologyKind;
+        for topology in [TopologyKind::Torus, TopologyKind::Ring] {
+            let mut s =
+                Soc::new(SocConfig::custom(3, 3, 64 * 1024).with_topology(topology));
+            let len = 2048;
+            let data = fill_src(&mut s, NodeId(0), 0, len);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+            let dests: Vec<(NodeId, AffinePattern)> = [8usize, 4, 1]
+                .iter()
+                .map(|&n| {
+                    (
+                        NodeId(n),
+                        AffinePattern::contiguous(s.map.base_of(NodeId(n)) + 0x40, len),
+                    )
+                })
+                .collect();
+            let order = s.chainwrite(3, NodeId(0), read, &dests, Strategy::Greedy, true);
+            assert_eq!(order.len(), 3, "{topology:?}");
+            s.run_until_idle(200_000);
+            for (n, _) in &dests {
+                let got = s.nodes[n.0].mem.peek(s.map.base_of(*n) + 0x40, len);
+                assert_eq!(got, &data[..], "{topology:?} dest {n:?} data mismatch");
+            }
+        }
     }
 
     #[test]

@@ -2,21 +2,23 @@
 //! §IV-C hop study (randomized destination sets, seeded for exact
 //! reproducibility of every figure).
 
-use crate::noc::{Mesh, NodeId};
+use crate::noc::{NodeId, Topology};
 use crate::util::rng::Rng;
 
 /// Generate `count` random destination sets of size `n_dst`, drawn from
-/// the mesh excluding `src` (paper: "every group selects destinations
-/// randomly and repeats this 128 times").
+/// the fabric excluding `src` (paper: "every group selects destinations
+/// randomly and repeats this 128 times"). Sets depend only on the node
+/// count, so equally-sized fabrics draw identical sets from one seed —
+/// the basis of the cross-topology differential comparisons.
 pub fn random_dest_sets(
-    mesh: &Mesh,
+    topo: &dyn Topology,
     src: NodeId,
     n_dst: usize,
     count: usize,
     seed: u64,
 ) -> Vec<Vec<NodeId>> {
-    let candidates: Vec<NodeId> = mesh.nodes().filter(|&n| n != src).collect();
-    assert!(n_dst <= candidates.len(), "n_dst {n_dst} exceeds mesh minus source");
+    let candidates: Vec<NodeId> = (0..topo.n_nodes()).map(NodeId).filter(|&n| n != src).collect();
+    assert!(n_dst <= candidates.len(), "n_dst {n_dst} exceeds fabric minus source");
     let mut rng = Rng::new(seed);
     (0..count)
         .map(|_| {
@@ -50,6 +52,7 @@ pub fn fig6_groups() -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::noc::{Mesh, Ring};
 
     #[test]
     fn dest_sets_are_distinct_and_exclude_source() {
@@ -96,5 +99,17 @@ mod tests {
         let m = Mesh::new(8, 8);
         let sets = random_dest_sets(&m, NodeId(0), 63, 2, 3);
         assert_eq!(sets[0].len(), 63);
+    }
+
+    #[test]
+    fn equal_sized_fabrics_draw_identical_sets() {
+        // 64-node mesh and 64-node ring: same seed, same destination sets
+        // — the topology sweep compares fabrics on identical workloads.
+        let m = Mesh::new(8, 8);
+        let r = Ring::new(64);
+        assert_eq!(
+            random_dest_sets(&m, NodeId(0), 8, 4, 11),
+            random_dest_sets(&r, NodeId(0), 8, 4, 11)
+        );
     }
 }

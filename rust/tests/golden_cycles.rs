@@ -1,0 +1,207 @@
+//! Golden-cycle regression pins — the oracle proving the topology
+//! refactor (and any future fabric work) changed no mesh number.
+//!
+//! A table of fixed mesh scenarios (the quickstart example, the
+//! multicast_sweep example's headline points, the batch_pipeline DAG,
+//! and Fig 7's per-destination marginal cost) runs under both step
+//! modes; every metric must be bit-identical between `FullTick` and
+//! `EventDriven`, and — once blessed — bit-identical to the committed
+//! `rust/tests/golden_cycles.tsv`.
+//!
+//! Blessing: the pins are measured numbers, so the first machine with a
+//! toolchain runs `make golden-bless` (sets `TORRENT_GOLDEN_BLESS=1`)
+//! and commits the TSV; from then on any drift in mesh cycle counts —
+//! however introduced — fails this suite. Until the file exists the
+//! suite still enforces the step-mode equality and the marginal-cost
+//! band, and prints the would-be pin values.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
+use torrent::noc::NodeId;
+use torrent::sched::Strategy;
+use torrent::sim::StepMode;
+use torrent::soc::SocConfig;
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden_cycles.tsv");
+
+/// (scenario, metric) -> value.
+type Metrics = BTreeMap<(String, String), u64>;
+
+fn record(m: &mut Metrics, scenario: &str, metric: &str, value: u64) {
+    m.insert((scenario.to_string(), metric.to_string()), value);
+}
+
+fn fill(c: &mut Coordinator, node: usize, bytes: usize) {
+    let base = c.soc.map.base_of(NodeId(node));
+    let payload: Vec<u8> = (0..bytes).map(|i| (i % 251) as u8).collect();
+    c.soc.nodes[node].mem.write(base, &payload);
+}
+
+/// The quickstart example's exact transfer: 16 KB from cluster 0 to
+/// {5, 10, 15} on a 4×4 mesh, greedy chain, real bytes.
+fn quickstart(m: &mut Metrics, mode: StepMode) {
+    let mut c = Coordinator::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+    fill(&mut c, 0, 16 * 1024);
+    let dests = [NodeId(5), NodeId(10), NodeId(15)];
+    let task = c
+        .submit_simple(NodeId(0), &dests, 16 * 1024, EngineKind::Torrent(Strategy::Greedy), true)
+        .expect("valid request");
+    c.run_to_completion(1_000_000);
+    record(m, "quickstart", "latency", c.latency_of(task).unwrap());
+    record(m, "quickstart", "quiesce_cycle", c.soc.cycle());
+    record(m, "quickstart", "flit_hops", c.soc.net.stats.flit_hops);
+}
+
+/// The multicast_sweep example's headline column: 32 KB to 8
+/// destinations on the 4×5 evaluation SoC, per engine.
+fn multicast_sweep(m: &mut Metrics, mode: StepMode) {
+    for (label, engine) in [
+        ("torrent_tsp", EngineKind::Torrent(Strategy::Tsp)),
+        ("mcast", EngineKind::Mcast),
+        ("idma", EngineKind::Idma),
+    ] {
+        let mut c = Coordinator::with_step_mode(SocConfig::eval_4x5(), mode);
+        let dests: Vec<NodeId> = (1..=8).map(NodeId).collect();
+        let task = c
+            .submit_simple(NodeId(0), &dests, 32 * 1024, engine, false)
+            .expect("valid request");
+        c.run_to_completion(100_000_000);
+        record(m, "multicast_sweep", label, c.latency_of(task).unwrap());
+    }
+}
+
+/// The batch_pipeline example's shape in miniature: a scatter feeding
+/// two dependent stages (a 3-stage DAG across mixed engines).
+fn batch_pipeline(m: &mut Metrics, mode: StepMode) {
+    let mut c = Coordinator::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+    fill(&mut c, 0, 4 * 1024);
+    let a = c
+        .submit(
+            P2mpRequest::to(&[NodeId(1), NodeId(2)])
+                .src(NodeId(0))
+                .bytes(4 * 1024)
+                .engine(EngineKind::Torrent(Strategy::Greedy))
+                .with_data(true),
+        )
+        .expect("stage a");
+    let b = c
+        .submit(
+            P2mpRequest::to(&[NodeId(5), NodeId(6)])
+                .src(NodeId(1))
+                .bytes(4 * 1024)
+                .engine(EngineKind::Torrent(Strategy::Tsp))
+                .after(&[a]),
+        )
+        .expect("stage b");
+    let d = c
+        .submit(
+            P2mpRequest::to(&[NodeId(10)])
+                .src(NodeId(2))
+                .bytes(4 * 1024)
+                .engine(EngineKind::Idma)
+                .after(&[a]),
+        )
+        .expect("stage c");
+    c.run_until_all_done(10_000_000);
+    record(m, "batch_pipeline", "stage_a_latency", c.latency_of(a).unwrap());
+    record(m, "batch_pipeline", "stage_b_latency", c.latency_of(b).unwrap());
+    record(m, "batch_pipeline", "stage_c_latency", c.latency_of(d).unwrap());
+    record(m, "batch_pipeline", "all_done_cycle", c.soc.cycle());
+}
+
+/// Fig 7's per-destination marginal cost (the paper's "82 CC per
+/// destination" linear trend): latency(4 dests) - latency(3 dests) at
+/// 64 KB on the evaluation SoC.
+fn marginal_cost(m: &mut Metrics, mode: StepMode) {
+    let lat = |n: usize| -> u64 {
+        let mut c = Coordinator::with_step_mode(SocConfig::eval_4x5(), mode);
+        let dests: Vec<NodeId> = (1..=n).map(NodeId).collect();
+        let engine = EngineKind::Torrent(Strategy::Greedy);
+        let task = c
+            .submit_simple(NodeId(0), &dests, 64 * 1024, engine, false)
+            .expect("valid request");
+        c.run_to_completion(10_000_000);
+        c.latency_of(task).unwrap()
+    };
+    let (l3, l4) = (lat(3), lat(4));
+    assert!(l4 > l3, "an extra destination must cost cycles");
+    record(m, "fig7", "marginal_cc_per_dest", l4 - l3);
+}
+
+fn measure(mode: StepMode) -> Metrics {
+    let mut m = Metrics::new();
+    quickstart(&mut m, mode);
+    multicast_sweep(&mut m, mode);
+    batch_pipeline(&mut m, mode);
+    marginal_cost(&mut m, mode);
+    m
+}
+
+fn render(m: &Metrics) -> String {
+    let mut out = String::from("# scenario\tmetric\tcycles — `make golden-bless` regenerates\n");
+    for ((scenario, metric), value) in m {
+        writeln!(out, "{scenario}\t{metric}\t{value}").unwrap();
+    }
+    out
+}
+
+fn parse(text: &str) -> Metrics {
+    let mut m = Metrics::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (s, k, v) = (
+            parts.next().expect("scenario"),
+            parts.next().expect("metric"),
+            parts.next().expect("value"),
+        );
+        m.insert((s.to_string(), k.to_string()), v.parse().expect("golden value"));
+    }
+    m
+}
+
+#[test]
+fn golden_mesh_cycle_counts_are_pinned_and_step_mode_invariant() {
+    let full = measure(StepMode::FullTick);
+    let ev = measure(StepMode::EventDriven);
+    assert_eq!(full, ev, "EventDriven diverged from FullTick on a pinned mesh scenario");
+
+    // The paper's Fig-7 trend: ~82 CC of configuration per added
+    // destination. A loose band (the simulator is calibrated, not
+    // cycle-copied from the RTL) that still catches structural drift.
+    let marginal = full[&("fig7".to_string(), "marginal_cc_per_dest".to_string())];
+    assert!(
+        (40..=200).contains(&marginal),
+        "per-destination marginal cost {marginal} CC strayed from the ~82 CC trend"
+    );
+
+    // Bless mode rewrites the pins whether or not the file exists —
+    // it is the documented recovery path for *intentional* drift.
+    if std::env::var("TORRENT_GOLDEN_BLESS").is_ok() {
+        std::fs::write(GOLDEN_PATH, render(&full)).expect("write golden file");
+        eprintln!("blessed {} pins into {GOLDEN_PATH} — commit it", full.len());
+        return;
+    }
+    match std::fs::read_to_string(GOLDEN_PATH) {
+        Ok(text) => {
+            let pinned = parse(&text);
+            assert_eq!(
+                pinned, full,
+                "cycle counts drifted from the blessed {GOLDEN_PATH}; if the change is \
+                 intentional, re-bless with `make golden-bless` and commit the diff"
+            );
+        }
+        Err(_) => {
+            eprintln!(
+                "no golden file at {GOLDEN_PATH}; run `make golden-bless` and commit it.\n\
+                 measured pins:\n{}",
+                render(&full)
+            );
+        }
+    }
+}
