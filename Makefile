@@ -2,7 +2,8 @@
 # python/compile/aot.py (artifacts).
 
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
-	examples-smoke doc clean topo-sweep topo-matrix golden-bless
+	examples-smoke doc clean topo-sweep topo-matrix golden-bless \
+	fault-sweep fault-matrix
 
 all: tier1
 
@@ -54,6 +55,17 @@ topo-sweep:
 # Usage: make topo-matrix TOPOLOGY=torus   (defaults to all fabrics)
 topo-matrix:
 	TORRENT_TOPOLOGY=$(TOPOLOGY) cargo test --release --test topologies
+
+# Availability + tail latency of chain repair vs fail-stop under seeded
+# fault schedules (EXPERIMENTS.md §Fault sweep).
+fault-sweep:
+	cargo run --release -- fault-sweep --trials 24
+
+# The chaos property suite + repair unit tests, one fabric per process
+# (CI fault-matrix). Usage: make fault-matrix TOPOLOGY=torus
+# (defaults to all fabrics).
+fault-matrix:
+	TORRENT_TOPOLOGY=$(TOPOLOGY) cargo test --release --test failure_injection --test repair
 
 # Measure and commit the golden mesh cycle pins (rust/tests/
 # golden_cycles.tsv). Run once on the first machine with a toolchain;

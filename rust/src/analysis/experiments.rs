@@ -167,6 +167,144 @@ pub fn topology_sweep(seed: u64, trials: usize) -> Table {
     t
 }
 
+/// Fault sweep: availability and tail latency of chain repair vs. the
+/// fail-stop baseline on degraded fabrics (ROADMAP "chain repair").
+///
+/// For each fabric (4×4 mesh, 4×4 torus) × fault rate (1–3 seeded
+/// router-kill/follower-drop activations, never the initiator) the same
+/// `trials` seeded workloads — 4 KB Chainwrite with real bytes to 4
+/// random destinations — run twice: once with repair enabled, once
+/// fail-stop (`norepair`). Availability counts destinations whose
+/// scratchpads hold byte-exact payloads when the run ends (a fail-stop
+/// run still credits destinations fully written before the fault hit);
+/// p99 is over completed-task latencies, `-` when nothing completed.
+pub fn fault_sweep(seed: u64, trials: usize) -> (Vec<FaultSweepRow>, Table) {
+    use crate::noc::TopologyKind;
+    use crate::sim::{Fault, FaultKind, FaultPlan};
+    use crate::util::rng::Rng;
+
+    let bytes = 4 * 1024;
+    let n_dst = 4;
+    let mut rows = Vec::new();
+    let mut t = Table::new("Fault sweep — chain repair vs fail-stop (4 KB, 4 dests)").header([
+        "fabric", "faults", "mode", "avail%", "p99[CC]", "done", "repaired", "failed",
+    ]);
+    for topology in [TopologyKind::Mesh, TopologyKind::Torus] {
+        for rate in 1..=3usize {
+            for repair in [true, false] {
+                let mut served = 0usize;
+                let mut wanted = 0usize;
+                let mut lats: Vec<u64> = Vec::new();
+                let (mut done, mut repaired, mut failed) = (0usize, 0usize, 0usize);
+                for trial in 0..trials {
+                    // One seed stream per (fabric, rate, trial): both
+                    // repair modes replay the identical workload + fault
+                    // schedule, so the comparison is paired.
+                    let mut rng = Rng::new(
+                        seed ^ ((rate as u64) << 8)
+                            ^ ((topology as u64) << 16)
+                            ^ ((trial as u64) << 24),
+                    );
+                    let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
+                    let dests: Vec<NodeId> = {
+                        let topo = cfg.build_topo();
+                        workloads::random_dest_sets(&topo, NodeId(0), n_dst, 1, rng.next_u64())
+                            .remove(0)
+                    };
+                    let mut plan = FaultPlan {
+                        faults: Vec::new(),
+                        detect_timeout: 2_000,
+                        repair,
+                    };
+                    for _ in 0..rate {
+                        // Never the initiator: a dead source has nothing
+                        // to repair from and both modes trivially score 0.
+                        let node = rng.range(1, 15) as usize;
+                        let at_cycle = rng.range(50, 1_500);
+                        let kind = if rng.next_u64() % 2 == 0 {
+                            FaultKind::RouterKill { node }
+                        } else {
+                            FaultKind::FollowerDrop { node }
+                        };
+                        plan.faults.push(Fault { at_cycle, kind });
+                    }
+                    let mut c = Coordinator::new(cfg.with_faults(plan));
+                    let pattern: Vec<u8> =
+                        (0..bytes).map(|i| (i as u64 * 131 + seed) as u8).collect();
+                    let base = c.soc.map.base_of(NodeId(0));
+                    c.soc.nodes[0].mem.write(base, &pattern);
+                    let task = c
+                        .submit_simple(
+                            NodeId(0),
+                            &dests,
+                            bytes,
+                            EngineKind::Torrent(Strategy::Greedy),
+                            true,
+                        )
+                        .expect("valid sweep request");
+                    c.run_to_completion(2_000_000);
+                    let half = c.soc.cfg.spm_bytes as u64 / 2;
+                    wanted += dests.len();
+                    for &d in &dests {
+                        let addr = c.soc.map.base_of(d) + half;
+                        if c.soc.nodes[d.0].mem.read(addr, bytes) == pattern {
+                            served += 1;
+                        }
+                    }
+                    match c.record(task).unwrap().outcome {
+                        None => done += 1,
+                        Some(crate::coordinator::TaskOutcome::Repaired { .. }) => repaired += 1,
+                        Some(_) => failed += 1,
+                    }
+                    if let Some(lat) = c.latency_of(task) {
+                        lats.push(lat);
+                    }
+                }
+                lats.sort_unstable();
+                let p99 = lats.last().map(|_| lats[(lats.len() * 99 + 99) / 100 - 1]);
+                let row = FaultSweepRow {
+                    fabric: topology.label(),
+                    rate,
+                    repair,
+                    availability: 100.0 * served as f64 / wanted as f64,
+                    p99,
+                    done,
+                    repaired,
+                    failed,
+                };
+                t.row([
+                    row.fabric.to_string(),
+                    rate.to_string(),
+                    if repair { "repair" } else { "fail-stop" }.to_string(),
+                    fnum(row.availability, 1),
+                    p99.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+                    done.to_string(),
+                    repaired.to_string(),
+                    failed.to_string(),
+                ]);
+                rows.push(row);
+            }
+        }
+    }
+    (rows, t)
+}
+
+/// One `fault_sweep` cell: a (fabric, fault-rate, policy) aggregate.
+#[derive(Debug, Clone)]
+pub struct FaultSweepRow {
+    pub fabric: &'static str,
+    pub rate: usize,
+    /// true = repair enabled, false = fail-stop baseline.
+    pub repair: bool,
+    /// Percentage of requested destinations holding byte-exact payloads.
+    pub availability: f64,
+    /// p99 completion latency over completed tasks (`None`: none completed).
+    pub p99: Option<u64>,
+    pub done: usize,
+    pub repaired: usize,
+    pub failed: usize,
+}
+
 /// Fig 7: 64 KB Chainwrite configuration overhead, 1–8 destinations on
 /// the 4×5 SoC. Returns `(table, slope, intercept, r²)` — the paper
 /// reports a linear trend of ≈82 CC per destination.
@@ -402,6 +540,40 @@ mod tests {
         let table = topology_sweep(seed, 4).render();
         for fabric in ["mesh", "torus", "ring"] {
             assert!(table.contains(fabric), "missing {fabric} rows:\n{table}");
+        }
+    }
+
+    #[test]
+    fn fault_sweep_pairs_repair_against_failstop() {
+        let (rows, table) = fault_sweep(7, 3);
+        // 2 fabrics x 3 rates x 2 modes.
+        assert_eq!(rows.len(), 12);
+        let rendered = table.render();
+        for needle in ["mesh", "torus", "repair", "fail-stop"] {
+            assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
+        }
+        for r in &rows {
+            assert!((0.0..=100.0).contains(&r.availability), "{r:?}");
+            assert_eq!(r.done + r.repaired + r.failed, 3, "{r:?}");
+            if !r.repair {
+                assert_eq!(r.repaired, 0, "fail-stop must never re-chain: {r:?}");
+            }
+        }
+        // Paired runs (identical seeds per cell): repair can only add
+        // served destinations on top of whatever landed pre-fault, so
+        // availability with repair dominates fail-stop cell by cell.
+        for pair in rows.chunks(2) {
+            let (rep, stop) = (&pair[0], &pair[1]);
+            assert!(rep.repair && !stop.repair);
+            assert_eq!((rep.fabric, rep.rate), (stop.fabric, stop.rate));
+            assert!(
+                rep.availability >= stop.availability,
+                "repair {:.1}% < fail-stop {:.1}% on {} rate {}",
+                rep.availability,
+                stop.availability,
+                rep.fabric,
+                rep.rate
+            );
         }
     }
 

@@ -63,7 +63,7 @@ use crate::analysis::eta_p2mp;
 use crate::dma::torrent::dse::AffinePattern;
 use crate::dma::xdma::XDMA_SUBTASK_BIT;
 use crate::dma::{Engine as _, TaskPhase, TaskResult, TaskSpec};
-use crate::noc::NodeId;
+use crate::noc::{Degraded, NodeId};
 use crate::sched;
 use crate::sim::Watchdog;
 use crate::soc::{Soc, SocConfig};
@@ -128,6 +128,142 @@ pub enum TaskStatus {
     Streaming,
     /// Completed; the [`Record`] holds the [`TaskResult`].
     Done,
+    /// Stalled by a fault; replacement chains are streaming around the
+    /// suspect hop (see [`TaskOutcome::Repairing`]).
+    Degraded,
+    /// Completed via repair, possibly serving only the destinations
+    /// still reachable on the degraded fabric.
+    Repaired,
+    /// Closed without a result: unrepairable, repair disabled, or a
+    /// dependency failed.
+    Failed,
+}
+
+/// What the fault machinery decided about a task. `None` on every record
+/// of a healthy run — the field (and the watchdog producing it) only
+/// engage when the config carries a [`crate::sim::FaultPlan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskOutcome {
+    /// The original chain stalled; replacement chains scheduled over the
+    /// degraded fabric are in flight.
+    Repairing { suspect: NodeId },
+    /// Replacement chains completed. `served` destinations got their
+    /// data; `lost` were unreachable on the degraded fabric (dead, or no
+    /// clean route from the source).
+    Repaired { suspect: NodeId, served: usize, lost: Vec<NodeId> },
+    /// The task is closed without completing. `suspect` names the hop
+    /// the diagnosis blamed, when there was a chain to diagnose.
+    Failed { suspect: Option<NodeId>, reason: String },
+}
+
+/// Typed result of [`Coordinator::run_to_completion`]: what happened to
+/// every task the fault machinery touched. Empty (`is_clean`) on healthy
+/// runs, so existing callers that ignore the return value see no change.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    /// Cycles spent inside this run call.
+    pub cycles: u64,
+    /// Tasks holding a clean (non-repaired) result when the run ended.
+    pub completed: usize,
+    /// Every fault-touched task with its terminal (or in-flight repair)
+    /// outcome, in task-id order.
+    pub outcomes: Vec<(TaskId, TaskOutcome)>,
+}
+
+impl RunReport {
+    /// No task was touched by a fault.
+    pub fn is_clean(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    /// Tasks that completed through repair.
+    pub fn repaired(&self) -> Vec<TaskId> {
+        self.outcomes
+            .iter()
+            .filter(|(_, o)| matches!(o, TaskOutcome::Repaired { .. }))
+            .map(|&(t, _)| t)
+            .collect()
+    }
+
+    /// Tasks closed without a result.
+    pub fn failed(&self) -> Vec<TaskId> {
+        self.outcomes
+            .iter()
+            .filter(|(_, o)| matches!(o, TaskOutcome::Failed { .. }))
+            .map(|&(t, _)| t)
+            .collect()
+    }
+}
+
+/// Re-chain `dests` around the damage in `deg`: repeatedly schedule the
+/// remaining destinations (the same `sched::Strategy` machinery used at
+/// dispatch, now fed the degraded topology) and cut each proposed chain
+/// at its first dirty leg — physical XY/arc routes cannot detour, so a
+/// leg whose route crosses a dead router or severed link would feed the
+/// replacement stream straight back into the fault. Returns the clean
+/// chains plus the destinations no clean chain can reach (dead nodes,
+/// or no clean route from `src` at all).
+///
+/// "Clean" covers *every* route the Chainwrite protocol exercises for a
+/// hop, not just the forward data leg: the cfg descriptor travels
+/// directly `src -> hop`, data cuts through `prev -> hop`, and grant /
+/// finish back-propagate `hop -> prev`. Under dimension-ordered routing
+/// those are three different physical paths, so a chain is only viable
+/// when all three are undamaged — a plan validated on data legs alone
+/// can re-stall on a cfg or grant route the planner never looked at.
+pub fn plan_repair_chains<T>(
+    deg: &Degraded,
+    strategy: sched::Strategy,
+    src: NodeId,
+    mut remaining: Vec<(NodeId, T)>,
+) -> (Vec<Vec<(NodeId, T)>>, Vec<NodeId>) {
+    let mut chains = Vec::new();
+    let mut lost = Vec::new();
+    remaining.retain(|(n, _)| {
+        let alive = deg.node_alive(*n);
+        if !alive {
+            lost.push(*n);
+        }
+        alive
+    });
+    while !remaining.is_empty() {
+        let (_, ordered) = sched::schedule_pairs(strategy, deg, src, remaining);
+        let mut chain: Vec<(NodeId, T)> = Vec::new();
+        let mut rest: Vec<(NodeId, T)> = Vec::new();
+        let mut prev = src;
+        let mut broken = false;
+        for (node, t) in ordered {
+            // cfg src->node, data prev->node, grant/finish node->prev.
+            let viable = !broken
+                && deg.path_is_clean(src, node)
+                && deg.path_is_clean(prev, node)
+                && deg.path_is_clean(node, prev);
+            if viable {
+                prev = node;
+                chain.push((node, t));
+            } else if broken {
+                rest.push((node, t));
+            } else {
+                broken = true;
+                if !deg.path_is_clean(src, node) || !deg.path_is_clean(node, src) {
+                    // Even a one-hop chain needs cfg/data out (src->node)
+                    // and grant/finish back (node->src); with either route
+                    // damaged the destination is unreachable — XY routing
+                    // has no alternative path.
+                    lost.push(node);
+                } else {
+                    rest.push((node, t));
+                }
+            }
+        }
+        if !chain.is_empty() {
+            chains.push(chain);
+        }
+        // Each round either emits a chain or loses the head destination,
+        // so `remaining` strictly shrinks and the loop terminates.
+        remaining = rest;
+    }
+    (chains, lost)
 }
 
 /// A point-to-multipoint request, built fluently:
@@ -251,8 +387,30 @@ pub struct Record {
     /// Chain traversal order (Torrent engines, set at dispatch).
     pub chain_order: Option<Vec<NodeId>>,
     pub result: Option<TaskResult>,
+    /// Fault verdict; `None` on every record of a healthy run.
+    pub outcome: Option<TaskOutcome>,
+    /// Repair rounds spent on this task.
+    pub repairs: u32,
     /// Resolved-but-undispatched job (present while dependency-blocked).
     pending: Option<Pending>,
+    /// Cycle the task reached its engine (repair latency bookkeeping).
+    dispatched_at: u64,
+    /// (read, ordered dests, with_data) kept for re-issue; only cloned
+    /// when a fault plan is armed, so healthy runs pay nothing.
+    repair_spec: Option<(AffinePattern, Vec<(NodeId, AffinePattern)>, bool)>,
+    /// Router-activity counters per chain hop, snapshotted at dispatch —
+    /// a hop still at its baseline when the watchdog fires never moved a
+    /// flit for anyone, which corners fail-silent hops the structural
+    /// checks cannot see.
+    act_baseline: Option<Vec<u64>>,
+    /// Heartbeat: (progress sum, cycle it last changed).
+    hb: Option<(u64, u64)>,
+    /// Engine ids of the repair chains currently in flight.
+    repair_live: Vec<u32>,
+    /// Latest finish cycle among completed repair chains.
+    repair_finish: u64,
+    /// Destinations written off by repair planning so far.
+    lost_dests: Vec<NodeId>,
 }
 
 /// A validated request waiting in an admission queue.
@@ -295,7 +453,15 @@ pub struct Coordinator {
     /// transfers submitted directly to a Torrent). XDMA-internal leg
     /// results are dropped, not kept here.
     pub orphan_results: Vec<TaskResult>,
+    /// Repair-chain engine id → index of the record it is healing.
+    repair_parent: HashMap<u32, usize>,
+    /// Fault plan armed: run the heartbeat watchdog between quanta.
+    fault_watch: bool,
 }
+
+/// Repair rounds allowed per task before the coordinator gives up — the
+/// idempotence backstop: a fault storm cannot make it re-issue forever.
+const MAX_REPAIRS: u32 = 3;
 
 impl Coordinator {
     pub fn new(cfg: SocConfig) -> Self {
@@ -310,6 +476,7 @@ impl Coordinator {
     }
 
     fn from_soc(soc: Soc) -> Self {
+        let fault_watch = !soc.cfg.faults.is_empty();
         Coordinator {
             soc,
             next_task: 1,
@@ -318,6 +485,8 @@ impl Coordinator {
             admission: BTreeMap::new(),
             open_tasks: 0,
             orphan_results: Vec::new(),
+            repair_parent: HashMap::new(),
+            fault_watch,
         }
     }
 
@@ -511,7 +680,16 @@ impl Coordinator {
             deps: after,
             chain_order: None,
             result: None,
+            outcome: None,
+            repairs: 0,
             pending: Some(Pending { read, dests, with_data, drop_offset }),
+            dispatched_at: 0,
+            repair_spec: None,
+            act_baseline: None,
+            hb: None,
+            repair_live: Vec::new(),
+            repair_finish: 0,
+            lost_dests: Vec::new(),
         });
         self.open_tasks += 1;
         // Fast path: a task with no unfinished dependencies goes straight
@@ -561,29 +739,57 @@ impl Coordinator {
             .all(|d| self.records[self.index[&d.0]].result.is_some())
     }
 
+    /// A dependency of this record can never complete (failed terminal
+    /// outcome without a result).
+    fn dep_failed(&self, idx: usize) -> bool {
+        self.records[idx].deps.iter().any(|d| {
+            let dep = &self.records[self.index[&d.0]];
+            dep.result.is_none() && matches!(dep.outcome, Some(TaskOutcome::Failed { .. }))
+        })
+    }
+
     /// Release dependency edges: dispatch every admitted task whose
     /// dependencies have all completed, in deterministic (initiator,
     /// FIFO) order. Independent tasks bypass dependency-blocked ones, so
     /// one stalled DAG branch never serializes the rest of an
     /// initiator's queue. Called only when a completion was observed —
-    /// eligibility cannot change otherwise.
+    /// eligibility cannot change otherwise. Tasks behind a *failed*
+    /// dependency are closed as failed themselves (repeating until a
+    /// fixpoint covers transitive chains), so a fault never wedges the
+    /// admission queue.
     fn dispatch_ready(&mut self) {
-        let nodes: Vec<NodeId> = self.admission.keys().copied().collect();
-        for n in nodes {
-            let ids: Vec<u32> = self.admission[&n].iter().copied().collect();
-            let mut blocked = VecDeque::new();
-            for id in ids {
-                let idx = self.index[&id];
-                if self.deps_ready(idx) {
-                    self.dispatch(idx);
+        loop {
+            let mut changed = false;
+            let nodes: Vec<NodeId> = self.admission.keys().copied().collect();
+            for n in nodes {
+                let ids: Vec<u32> = self.admission[&n].iter().copied().collect();
+                let mut blocked = VecDeque::new();
+                for id in ids {
+                    let idx = self.index[&id];
+                    if self.dep_failed(idx) {
+                        let rec = &mut self.records[idx];
+                        rec.pending = None;
+                        rec.outcome = Some(TaskOutcome::Failed {
+                            suspect: None,
+                            reason: "dependency failed".into(),
+                        });
+                        self.open_tasks -= 1;
+                        changed = true;
+                    } else if self.deps_ready(idx) {
+                        self.dispatch(idx);
+                        changed = true;
+                    } else {
+                        blocked.push_back(id);
+                    }
+                }
+                if blocked.is_empty() {
+                    self.admission.remove(&n);
                 } else {
-                    blocked.push_back(id);
+                    *self.admission.get_mut(&n).unwrap() = blocked;
                 }
             }
-            if blocked.is_empty() {
-                self.admission.remove(&n);
-            } else {
-                *self.admission.get_mut(&n).unwrap() = blocked;
+            if !changed {
+                return;
             }
         }
     }
@@ -606,6 +812,19 @@ impl Coordinator {
             dests
         };
         let now = self.soc.cycle();
+        self.records[idx].dispatched_at = now;
+        if self.fault_watch {
+            if let EngineKind::Torrent(_) = engine {
+                // Keep what repair needs: the resolved job for re-issue,
+                // and each chain hop's activity counter as the diagnosis
+                // baseline.
+                self.records[idx].act_baseline = self.records[idx]
+                    .chain_order
+                    .as_ref()
+                    .map(|ch| ch.iter().map(|&h| self.soc.net.router_activity(h)).collect());
+                self.records[idx].repair_spec = Some((read.clone(), dests.clone(), with_data));
+            }
+        }
         self.soc.nodes[src.0]
             .engine_mut(engine)
             .submit(TaskSpec { task, read, dests, with_data, drop_offset }, now)
@@ -628,6 +847,38 @@ impl Coordinator {
         for node in &mut self.soc.nodes {
             for engine in node.engines_mut() {
                 for res in engine.drain_results() {
+                    if let Some(&pidx) = self.repair_parent.get(&res.task) {
+                        // A repair chain finished. When the last live one
+                        // lands, the parent task completes as Repaired
+                        // with a synthesized result spanning original
+                        // dispatch to the final repair finish.
+                        self.repair_parent.remove(&res.task);
+                        let rec = &mut self.records[pidx];
+                        rec.repair_live.retain(|&t| t != res.task);
+                        rec.repair_finish = rec.repair_finish.max(res.finished_at);
+                        if rec.repair_live.is_empty() && rec.result.is_none() {
+                            let mut lost = std::mem::take(&mut rec.lost_dests);
+                            lost.sort_unstable_by_key(|n| n.0);
+                            lost.dedup();
+                            let suspect = match rec.outcome {
+                                Some(TaskOutcome::Repairing { suspect }) => suspect,
+                                _ => rec.src,
+                            };
+                            let served = rec.n_dests - lost.len();
+                            rec.result = Some(TaskResult {
+                                task: rec.task.0,
+                                submitted_at: rec.dispatched_at,
+                                finished_at: rec.repair_finish,
+                                bytes: rec.bytes,
+                                n_dests: served,
+                            });
+                            rec.outcome =
+                                Some(TaskOutcome::Repaired { suspect, served, lost });
+                            self.open_tasks -= 1;
+                            completed = true;
+                        }
+                        continue;
+                    }
                     match self.index.get(&res.task) {
                         Some(&i) if self.records[i].result.is_none() => {
                             self.records[i].result = Some(res);
@@ -666,6 +917,9 @@ impl Coordinator {
         while !done(self) {
             self.soc.step_quantum(start, max_cycles);
             self.collect_and_dispatch();
+            if self.fault_watch {
+                self.watch_faults();
+            }
             dog.check(self.soc.cycle() - start);
         }
     }
@@ -673,10 +927,31 @@ impl Coordinator {
     /// Run until every engine and the fabric drain (the quiescence
     /// drain). Panics via `sim::Watchdog` after `max_cycles` — including
     /// when a dependency can never be released.
-    pub fn run_to_completion(&mut self, max_cycles: u64) {
+    ///
+    /// Returns a [`RunReport`]: on a healthy run it is empty
+    /// ([`RunReport::is_clean`]); under an armed
+    /// [`crate::sim::FaultPlan`], stalled tasks are detected by the
+    /// heartbeat watchdog, diagnosed to a suspect hop, and either
+    /// re-chained around the damage or closed as
+    /// [`TaskStatus::Failed`] — the report names each such task and its
+    /// [`TaskOutcome`] instead of hanging until the cycle watchdog.
+    pub fn run_to_completion(&mut self, max_cycles: u64) -> RunReport {
+        let start = self.soc.cycle();
         self.run_scheduler(max_cycles, "soc.quiesce", |c| {
             c.admission.is_empty() && c.soc.is_idle()
         });
+        let mut report = RunReport {
+            cycles: self.soc.cycle() - start,
+            ..RunReport::default()
+        };
+        for rec in &self.records {
+            match &rec.outcome {
+                Some(o) => report.outcomes.push((rec.task, o.clone())),
+                None if rec.result.is_some() => report.completed += 1,
+                None => {}
+            }
+        }
+        report
     }
 
     /// Run until every submitted task has completed (trailing fabric
@@ -687,14 +962,255 @@ impl Coordinator {
     }
 
     /// Run until `task` completes; other in-flight tasks keep streaming.
-    /// Returns the task's latency.
+    /// Returns the task's latency. Panics if a fault closes the task as
+    /// [`TaskStatus::Failed`] — a failed task has no latency.
     pub fn run_until_complete(&mut self, task: impl Into<TaskId>, max_cycles: u64) -> u64 {
         let id = task.into();
         assert!(self.index.contains_key(&id.0), "{id} was never submitted here");
         self.run_scheduler(max_cycles, "coordinator.task", |c| {
-            c.record(id).is_some_and(|r| r.result.is_some())
+            c.record(id).is_some_and(|r| {
+                r.result.is_some() || matches!(r.outcome, Some(TaskOutcome::Failed { .. }))
+            })
         });
-        self.latency_of(id).expect("loop exits only on completion")
+        self.latency_of(id)
+            .unwrap_or_else(|| panic!("{id} failed under fault injection: no latency"))
+    }
+
+    // ------------------------------------------------------------------
+    // Fault detection and repair
+    // ------------------------------------------------------------------
+
+    /// One heartbeat pass (called between stepping quanta when a fault
+    /// plan is armed, and exposed for the repair test suite): each
+    /// dispatched, non-terminal task's progress ordinal — summed across
+    /// every engine on every live node — must change within
+    /// `detect_timeout` cycles, or the task is declared stalled and
+    /// handed to [`Coordinator::diagnose`]/repair.
+    ///
+    /// Inert until the first fault activates: both step modes reach the
+    /// activation cycle in lockstep, so heartbeat trajectories — and
+    /// therefore repair timing — stay bit-identical between
+    /// `EventDriven` and `FullTick` runs.
+    pub fn watch_faults(&mut self) {
+        if !self.soc.any_fault_active() {
+            return;
+        }
+        let now = self.soc.cycle();
+        let timeout = self.soc.cfg.faults.detect_timeout;
+        for idx in 0..self.records.len() {
+            let rec = &self.records[idx];
+            if rec.result.is_some()
+                || rec.pending.is_some()
+                || matches!(
+                    rec.outcome,
+                    Some(TaskOutcome::Failed { .. }) | Some(TaskOutcome::Repaired { .. })
+                )
+            {
+                continue;
+            }
+            let sum = self.progress_sum(idx);
+            let hb = self.records[idx].hb;
+            match hb {
+                Some((v, since)) if v == sum => {
+                    if now.saturating_sub(since) >= timeout {
+                        self.handle_stall(idx, now);
+                    }
+                }
+                _ => self.records[idx].hb = Some((sum, now)),
+            }
+        }
+    }
+
+    /// Progress ordinal for a task: engine-reported progress folded over
+    /// every live node. Changes every few tens of cycles while the
+    /// protocol advances (cfg decode, grant/finish hops, per-flit gate
+    /// counters); freezing for a full detection window means the chain is
+    /// dead, not slow. Repairing tasks are tracked through their live
+    /// repair-chain ids (the original id was cancelled).
+    fn progress_sum(&self, idx: usize) -> u64 {
+        let rec = &self.records[idx];
+        let mut sum = 0u64;
+        let ids: &[u32] = if rec.repair_live.is_empty() {
+            std::slice::from_ref(&rec.task.0)
+        } else {
+            &rec.repair_live
+        };
+        for (i, node) in self.soc.nodes.iter().enumerate() {
+            if self.soc.node_dropped(NodeId(i)) {
+                continue;
+            }
+            for engine in node.engines() {
+                for &tid in ids {
+                    if let Some(p) = engine.progress_of(tid) {
+                        // Mix in a presence mark so "state vanished" and
+                        // "state at zero" differ.
+                        sum = sum.wrapping_add(p).wrapping_add(0x9e37_79b9_97f4_a7c1);
+                    }
+                }
+            }
+        }
+        sum
+    }
+
+    /// Name the hop that killed a stalled chain. Checks, in order of
+    /// confidence: a structurally dead or dropped hop (including the
+    /// source), the first chain leg whose physical route crosses the
+    /// damage, a hop whose engine lost the task entirely (fail-silent
+    /// drop before the cfg landed), and finally a hop whose router
+    /// activity counter never moved off its dispatch baseline — it never
+    /// forwarded a flit for anyone. `None` for tasks with no chain (non-
+    /// Torrent engines).
+    pub fn diagnose(&self, task: impl Into<TaskId>) -> Option<NodeId> {
+        let rec = self.record(task)?;
+        let chain = rec.chain_order.as_ref()?;
+        let deg = self.soc.net.degraded_topology();
+        let src = rec.src;
+        if !deg.node_alive(src) || self.soc.node_dropped(src) {
+            return Some(src);
+        }
+        for &h in chain {
+            if !deg.node_alive(h) || self.soc.node_dropped(h) {
+                return Some(h);
+            }
+        }
+        let mut prev = src;
+        for &h in chain {
+            // A hop's protocol routes: cfg src->h, data prev->h,
+            // grant/finish h->prev (three distinct physical paths under
+            // dimension-ordered routing).
+            if !deg.path_is_clean(src, h)
+                || !deg.path_is_clean(prev, h)
+                || !deg.path_is_clean(h, prev)
+            {
+                return Some(h);
+            }
+            prev = h;
+        }
+        if rec.outcome.is_none() {
+            // Engine-level evidence only applies before a repair: cancel
+            // wipes task state everywhere, which would finger hop 0.
+            for &h in chain {
+                if self.soc.nodes[h.0].torrent.progress_of(rec.task.0).is_none() {
+                    return Some(h);
+                }
+            }
+            if let Some(base) = &rec.act_baseline {
+                for (i, &h) in chain.iter().enumerate() {
+                    if self.soc.net.router_activity(h) == base[i] {
+                        return Some(h);
+                    }
+                }
+            }
+        }
+        chain.last().copied()
+    }
+
+    /// A task's heartbeat flatlined: cancel the wreck everywhere, then
+    /// either re-chain the still-reachable destinations over the degraded
+    /// fabric (fresh engine ids — the cancelled id's stale traffic is
+    /// swallowed by the engines) or close the task as failed.
+    fn handle_stall(&mut self, idx: usize, now: u64) {
+        let task = self.records[idx].task;
+        let suspect = self.diagnose(task);
+        // Tear down engine state for the stalled ids on every node, so
+        // the fabric can drain and a replacement cannot double-report.
+        let mut ids = vec![task.0];
+        ids.extend(self.records[idx].repair_live.drain(..));
+        for id in &ids {
+            self.repair_parent.remove(id);
+        }
+        for node in &mut self.soc.nodes {
+            for engine in node.engines_mut() {
+                for &tid in &ids {
+                    engine.cancel(tid);
+                }
+            }
+        }
+        let (engine, src, repairs) =
+            (self.records[idx].engine, self.records[idx].src, self.records[idx].repairs);
+        let strategy = match engine {
+            EngineKind::Torrent(s) => s,
+            _ => {
+                return self.fail(idx, suspect, "engine cannot re-chain");
+            }
+        };
+        if !self.soc.cfg.faults.repair {
+            return self.fail(idx, suspect, "repair disabled (norepair)");
+        }
+        if repairs >= MAX_REPAIRS {
+            return self.fail(idx, suspect, "repair budget exhausted");
+        }
+        if self.soc.node_dropped(src) || self.soc.net.router_dead(src) {
+            return self.fail(idx, suspect, "initiator lost");
+        }
+        let Some((read, dests, with_data)) = self.records[idx].repair_spec.clone() else {
+            return self.fail(idx, suspect, "no repair spec recorded");
+        };
+        // Survivors: drop destinations whose engine complex is gone
+        // (their data can never land), then chain the rest around the
+        // fabric damage.
+        let mut lost_now = Vec::new();
+        let dests: Vec<(NodeId, AffinePattern)> = dests
+            .into_iter()
+            .filter(|(n, _)| {
+                let dead = self.soc.node_dropped(*n);
+                if dead {
+                    lost_now.push(*n);
+                }
+                !dead
+            })
+            .collect();
+        let deg = self.soc.net.degraded_topology();
+        let (chains, lost_plan) = plan_repair_chains(&deg, strategy, src, dests);
+        lost_now.extend(lost_plan);
+        self.records[idx].lost_dests.extend(lost_now);
+        if chains.is_empty() {
+            return self.fail(idx, suspect, "no reachable destinations");
+        }
+        let suspect = suspect.unwrap_or(src);
+        for chain in chains {
+            let rid = self.next_task;
+            self.next_task += 1;
+            debug_assert!(rid & XDMA_SUBTASK_BIT == 0, "task id space exhausted");
+            self.records[idx].repair_live.push(rid);
+            self.repair_parent.insert(rid, idx);
+            self.soc.nodes[src.0]
+                .engine_mut(engine)
+                .submit(
+                    TaskSpec {
+                        task: rid,
+                        read: read.clone(),
+                        dests: chain,
+                        with_data,
+                        drop_offset: 0,
+                    },
+                    now,
+                )
+                .expect("repair chain derived from a validated task");
+        }
+        let rec = &mut self.records[idx];
+        rec.repairs += 1;
+        rec.outcome = Some(TaskOutcome::Repairing { suspect });
+        // Fresh detection window for the replacement chains.
+        rec.hb = None;
+    }
+
+    /// Close a task without a result and propagate the failure to any
+    /// dependents still waiting in admission.
+    fn fail(&mut self, idx: usize, suspect: Option<NodeId>, reason: &str) {
+        let rec = &mut self.records[idx];
+        if matches!(rec.outcome, Some(TaskOutcome::Failed { .. })) {
+            return;
+        }
+        let mut lost = std::mem::take(&mut rec.lost_dests);
+        lost.sort_unstable_by_key(|n| n.0);
+        lost.dedup();
+        rec.lost_dests = lost;
+        rec.outcome = Some(TaskOutcome::Failed { suspect, reason: reason.into() });
+        if rec.result.is_none() {
+            self.open_tasks -= 1;
+        }
+        self.dispatch_ready();
     }
 
     // ------------------------------------------------------------------
@@ -727,6 +1243,13 @@ impl Coordinator {
     /// issued).
     pub fn status(&self, task: impl Into<TaskId>) -> Option<TaskStatus> {
         let rec = self.record(task)?;
+        if let Some(outcome) = &rec.outcome {
+            return Some(match outcome {
+                TaskOutcome::Repairing { .. } => TaskStatus::Degraded,
+                TaskOutcome::Repaired { .. } => TaskStatus::Repaired,
+                TaskOutcome::Failed { .. } => TaskStatus::Failed,
+            });
+        }
         if rec.result.is_some() {
             return Some(TaskStatus::Done);
         }
@@ -1019,6 +1542,105 @@ mod tests {
         c.run_until_all_done(1_000_000);
         let fin = |t: TaskHandle| c.record(t).unwrap().result.as_ref().unwrap().finished_at;
         assert!(fin(b) > fin(a), "dependency order violated");
+        assert_eq!(c.open_tasks(), 0);
+    }
+
+    #[test]
+    fn healthy_run_report_is_clean() {
+        let mut c = coord();
+        let t = c
+            .submit_simple(NodeId(0), &[NodeId(1)], 1024, EngineKind::Torrent(Strategy::Greedy), false)
+            .unwrap();
+        let report = c.run_to_completion(1_000_000);
+        assert!(report.is_clean());
+        assert_eq!(report.completed, 1);
+        assert!(report.cycles > 0);
+        assert_eq!(t.status(&c), TaskStatus::Done);
+    }
+
+    #[test]
+    fn norepair_stall_is_failed_with_suspect_not_hung() {
+        use crate::sim::FaultPlan;
+        // Destination 3's engine complex drops out before the cfg lands:
+        // the chain can never finish. With repair disabled the watchdog
+        // must close the task as Failed (naming the dead hop) instead of
+        // hanging until the cycle watchdog panics.
+        let cfg = SocConfig::custom(2, 2, 64 * 1024)
+            .with_faults(FaultPlan::parse("drop:3@0;timeout:500;norepair").unwrap());
+        let mut c = Coordinator::new(cfg);
+        let t = c
+            .submit_simple(NodeId(0), &[NodeId(3)], 1024, EngineKind::Torrent(Strategy::Greedy), false)
+            .unwrap();
+        let report = c.run_to_completion(200_000);
+        assert_eq!(t.status(&c), TaskStatus::Failed);
+        assert_eq!(report.failed(), vec![t.id()]);
+        let rec = c.record(t).unwrap();
+        match &rec.outcome {
+            Some(TaskOutcome::Failed { suspect, .. }) => {
+                assert_eq!(*suspect, Some(NodeId(3)), "diagnosis must name the dropped hop");
+            }
+            o => panic!("expected Failed outcome, got {o:?}"),
+        }
+        assert!(c.latency_of(t).is_none());
+        assert_eq!(c.open_tasks(), 0);
+    }
+
+    #[test]
+    fn router_kill_repairs_surviving_destination() {
+        use crate::sim::FaultPlan;
+        // Chain 0 -> 1 -> 3 on a 2x2 mesh; router 3 dies mid-task. The
+        // coordinator must detect the flatline, blame node 3, and
+        // re-chain the surviving destination 1 under a fresh task id.
+        let cfg = SocConfig::custom(2, 2, 64 * 1024)
+            .with_faults(FaultPlan::parse("router:3@200;timeout:800").unwrap());
+        let mut c = Coordinator::new(cfg);
+        let t = c
+            .submit_simple(
+                NodeId(0),
+                &[NodeId(1), NodeId(3)],
+                2048,
+                EngineKind::Torrent(Strategy::Greedy),
+                false,
+            )
+            .unwrap();
+        let report = c.run_to_completion(2_000_000);
+        assert_eq!(t.status(&c), TaskStatus::Repaired);
+        assert_eq!(report.repaired(), vec![t.id()]);
+        let rec = c.record(t).unwrap();
+        assert_eq!(rec.repairs, 1);
+        match &rec.outcome {
+            Some(TaskOutcome::Repaired { suspect, served, lost }) => {
+                assert_eq!(*suspect, NodeId(3));
+                assert_eq!(*served, 1);
+                assert_eq!(lost.as_slice(), &[NodeId(3)]);
+            }
+            o => panic!("expected Repaired outcome, got {o:?}"),
+        }
+        // The synthesized result spans dispatch to the repair finish.
+        assert!(c.latency_of(t).unwrap() > 800, "repair latency includes the detection window");
+        assert_eq!(c.open_tasks(), 0);
+    }
+
+    #[test]
+    fn failed_dependency_fails_dependents_transitively() {
+        use crate::sim::FaultPlan;
+        let cfg = SocConfig::custom(2, 2, 64 * 1024)
+            .with_faults(FaultPlan::parse("drop:3@0;timeout:500;norepair").unwrap());
+        let mut c = Coordinator::new(cfg);
+        let a = c
+            .submit_simple(NodeId(0), &[NodeId(3)], 1024, EngineKind::Torrent(Strategy::Greedy), false)
+            .unwrap();
+        let b = c
+            .submit(P2mpRequest::to(&[NodeId(2)]).src(NodeId(0)).bytes(1024).after(&[a]))
+            .unwrap();
+        let d = c
+            .submit(P2mpRequest::to(&[NodeId(1)]).src(NodeId(0)).bytes(1024).after(&[b]))
+            .unwrap();
+        let report = c.run_to_completion(200_000);
+        assert_eq!(a.status(&c), TaskStatus::Failed);
+        assert_eq!(b.status(&c), TaskStatus::Failed, "dependent of a failed task");
+        assert_eq!(d.status(&c), TaskStatus::Failed, "transitive dependent");
+        assert_eq!(report.failed().len(), 3);
         assert_eq!(c.open_tasks(), 0);
     }
 

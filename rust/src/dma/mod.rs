@@ -251,6 +251,24 @@ pub trait Engine {
     /// Coarse phase of an in-flight task, `None` if unknown here.
     fn phase_of(&self, task: u32, now: u64) -> Option<TaskPhase>;
 
+    /// Monotone-while-healthy progress ordinal for an in-flight task —
+    /// the coordinator's heartbeat. Any value that *changes* while the
+    /// protocol advances works (segment indices, bytes landed, phase
+    /// ordinals); a value frozen for a full detection window marks the
+    /// task as stalled. `None` when this engine holds no state for the
+    /// task. Default: no heartbeat (only fault-aware engines report).
+    fn progress_of(&self, _task: u32) -> Option<u64> {
+        None
+    }
+
+    /// Fault repair: abandon every local trace of `task` — queued work,
+    /// in-flight state, forwarding gates — so a replacement chain can be
+    /// issued without the wreck double-reporting or wedging the node.
+    /// Returns true if any state was discarded. Default: nothing to do.
+    fn cancel(&mut self, _task: u32) -> bool {
+        false
+    }
+
     /// Chain legs this engine wants the node's Torrent frontend to run.
     /// Default: none.
     fn take_frontend_legs(&mut self) -> Vec<(ChainTask, u64)> {

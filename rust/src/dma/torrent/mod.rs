@@ -27,7 +27,7 @@ pub mod cfg;
 pub mod dse;
 pub mod timing;
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::rc::Rc;
 
 use crate::mem::Scratchpad;
@@ -139,6 +139,10 @@ pub struct Torrent {
     /// The remote Torrent streams the data back as a 1-node chain; we
     /// record a local TaskResult when our follower role completes.
     pending_reads: HashMap<u32, u64>,
+    /// Tasks the coordinator cancelled here (fault repair). Late traffic
+    /// for these ids — cfgs still in flight, stale ChainData segments —
+    /// is consumed silently instead of re-creating state or panicking.
+    cancelled: HashSet<u32>,
     pub results: Vec<TaskResult>,
     pub stats: TorrentStats,
 }
@@ -151,9 +155,79 @@ impl Torrent {
             active: None,
             followers: BTreeMap::new(),
             pending_reads: HashMap::new(),
+            cancelled: HashSet::new(),
             results: Vec::new(),
             stats: TorrentStats::default(),
         }
+    }
+
+    /// Fault repair: forget every local trace of `task` and remember the
+    /// id so late traffic is swallowed. Any half-open stream gates are
+    /// released fully first — their flits are already queued in the NI
+    /// and would otherwise wedge the injection queue forever.
+    pub fn cancel(&mut self, task: u32) -> bool {
+        let mut hit = false;
+        let before = self.queue.len();
+        self.queue.retain(|(t, _)| t.task != task);
+        hit |= self.queue.len() != before;
+        if self.active.as_ref().is_some_and(|i| i.task.task == task) {
+            if let Some(g) = self.active.as_ref().and_then(|i| i.cur_gate.as_ref()) {
+                g.set(u32::MAX);
+            }
+            self.active = None;
+            hit = true;
+        }
+        if let Some(f) = self.followers.remove(&task) {
+            for gate in f.forwards.values() {
+                gate.set(u32::MAX);
+            }
+            hit = true;
+        }
+        hit |= self.pending_reads.remove(&task).is_some();
+        self.cancelled.insert(task);
+        hit
+    }
+
+    /// Heartbeat ordinal for the coordinator's stall detector: any value
+    /// that keeps *changing* while the local protocol state advances.
+    /// The coordinator sums this across every node's engines; a sum
+    /// frozen for a full detection window marks the task as stalled.
+    pub fn progress_of(&self, task: u32) -> Option<u64> {
+        let mut seen = false;
+        let mut acc: u64 = 0;
+        if self.queue.iter().any(|(t, _)| t.task == task) {
+            seen = true;
+            acc = acc.wrapping_add(1);
+        }
+        if let Some(init) = self.active.as_ref().filter(|i| i.task.task == task) {
+            seen = true;
+            let phase = match &init.phase {
+                InitPhase::Dispatch { next_cfg, .. } => 0x100 + *next_cfg as u64,
+                InitPhase::WaitGrant => 0x1_0000,
+                InitPhase::SendData { next_seg, .. } => {
+                    0x10_0000
+                        + (*next_seg as u64) * 0x1000
+                        + init.cur_gate.as_ref().map_or(0, |g| g.get() as u64)
+                }
+                InitPhase::WaitFinish => 0x100_0000,
+            };
+            acc = acc.wrapping_add(phase);
+        }
+        if let Some(f) = self.followers.get(&task) {
+            seen = true;
+            acc = acc
+                .wrapping_add((f.bytes_arrived as u64) << 4)
+                .wrapping_add(f.grant_sent as u64)
+                .wrapping_add((f.grant_from_next as u64) << 1)
+                .wrapping_add((f.finish_sent as u64) << 2)
+                .wrapping_add((f.finish_from_next as u64) << 3)
+                .wrapping_add(f.forwarded.len() as u64);
+        }
+        if self.pending_reads.contains_key(&task) {
+            seen = true;
+            acc = acc.wrapping_add(0x200_0000);
+        }
+        seen.then_some(acc)
     }
 
     /// Submit a Chainwrite / P2P task (initiator side).
@@ -321,6 +395,12 @@ impl Torrent {
                     TorrentCfg::decode_prefix(bytes).expect("malformed cfg frame");
                 debug_assert_eq!(cfg.task, *task);
                 self.stats.cfgs_received += 1;
+                if self.cancelled.contains(task) {
+                    // Cfg raced a repair cancellation: resurrecting the
+                    // follower role would wait forever for a stream the
+                    // initiator will never send.
+                    return true;
+                }
                 if cfg.cfg_type == CfgType::Read {
                     // Read tunnel: the requester's write-back cfg follows in
                     // the same payload; serve it as a 1-node Chainwrite from
@@ -401,6 +481,9 @@ impl Torrent {
             Message::ChainData { task, last, .. } => {
                 let node = self.node;
                 let Some(f) = self.followers.get_mut(task) else {
+                    if self.cancelled.contains(task) {
+                        return true; // stale segment of a repaired chain
+                    }
                     panic!("ChainData for unknown task {task} at {node:?}");
                 };
                 f.bytes_arrived += pkt.payload_bytes;
@@ -689,6 +772,14 @@ impl Engine for Torrent {
 
     fn peek_result(&self, task: u32) -> Option<&TaskResult> {
         self.results.iter().find(|r| r.task == task)
+    }
+
+    fn progress_of(&self, task: u32) -> Option<u64> {
+        Torrent::progress_of(self, task)
+    }
+
+    fn cancel(&mut self, task: u32) -> bool {
+        Torrent::cancel(self, task)
     }
 
     fn phase_of(&self, task: u32, _now: u64) -> Option<TaskPhase> {

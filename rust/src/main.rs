@@ -8,8 +8,10 @@
 //! torrent fig9                            # DeepSeek-V3 workloads (Fig 9)
 //! torrent fig11                           # area/power (Fig 11, Fig 1d)
 //! torrent topo-sweep [--seed N] [--trials N]  # hops across mesh/torus/ring
+//! torrent fault-sweep [--seed N] [--trials N] # availability: repair vs fail-stop
 //! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
 //!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
+//!             [--faults SPEC]             # e.g. "router:5@300;timeout:2000"
 //! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
 //! ```
 //!
@@ -26,12 +28,14 @@ use torrent::soc::SocConfig;
 use torrent::util::cli::Args;
 
 const USAGE: &str =
-    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|run|artifacts> [options]
+    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|run|artifacts> [options]
   fig5   [--quick]
   fig6   [--seed N] [--trials N]
   topo-sweep [--seed N] [--trials N]
+  fault-sweep [--seed N] [--trials N]
   run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
          [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
+         [--faults \"link:FROM-TO@C;router:N@C;straggle:NxF@C;drop:N@C;timeout:C;norepair\"]
   artifacts [--dir artifacts]";
 
 fn main() {
@@ -76,6 +80,12 @@ fn main() {
             let trials = args.usize_or("trials", 64);
             experiments::topology_sweep(seed, trials).print();
         }
+        "fault-sweep" => {
+            let seed = args.u64_or("seed", 2025);
+            let trials = args.usize_or("trials", 24);
+            let (_, t) = experiments::fault_sweep(seed, trials);
+            t.print();
+        }
         "run" => run_custom(&args),
         "artifacts" => smoke_artifacts(&args),
         _ => println!("{USAGE}"),
@@ -95,6 +105,13 @@ fn run_custom(args: &Args) {
         Some(t) => cfg.with_topology(TopologyKind::parse(t).unwrap_or_else(|| {
             panic!("--topology: unknown fabric {t:?} (mesh|torus|ring)")
         })),
+        None => cfg,
+    };
+    let cfg = match args.get("faults") {
+        Some(spec) => cfg.with_faults(
+            torrent::sim::FaultPlan::parse(spec)
+                .unwrap_or_else(|e| panic!("--faults: {e}")),
+        ),
         None => cfg,
     };
     let size_kb = args.usize_or("size", 64);
@@ -128,18 +145,30 @@ fn run_custom(args: &Args) {
             std::process::exit(2);
         }
     };
-    c.run_to_completion(1_000_000_000);
+    let report = c.run_to_completion(1_000_000_000);
     let rec = c.record(task).unwrap();
-    let res = rec.result.as_ref().expect("completed");
-    println!(
-        "{} on {}: {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",
-        engine.label(),
-        topo_label,
-        size_kb,
-        n_dests,
-        res.latency(),
-        rec.eta().unwrap()
-    );
+    if let Some(o) = &rec.outcome {
+        println!("fault outcome: {o:?}");
+    }
+    match rec.result.as_ref() {
+        Some(res) => println!(
+            "{} on {}: {}KB -> {} dests: {} cycles, eta_P2MP = {:.2}",
+            engine.label(),
+            topo_label,
+            size_kb,
+            n_dests,
+            res.latency(),
+            rec.eta().unwrap()
+        ),
+        None => println!(
+            "{} on {}: {}KB -> {} dests: no result (task failed after {} cycles)",
+            engine.label(),
+            topo_label,
+            size_kb,
+            n_dests,
+            report.cycles
+        ),
+    }
     if let Some(order) = &rec.chain_order {
         println!("chain order: {:?}", order.iter().map(|n| n.0).collect::<Vec<_>>());
     }

@@ -16,4 +16,4 @@ pub mod topology;
 pub use network::{Gate, NetStats, Network};
 pub use packet::{Flit, Message, Packet, PacketId, FLIT_BYTES};
 pub use router::{BUF_FLITS, LINK_CYCLES, NUM_VCS, ROUTER_PIPELINE};
-pub use topology::{Coord, Dir, Mesh, NodeId, Ring, Topo, Topology, TopologyKind, Torus};
+pub use topology::{Coord, Degraded, Dir, Mesh, NodeId, Ring, Topo, Topology, TopologyKind, Torus};

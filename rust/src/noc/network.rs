@@ -23,7 +23,8 @@ use std::rc::Rc;
 
 use super::packet::{flits_of, Flit, Packet, PacketId};
 use super::router::{vc_of, Router, LINK_CYCLES, ROUTER_PIPELINE};
-use super::topology::{Dir, NodeId, Topo, Topology};
+use super::topology::{Degraded, Dir, NodeId, Topo, Topology};
+use crate::sim::fault::{Fault, FaultKind, FaultPlan};
 use crate::sim::Watchdog;
 
 /// Shared cut-through gate: number of flits allowed to leave so far.
@@ -50,6 +51,28 @@ pub struct NetStats {
     pub flit_ejections: u64,
     pub packets_sent: u64,
     pub packets_delivered: u64,
+    /// Flits destroyed by fault injection (purged buffers, severed
+    /// links, dead-router deliveries). Always 0 on a healthy fabric.
+    pub flits_dropped: u64,
+}
+
+/// Runtime fault state. Boxed behind an `Option` so a healthy fabric
+/// pays one pointer of storage and one `is_some` branch per tick — the
+/// "provably zero-cost when off" requirement.
+struct FaultState {
+    /// Scheduled activations not yet applied.
+    pending: Vec<Fault>,
+    /// Killed routers (the cluster behind the local port dies with it).
+    dead: Vec<bool>,
+    /// `link_dead[node][dir]`: the directed channel leaving `node`
+    /// toward `dir` is severed.
+    link_dead: Vec<[bool; 5]>,
+    /// Clock-division factor per router; 1 = full speed.
+    slow: Vec<u32>,
+    /// True once any activation has been applied — from then on the
+    /// event-driven stepper stops skipping (degraded fabrics are ticked
+    /// cycle-by-cycle, so EventDriven trivially equals FullTick).
+    active_any: bool,
 }
 
 pub struct Network {
@@ -78,6 +101,11 @@ pub struct Network {
     /// Delivered-but-unconsumed packets across all inboxes (O(1) guard
     /// for the event-driven stepper's per-tick inbox check).
     inbox_packets: usize,
+    /// Flits moved by each router over the run — the per-router activity
+    /// counters the coordinator's dead-hop diagnosis reads.
+    activity: Vec<u64>,
+    /// Fault-injection state; `None` on a healthy fabric.
+    faults: Option<Box<FaultState>>,
     pub stats: NetStats,
 }
 
@@ -99,8 +127,165 @@ impl Network {
             link_flits: 0,
             eject_total: 0,
             inbox_packets: 0,
+            activity: vec![0; n],
+            faults: None,
             stats: NetStats::default(),
         }
+    }
+
+    /// Arm the fabric-relevant part of a [`FaultPlan`] (link/router kills
+    /// and stragglers; follower drops live at the SoC layer). Panics on a
+    /// schedule that names a non-existent node or a non-adjacent link —
+    /// a bad scenario should fail at construction, not mid-run.
+    pub fn install_faults(&mut self, plan: &FaultPlan) {
+        let n = self.topo.n_nodes();
+        plan.validate(n).expect("fault plan out of bounds");
+        let pending: Vec<Fault> = plan
+            .faults
+            .iter()
+            .filter(|f| !matches!(f.kind, FaultKind::FollowerDrop { .. }))
+            .copied()
+            .collect();
+        for f in &pending {
+            if let FaultKind::LinkKill { from, to } = f.kind {
+                assert!(
+                    self.link_dir(from, to).is_some(),
+                    "fault plan kills link {from}->{to}, but the nodes are not adjacent in {}",
+                    self.topo.name()
+                );
+            }
+        }
+        if pending.is_empty() {
+            return;
+        }
+        self.faults = Some(Box::new(FaultState {
+            pending,
+            dead: vec![false; n],
+            link_dead: vec![[false; 5]; n],
+            slow: vec![1; n],
+            active_any: false,
+        }));
+    }
+
+    /// Direction of the physical channel `from -> to`, if adjacent.
+    fn link_dir(&self, from: usize, to: usize) -> Option<Dir> {
+        [Dir::North, Dir::East, Dir::South, Dir::West]
+            .into_iter()
+            .find(|&d| self.topo.neighbour(NodeId(from), d) == Some(NodeId(to)))
+    }
+
+    /// True once any scheduled fault has activated.
+    pub fn fault_active(&self) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.active_any)
+    }
+
+    /// Earliest not-yet-applied activation cycle, if any.
+    pub fn next_fault_activation(&self) -> Option<u64> {
+        self.faults.as_ref().and_then(|f| f.pending.iter().map(|x| x.at_cycle).min())
+    }
+
+    /// True when router `node` has been killed.
+    pub fn router_dead(&self, node: NodeId) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.dead[node.0])
+    }
+
+    /// Flits moved by router `node` so far — the activity counter the
+    /// coordinator's dead-hop diagnosis compares across a chain.
+    pub fn router_activity(&self, node: NodeId) -> u64 {
+        self.activity[node.0]
+    }
+
+    /// Snapshot of the surviving fabric: the base topology minus killed
+    /// routers and severed links, for re-chaining around the damage.
+    pub fn degraded_topology(&self) -> Degraded {
+        match &self.faults {
+            Some(st) => Degraded::new(self.topo, st.dead.clone(), st.link_dead.clone()),
+            None => Degraded::healthy(self.topo),
+        }
+    }
+
+    /// Apply every activation whose cycle has arrived. Called once per
+    /// tick, after the cycle counter advances.
+    fn activate_due_faults(&mut self) {
+        let cycle = self.cycle;
+        let due: Vec<Fault> = {
+            let st = self.faults.as_mut().expect("activate without fault state");
+            if st.pending.is_empty() {
+                return;
+            }
+            let mut due = Vec::new();
+            st.pending.retain(|f| {
+                let fire = f.at_cycle <= cycle;
+                if fire {
+                    due.push(*f);
+                }
+                !fire
+            });
+            due
+        };
+        for f in due {
+            match f.kind {
+                FaultKind::RouterKill { node } => self.kill_router(node),
+                FaultKind::LinkKill { from, to } => self.kill_link(from, to),
+                FaultKind::Straggler { node, factor } => {
+                    let st = self.faults.as_mut().unwrap();
+                    st.slow[node] = factor;
+                    st.active_any = true;
+                }
+                FaultKind::FollowerDrop { .. } => unreachable!("filtered at install"),
+            }
+        }
+    }
+
+    fn kill_router(&mut self, node: usize) {
+        // Buffered flits vanish; their credits return upstream so the
+        // dead router behaves as a sink, not a wedge (see Router::purge —
+        // withheld credits would freeze every upstream path prefix and
+        // strand any repair traffic sharing a link with the wreck).
+        let purged = self.routers[node].purge();
+        for d in Dir::ALL {
+            for vc in 0..super::router::NUM_VCS {
+                let k = purged[d.index()][vc];
+                if k == 0 {
+                    continue;
+                }
+                self.stats.flits_dropped += k as u64;
+                if d == Dir::Local {
+                    continue; // injection checks space directly, no credit
+                }
+                let upstream = self
+                    .topo
+                    .neighbour(NodeId(node), d)
+                    .expect("purged flits on an edge port");
+                for _ in 0..k {
+                    self.routers[upstream.0].return_credit(d.opposite(), vc);
+                }
+            }
+        }
+        // In-flight flits on inbound wires stay on the delay lines and
+        // die at delivery (phase 1), where their credits return too.
+        // The NI dies with the router: queued injections and partial
+        // ejections vanish (no credits involved at the NI boundary).
+        let inj = self.inject[node].len();
+        self.inject_flits -= inj;
+        self.stats.flits_dropped += inj as u64;
+        self.inject[node].clear();
+        let ej = self.eject[node].len();
+        self.eject_total -= ej;
+        self.eject[node].clear();
+        let st = self.faults.as_mut().unwrap();
+        st.dead[node] = true;
+        st.active_any = true;
+    }
+
+    fn kill_link(&mut self, from: usize, to: usize) {
+        // Flits already on the wire keep their delay-line slots and die
+        // at delivery (phase 1) with credit return — the severed channel
+        // is a sink from the activation cycle on.
+        let d = self.link_dir(from, to).expect("validated at install");
+        let st = self.faults.as_mut().unwrap();
+        st.link_dead[from][d.index()] = true;
+        st.active_any = true;
     }
 
     pub fn alloc_packet_id(&mut self) -> PacketId {
@@ -211,8 +396,13 @@ impl Network {
     /// are inert to `tick` and do not block fabric skipping — callers
     /// owning endpoint logic that reacts to ejection progress must check
     /// [`Network::ejections_pending`] separately.
+    /// Once a fault has activated the fabric is never skippable: a
+    /// degraded fabric is ticked cycle-by-cycle, which makes EventDriven
+    /// trivially bit-identical to FullTick on faulted runs. Before the
+    /// first activation, skipping is exact as usual — [`Network::next_event`]
+    /// caps the jump just short of the earliest activation cycle.
     pub fn can_skip(&self) -> bool {
-        self.inject_flits == 0 && self.routers.iter().all(|r| r.is_idle())
+        self.inject_flits == 0 && !self.fault_active() && self.routers.iter().all(|r| r.is_idle())
     }
 
     /// Packets currently mid-assembly at any NI.
@@ -228,11 +418,15 @@ impl Network {
     /// clock to the earliest `deliver_at`, i.e. the step taken at cycle
     /// `min_ready - 1`.
     pub fn next_event(&self) -> Option<u64> {
+        // A pending fault activation is a scheduled event: the fabric
+        // must be ticked at its cycle so the kill applies at the same
+        // cycle under both step modes.
+        let cap = self.next_fault_activation().map(|a| a.saturating_sub(1).max(self.cycle));
         if !self.can_skip() || self.eject_total > 0 {
             return Some(self.cycle); // busy fabric: tick every cycle
         }
         if self.link_flits == 0 {
-            return None; // fully idle fabric
+            return cap; // idle fabric — except for scheduled faults
         }
         let min_ready = self
             .links
@@ -241,7 +435,11 @@ impl Network {
             .filter_map(|q| q.front().map(|&(ready, _, _)| ready))
             .min()
             .expect("link_flits > 0 but no link front");
-        Some(min_ready.saturating_sub(1).max(self.cycle))
+        let ev = min_ready.saturating_sub(1).max(self.cycle);
+        Some(match cap {
+            Some(c) => ev.min(c),
+            None => ev,
+        })
     }
 
     /// Fast-forward the clock over `delta` provably quiescent cycles.
@@ -261,6 +459,13 @@ impl Network {
     pub fn tick(&mut self) {
         self.cycle += 1;
         let cycle = self.cycle;
+
+        // Scheduled fault activations fire first, so a kill at cycle C
+        // affects cycle C's own link deliveries — identically under both
+        // step modes (next_event never skips past an activation).
+        if self.faults.is_some() {
+            self.activate_due_faults();
+        }
 
         // Fully quiescent fabric: the whole tick reduces to advancing the
         // arbitration pointers (§Perf — this is the common case while
@@ -291,6 +496,22 @@ impl Network {
                             .topo
                             .neighbour(NodeId(node), d)
                             .expect("link to nowhere");
+                        if let Some(st) = &self.faults {
+                            if st.link_dead[node][d.index()] || st.dead[dst.0] {
+                                // Severed wire or dead router: the flit
+                                // vanishes, but its credit returns so the
+                                // fault boundary is a sink. Withholding
+                                // the credit would wedge the sender's
+                                // output (wormhole lock + zero credits)
+                                // and creep backpressure across the whole
+                                // upstream path — stranding repair
+                                // traffic on links the degraded topology
+                                // reports clean.
+                                self.stats.flits_dropped += 1;
+                                self.routers[node].return_credit(d, vc);
+                                continue;
+                            }
+                        }
                         self.routers[dst.0].accept(d.opposite(), vc, flit);
                     }
                 }
@@ -300,6 +521,17 @@ impl Network {
         // 2. Injection: one flit per node per cycle, gate and space permitting.
         if self.inject_flits > 0 {
             for node in 0..self.inject.len() {
+                let node_dead = self.faults.as_ref().is_some_and(|st| st.dead[node]);
+                if node_dead {
+                    // The NI died after these flits were queued.
+                    let n = self.inject[node].len();
+                    if n > 0 {
+                        self.inject_flits -= n;
+                        self.stats.flits_dropped += n as u64;
+                        self.inject[node].clear();
+                    }
+                    continue;
+                }
                 let Some(front) = self.inject[node].front() else { continue };
                 if let Some(g) = &front.gate {
                     if g.get() <= front.flit.seq {
@@ -321,12 +553,22 @@ impl Network {
         // `tick_into` would have done for them).
         let mut sends = std::mem::take(&mut self.moved_scratch);
         for node in 0..self.routers.len() {
+            if let Some(st) = &self.faults {
+                let f = st.slow[node];
+                if f > 1 && cycle % f as u64 != 0 {
+                    // Straggler off-cycle: the slow clock domain holds
+                    // its pipeline; only the arbitration pointer moves.
+                    self.routers[node].rr_advance(1);
+                    continue;
+                }
+            }
             if self.routers[node].is_idle() {
                 self.routers[node].rr_advance(1);
                 continue;
             }
             sends.clear();
             self.routers[node].tick_into(&self.topo, &mut sends);
+            self.activity[node] += sends.len() as u64;
             // Return credits for freed input slots.
             let freed = std::mem::take(&mut self.routers[node].freed);
             for (port_idx, vc) in freed {
@@ -668,6 +910,153 @@ mod tests {
         }
         assert_eq!(spent_fast, spent_slow);
         assert_eq!(fast.stats.flit_hops, slow.stats.flit_hops);
+    }
+
+    #[test]
+    fn healthy_fabric_has_no_fault_state() {
+        let mut n = net(3, 3);
+        n.install_faults(&FaultPlan::default());
+        assert!(n.faults.is_none(), "an empty plan must not allocate fault state");
+        assert!(!n.fault_active());
+        assert_eq!(n.next_fault_activation(), None);
+    }
+
+    #[test]
+    fn router_kill_blackholes_traffic() {
+        // 0 -> 2 on a 4x1 mesh, router 1 killed before injection: the
+        // flit dies at node 1's inbound link and never arrives, and the
+        // surviving fabric drains back to idle (the sink returns credits).
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("router:1@0").unwrap());
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(2), Message::Raw(7)));
+        for _ in 0..100 {
+            n.tick();
+        }
+        assert!(n.recv(NodeId(2)).is_none(), "flit crossed a dead router");
+        assert!(n.router_dead(NodeId(1)));
+        assert!(n.fault_active());
+        assert_eq!(n.stats.flits_dropped, 1);
+        assert_eq!(n.stats.packets_delivered, 0);
+        assert!(n.is_idle(), "dropped traffic must not strand fabric state");
+    }
+
+    #[test]
+    fn link_kill_is_directional() {
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("link:1-2@0").unwrap());
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(2), Message::Raw(1)));
+        n.send(NodeId(3), Packet::new(0, NodeId(3), NodeId(0), Message::Raw(2)));
+        for _ in 0..200 {
+            n.tick();
+        }
+        assert!(n.recv(NodeId(2)).is_none(), "eastward flit crossed the severed link");
+        let west = n.recv(NodeId(0)).expect("westward direction is a separate channel");
+        assert_eq!(west.msg, Message::Raw(2));
+    }
+
+    #[test]
+    fn kill_mid_flight_sinks_the_stream_without_wedging_upstream() {
+        let mut n = net(4, 1);
+        // Long packet so flits are buffered/in flight when the kill lands.
+        n.install_faults(&FaultPlan::parse("router:2@8").unwrap());
+        n.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)).with_phantom_payload(64 * 12),
+        );
+        for _ in 0..300 {
+            n.tick();
+        }
+        assert!(n.recv(NodeId(3)).is_none());
+        // Every flit of the stream dies at the fault boundary...
+        assert_eq!(n.stats.flits_dropped, 13, "head + 12 payload flits sunk");
+        // ...and because the boundary returns credits, the stranded tail
+        // drains instead of freezing routers 0 and 1: the wormhole locks
+        // release and the healthy neighbourhood keeps working.
+        assert!(n.is_idle(), "upstream path must drain, not wedge");
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(1), Message::Raw(9)));
+        for _ in 0..200 {
+            n.tick();
+        }
+        let got = n.recv(NodeId(1)).expect("healthy neighbourhood must keep working");
+        assert_eq!(got.msg, Message::Raw(9));
+    }
+
+    #[test]
+    fn straggler_slows_but_delivers() {
+        let lat = |spec: Option<&str>| -> u64 {
+            let mut n = net(4, 1);
+            if let Some(s) = spec {
+                n.install_faults(&FaultPlan::parse(s).unwrap());
+            }
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(3), Message::Raw(3)).with_phantom_payload(640),
+            );
+            let mut t = 0u64;
+            loop {
+                n.tick();
+                t += 1;
+                if n.recv(NodeId(3)).is_some() {
+                    return t;
+                }
+                assert!(t < 10_000, "straggler starved the stream");
+            }
+        };
+        let healthy = lat(None);
+        let slowed = lat(Some("straggle:1x4@0"));
+        assert!(slowed > healthy, "straggler {slowed} not slower than {healthy}");
+    }
+
+    #[test]
+    fn pending_fault_caps_next_event_and_blocks_skipping_after_activation() {
+        let mut n = net(2, 1);
+        n.install_faults(&FaultPlan::parse("router:1@50").unwrap());
+        // Idle fabric, but an activation is scheduled: the hint points
+        // at the tick that raises the clock to 50.
+        assert_eq!(n.next_event(), Some(49));
+        assert!(n.can_skip(), "pre-activation fabric may skip");
+        n.skip_quiet_cycles(49);
+        n.tick();
+        assert_eq!(n.cycle, 50);
+        assert!(n.fault_active());
+        assert!(!n.can_skip(), "degraded fabrics tick cycle-by-cycle");
+        assert_eq!(n.next_event(), Some(n.cycle));
+    }
+
+    #[test]
+    fn degraded_topology_snapshot_reflects_kills() {
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("router:1@5;link:2-3@5").unwrap());
+        assert!(n.degraded_topology().path_is_clean(NodeId(0), NodeId(3)));
+        for _ in 0..6 {
+            n.tick();
+        }
+        let d = n.degraded_topology();
+        assert!(!d.node_alive(NodeId(1)));
+        assert!(!d.path_is_clean(NodeId(0), NodeId(2)), "dead router on path");
+        assert!(!d.path_is_clean(NodeId(2), NodeId(3)), "severed link on path");
+        assert!(d.path_is_clean(NodeId(3), NodeId(2)), "reverse direction intact");
+    }
+
+    #[test]
+    fn activity_counters_track_per_router_flit_movement() {
+        let mut n = net(4, 1);
+        n.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)).with_phantom_payload(256),
+        );
+        n.run_until_idle(10_000);
+        assert!(n.router_activity(NodeId(0)) > 0);
+        assert!(n.router_activity(NodeId(1)) > 0);
+        assert!(n.router_activity(NodeId(2)) > 0);
+        assert!(n.router_activity(NodeId(3)) > 0, "ejection counts as movement");
+    }
+
+    #[test]
+    #[should_panic(expected = "not adjacent")]
+    fn non_adjacent_link_kill_rejected_at_install() {
+        let mut n = net(4, 4);
+        n.install_faults(&FaultPlan::parse("link:0-5@0").unwrap());
     }
 
     #[test]

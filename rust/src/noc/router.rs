@@ -140,6 +140,29 @@ impl Router {
         self.occupancy == 0
     }
 
+    /// Fault injection: the router dies. Every buffered flit vanishes and
+    /// wormhole locks are forgotten. Returns the number of flits purged
+    /// per `(input port, vc)` so the fabric can return their credits
+    /// upstream — a dead router *sinks* traffic rather than wedging it:
+    /// if the purged credits never returned, a full input buffer would
+    /// starve the neighbour's output forever and the backpressure would
+    /// creep across the whole upstream path, making the surviving fabric
+    /// unusable for repair. Data dies; flow control survives.
+    pub fn purge(&mut self) -> [[usize; NUM_VCS]; 5] {
+        let mut purged = [[0usize; NUM_VCS]; 5];
+        for (pi, port) in self.inputs.iter_mut().enumerate() {
+            for (vi, vc) in port.iter_mut().enumerate() {
+                purged[pi][vi] = vc.buf.len();
+                vc.buf.clear();
+                vc.route = None;
+            }
+        }
+        self.out_locks = [None; 5];
+        self.freed.clear();
+        self.occupancy = 0;
+        purged
+    }
+
     /// Advance the arbitration pointer by `delta` ticks without doing any
     /// allocation work. For an **empty** router this is exactly what
     /// `delta` calls to [`Router::tick_into`] would have done — the basis

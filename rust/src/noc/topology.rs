@@ -409,6 +409,118 @@ impl Topology for Ring {
     }
 }
 
+/// A fault-degraded view of a fabric: the base [`Topo`] minus killed
+/// routers and severed directed links.
+///
+/// The physical routers keep routing with the *base* topology — a mesh
+/// router has no reroute tables — so this view deliberately does **not**
+/// change `next_hop`/`path`. What it changes is `distance`: a pair whose
+/// routed path crosses dead hardware is pushed beyond every clean
+/// distance by a fixed penalty, so the chain schedulers
+/// (`sched::schedule_pairs`) order clean legs first. The repair planner
+/// then truncates chains at the first dirty leg via
+/// [`Degraded::path_is_clean`] — the authoritative reachability test.
+#[derive(Debug, Clone)]
+pub struct Degraded {
+    topo: Topo,
+    dead: Vec<bool>,
+    /// `link_dead[node][dir.index()]`: the channel leaving `node`
+    /// toward `dir` is severed.
+    link_dead: Vec<[bool; 5]>,
+}
+
+impl Degraded {
+    pub fn new(topo: Topo, dead: Vec<bool>, link_dead: Vec<[bool; 5]>) -> Self {
+        assert_eq!(dead.len(), topo.n_nodes());
+        assert_eq!(link_dead.len(), topo.n_nodes());
+        Degraded { topo, dead, link_dead }
+    }
+
+    /// An undamaged view (every node alive, every link whole).
+    pub fn healthy(topo: Topo) -> Self {
+        let n = topo.n_nodes();
+        Degraded::new(topo, vec![false; n], vec![[false; 5]; n])
+    }
+
+    pub fn base(&self) -> Topo {
+        self.topo
+    }
+
+    pub fn node_alive(&self, n: NodeId) -> bool {
+        !self.dead[n.0]
+    }
+
+    /// Direction of the physical channel `from -> to` (adjacent nodes).
+    fn dir_between(&self, from: NodeId, to: NodeId) -> Dir {
+        [Dir::North, Dir::East, Dir::South, Dir::West]
+            .into_iter()
+            .find(|&d| self.topo.neighbour(from, d) == Some(to))
+            .expect("dir_between on non-adjacent nodes")
+    }
+
+    /// True when the fabric's routed path `from -> to` touches only
+    /// living routers and whole links (endpoints included). This is the
+    /// test that decides whether a chain leg survives.
+    pub fn path_is_clean(&self, from: NodeId, to: NodeId) -> bool {
+        if self.dead[from.0] || self.dead[to.0] {
+            return false;
+        }
+        if from == to {
+            return true;
+        }
+        let p = self.topo.path(from, to);
+        p.windows(2).all(|w| {
+            let d = self.dir_between(w[0], w[1]);
+            !self.dead[w[1].0] && !self.link_dead[w[0].0][d.index()]
+        })
+    }
+
+    /// Distance penalty for dirty pairs: strictly larger than any clean
+    /// routed distance, so schedulers always prefer clean legs.
+    fn penalty(&self) -> usize {
+        self.topo.n_nodes() * (self.topo.diameter() + 1)
+    }
+}
+
+impl Topology for Degraded {
+    fn name(&self) -> &'static str {
+        self.topo.name()
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.topo.n_nodes()
+    }
+
+    fn coord(&self, n: NodeId) -> Coord {
+        self.topo.coord(n)
+    }
+
+    fn node(&self, c: Coord) -> NodeId {
+        self.topo.node(c)
+    }
+
+    fn distance(&self, a: NodeId, b: NodeId) -> usize {
+        let base = self.topo.distance(a, b);
+        if self.path_is_clean(a, b) {
+            base
+        } else {
+            base + self.penalty()
+        }
+    }
+
+    fn next_hop(&self, cur: NodeId, dst: NodeId) -> Dir {
+        self.topo.next_hop(cur, dst)
+    }
+
+    fn neighbour(&self, n: NodeId, d: Dir) -> Option<NodeId> {
+        self.topo.neighbour(n, d)
+    }
+
+    fn diameter(&self) -> usize {
+        self.topo.diameter()
+    }
+}
+
 /// Fabric selector for configs and the CLI (`--topology mesh|torus|ring`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TopologyKind {
@@ -691,6 +803,60 @@ mod tests {
         }
         assert_eq!(TopologyKind::parse("torus"), Some(TopologyKind::Torus));
         assert_eq!(TopologyKind::parse("hypercube"), None);
+    }
+
+    #[test]
+    fn healthy_degraded_view_matches_base() {
+        let topo = Topo::Mesh(Mesh::new(4, 4));
+        let d = Degraded::healthy(topo);
+        for a in 0..16 {
+            for b in 0..16 {
+                let (a, b) = (NodeId(a), NodeId(b));
+                assert!(d.path_is_clean(a, b));
+                assert_eq!(d.distance(a, b), topo.distance(a, b));
+                assert_eq!(d.next_hop(a, b), topo.next_hop(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn dead_router_dirties_paths_through_it() {
+        // Kill node 1 on a 4x1 mesh: 0 -> 2 routes through it.
+        let topo = Topo::Mesh(Mesh::new(4, 1));
+        let mut dead = vec![false; 4];
+        dead[1] = true;
+        let d = Degraded::new(topo, dead, vec![[false; 5]; 4]);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(2)));
+        assert!(!d.path_is_clean(NodeId(1), NodeId(1)), "a dead endpoint is unreachable");
+        assert!(d.path_is_clean(NodeId(2), NodeId(3)));
+        assert!(
+            d.distance(NodeId(0), NodeId(2)) > topo.diameter(),
+            "dirty pairs must cost more than any clean path"
+        );
+    }
+
+    #[test]
+    fn severed_link_is_directional() {
+        // Cut 1 -> 2 (East) only: 0 -> 3 dirty, 3 -> 0 still clean.
+        let topo = Topo::Mesh(Mesh::new(4, 1));
+        let mut link_dead = vec![[false; 5]; 4];
+        link_dead[1][Dir::East.index()] = true;
+        let d = Degraded::new(topo, vec![false; 4], link_dead);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(3)));
+        assert!(d.path_is_clean(NodeId(3), NodeId(0)));
+    }
+
+    #[test]
+    fn torus_wrap_survives_a_mid_row_kill() {
+        // Kill node 1 on a 4-ring: 0 -> 2 is dirty eastward... but the
+        // ring routes 0 -> 2 East (tie-break). 0 -> 3 routes West (1 hop)
+        // and stays clean — the path diversity repair exploits.
+        let topo = Topo::Ring(Ring::new(4));
+        let mut dead = vec![false; 4];
+        dead[1] = true;
+        let d = Degraded::new(topo, dead, vec![[false; 5]; 4]);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(2)));
+        assert!(d.path_is_clean(NodeId(0), NodeId(3)));
     }
 
     #[test]

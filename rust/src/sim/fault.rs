@@ -1,0 +1,244 @@
+//! Deterministic fault injection: seeded schedules of link kills, router
+//! kills, straggler (slow-clock) routers, and follower-engine drop-outs.
+//!
+//! A [`FaultPlan`] is pure data — a list of `(cycle, kind)` activations
+//! plus detection/repair policy knobs — attached to `SocConfig` and
+//! interpreted by the fabric (`noc::Network`), the SoC tick loop
+//! (follower drops), and the coordinator (detection + repair). Keeping
+//! the plan here, below `noc`, means every layer can speak the same
+//! vocabulary without a dependency cycle; node references are therefore
+//! raw `usize` indices, converted to `NodeId` at the point of use.
+//!
+//! Determinism: activations fire at fixed cycles, the plan is immutable
+//! after construction, and nothing in this module consults a clock or an
+//! RNG — the same plan against the same workload replays bit-identically
+//! under both step modes.
+
+use std::fmt;
+
+/// What breaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The directed physical channel `from -> to` becomes a black hole:
+    /// flits in flight and every future flit die at the receiving edge,
+    /// with their credits returned upstream — data is lost but flow
+    /// control survives, so surviving routes sharing the sender keep
+    /// moving (DESIGN.md §Fault-model). Kill both directions with two
+    /// entries.
+    LinkKill { from: usize, to: usize },
+    /// The router (and the cluster behind its local port) goes dark:
+    /// buffered flits are purged (credits returned to the neighbours
+    /// that issued them), in-flight deliveries sink at the boundary, and
+    /// nothing is ever forwarded again.
+    RouterKill { node: usize },
+    /// The router only advances its pipeline every `factor`-th cycle —
+    /// a slow clock domain, not a failure. `factor >= 2`.
+    Straggler { node: usize, factor: u32 },
+    /// The node's DMA engines stop ticking and every packet addressed to
+    /// the cluster is discarded on delivery; the router keeps forwarding
+    /// through-traffic. Models a hung core with a live NoC interface.
+    FollowerDrop { node: usize },
+}
+
+/// One scheduled activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    /// First cycle at which the fault is in effect.
+    pub at_cycle: u64,
+    pub kind: FaultKind,
+}
+
+/// A complete fault scenario: the activation schedule plus the
+/// coordinator's detection/repair policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// A task whose aggregate progress counter is flat for this many
+    /// cycles is declared stalled.
+    pub detect_timeout: u64,
+    /// When false the coordinator diagnoses and fails the task but does
+    /// not re-chain (the fail-stop baseline).
+    pub repair: bool,
+}
+
+pub const DEFAULT_DETECT_TIMEOUT: u64 = 10_000;
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { faults: Vec::new(), detect_timeout: DEFAULT_DETECT_TIMEOUT, repair: true }
+    }
+}
+
+impl FaultPlan {
+    /// No faults scheduled (policy knobs are irrelevant then).
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// True when the plan changes anything at all — the fault layer is
+    /// only wired into the fabric when this holds.
+    pub fn armed(&self) -> bool {
+        !self.faults.is_empty()
+    }
+
+    /// Parse the CLI/TOML spec string. Grammar (`;`-separated clauses):
+    ///
+    /// ```text
+    /// link:FROM-TO@CYCLE      kill directed link FROM->TO at CYCLE
+    /// router:NODE@CYCLE       kill router NODE at CYCLE
+    /// straggle:NODExFACTOR@CYCLE   slow router NODE by FACTOR from CYCLE
+    /// drop:NODE@CYCLE         drop follower engines at NODE at CYCLE
+    /// timeout:CYCLES          stall-detection window (default 10000)
+    /// norepair                fail-stop baseline: diagnose, don't re-chain
+    /// ```
+    ///
+    /// Example: `link:3-4@1000;router:7@5000;timeout:2000`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if clause == "norepair" {
+                plan.repair = false;
+                continue;
+            }
+            let (head, body) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause {clause:?}: expected `kind:args`"))?;
+            if head == "timeout" {
+                plan.detect_timeout = parse_num(body, clause)?;
+                continue;
+            }
+            let (args, at) = body
+                .split_once('@')
+                .ok_or_else(|| format!("fault clause {clause:?}: expected `...@cycle`"))?;
+            let at_cycle = parse_num(at, clause)?;
+            let kind = match head {
+                "link" => {
+                    let (from, to) = args
+                        .split_once('-')
+                        .ok_or_else(|| format!("fault clause {clause:?}: expected `from-to`"))?;
+                    FaultKind::LinkKill {
+                        from: parse_num::<usize>(from, clause)?,
+                        to: parse_num::<usize>(to, clause)?,
+                    }
+                }
+                "router" => FaultKind::RouterKill { node: parse_num(args, clause)? },
+                "straggle" => {
+                    let (node, factor) = args
+                        .split_once('x')
+                        .ok_or_else(|| format!("fault clause {clause:?}: expected `nodexfactor`"))?;
+                    let factor: u32 = parse_num(factor, clause)?;
+                    if factor < 2 {
+                        return Err(format!("fault clause {clause:?}: factor must be >= 2"));
+                    }
+                    FaultKind::Straggler { node: parse_num(node, clause)?, factor }
+                }
+                "drop" => FaultKind::FollowerDrop { node: parse_num(args, clause)? },
+                other => return Err(format!("unknown fault kind {other:?} in {clause:?}")),
+            };
+            plan.faults.push(Fault { at_cycle, kind });
+        }
+        Ok(plan)
+    }
+
+    /// Every node index referenced by the schedule must be `< n_nodes`;
+    /// called by `Soc::new` so a bad spec fails at construction, not
+    /// mid-simulation.
+    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+        for f in &self.faults {
+            let nodes: &[usize] = match f.kind {
+                FaultKind::LinkKill { from, to } => &[from, to],
+                FaultKind::RouterKill { node }
+                | FaultKind::Straggler { node, .. }
+                | FaultKind::FollowerDrop { node } => &[node],
+            };
+            for &n in nodes {
+                if n >= n_nodes {
+                    return Err(format!("fault {f:?} references node {n} >= {n_nodes}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::LinkKill { from, to } => write!(f, "link:{from}-{to}"),
+            FaultKind::RouterKill { node } => write!(f, "router:{node}"),
+            FaultKind::Straggler { node, factor } => write!(f, "straggle:{node}x{factor}"),
+            FaultKind::FollowerDrop { node } => write!(f, "drop:{node}"),
+        }
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, clause: &str) -> Result<T, String> {
+    s.trim().parse().map_err(|_| format!("fault clause {clause:?}: bad number {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_disarmed() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty() && !p.armed());
+        assert_eq!(p.detect_timeout, DEFAULT_DETECT_TIMEOUT);
+        assert!(p.repair);
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse("link:3-4@1000; router:7@5000;straggle:2x4@0;drop:9@2000;timeout:5000;norepair")
+            .unwrap();
+        assert_eq!(p.detect_timeout, 5000);
+        assert!(!p.repair);
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault { at_cycle: 1000, kind: FaultKind::LinkKill { from: 3, to: 4 } },
+                Fault { at_cycle: 5000, kind: FaultKind::RouterKill { node: 7 } },
+                Fault { at_cycle: 0, kind: FaultKind::Straggler { node: 2, factor: 4 } },
+                Fault { at_cycle: 2000, kind: FaultKind::FollowerDrop { node: 9 } },
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_spec_is_default() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert_eq!(FaultPlan::parse(" ; ;").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        assert!(FaultPlan::parse("link:3-4").is_err(), "missing @cycle");
+        assert!(FaultPlan::parse("link:34@5").is_err(), "missing dash");
+        assert!(FaultPlan::parse("router:x@5").is_err(), "bad number");
+        assert!(FaultPlan::parse("straggle:2x1@0").is_err(), "factor < 2");
+        assert!(FaultPlan::parse("meteor:3@5").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("norepair:yes").is_err(), "norepair takes no args");
+    }
+
+    #[test]
+    fn validate_bounds_node_indices() {
+        let p = FaultPlan::parse("router:7@5").unwrap();
+        assert!(p.validate(8).is_ok());
+        assert!(p.validate(7).is_err());
+        let l = FaultPlan::parse("link:0-9@5").unwrap();
+        assert!(l.validate(9).is_err());
+    }
+
+    #[test]
+    fn display_roundtrips_kinds() {
+        for spec in ["link:3-4", "router:7", "straggle:2x4", "drop:9"] {
+            let p = FaultPlan::parse(&format!("{spec}@11")).unwrap();
+            assert_eq!(p.faults[0].kind.to_string(), spec);
+        }
+    }
+}

@@ -39,6 +39,10 @@
 //! conservative default) is the documented contract new components
 //! should follow; the equivalence property test is what enforces it.
 
+pub mod fault;
+
+pub use fault::{Fault, FaultKind, FaultPlan};
+
 /// A component advanced once per cycle.
 pub trait Clocked {
     /// Advance one cycle.

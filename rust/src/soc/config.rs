@@ -4,6 +4,7 @@
 
 use crate::mem::addr_map::DEFAULT_WINDOW;
 use crate::noc::{Topo, TopologyKind};
+use crate::sim::FaultPlan;
 
 /// Static description of a simulated SoC.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +22,8 @@ pub struct SocConfig {
     pub window: u64,
     /// Human label for reports.
     pub name: String,
+    /// Fault-injection scenario (empty by default — a healthy SoC).
+    pub faults: FaultPlan,
 }
 
 impl SocConfig {
@@ -34,6 +37,7 @@ impl SocConfig {
             spm_bytes: 1 << 20,
             window: DEFAULT_WINDOW,
             name: "eval-4x5".into(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -47,6 +51,7 @@ impl SocConfig {
             spm_bytes: 256 << 10,
             window: DEFAULT_WINDOW,
             name: "mesh-8x8".into(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -61,6 +66,7 @@ impl SocConfig {
             spm_bytes: 4 << 20,
             window: 4 << 20,
             name: "fpga-3x3".into(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -73,6 +79,7 @@ impl SocConfig {
             spm_bytes: 256 << 10,
             window: DEFAULT_WINDOW,
             name: "synth-2x2".into(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -86,6 +93,7 @@ impl SocConfig {
             spm_bytes,
             window: DEFAULT_WINDOW,
             name: format!("custom-{cols}x{rows}"),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -93,6 +101,13 @@ impl SocConfig {
     /// (`SocConfig::eval_4x5().with_topology(TopologyKind::Torus)`).
     pub fn with_topology(mut self, topology: TopologyKind) -> Self {
         self.topology = topology;
+        self
+    }
+
+    /// Attach a fault-injection scenario
+    /// (`SocConfig::eval_4x5().with_faults(FaultPlan::parse("router:5@300")?)`).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -140,6 +155,10 @@ impl SocConfig {
                 }
                 "spm_kib" => cfg.spm_bytes = int(v)? << 10,
                 "window_mib" => cfg.window = (int(v)? as u64) << 20,
+                "faults" => {
+                    cfg.faults = FaultPlan::parse(v.trim_matches('"'))
+                        .map_err(|e| format!("line {}: {e}", ln + 1))?;
+                }
                 other => return Err(format!("line {}: unknown key {other:?}", ln + 1)),
             }
         }
@@ -210,5 +229,19 @@ mod tests {
     #[test]
     fn toml_rejects_oversized_spm() {
         assert!(SocConfig::from_toml("spm_kib = 4096\nwindow_mib = 1").is_err());
+    }
+
+    #[test]
+    fn toml_parses_fault_spec() {
+        let cfg = SocConfig::from_toml(
+            "faults = \"router:5@300;timeout:2000;norepair\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.faults.len(), 1);
+        assert_eq!(cfg.faults.detect_timeout, 2000);
+        assert!(!cfg.faults.repair);
+        assert!(SocConfig::from_toml("faults = \"router:x@300\"").is_err());
+        // Default presets ship a disarmed plan — healthy by construction.
+        assert!(SocConfig::eval_4x5().faults.is_empty());
     }
 }

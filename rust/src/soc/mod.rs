@@ -27,7 +27,7 @@ use crate::dma::{Engine, EngineCtx, EngineKind, TaskResult};
 use crate::mem::{AddrMap, Scratchpad};
 use crate::noc::{Network, NodeId, Topo, Topology};
 use crate::sched::{schedule_pairs, Strategy};
-use crate::sim::{StepMode, Watchdog};
+use crate::sim::{FaultKind, StepMode, Watchdog};
 
 pub use config::SocConfig;
 
@@ -90,6 +90,15 @@ pub struct Soc {
     pub ticks_executed: u64,
     /// Cycles fast-forwarded over by event-driven stepping.
     pub cycles_skipped: u64,
+    /// Follower-engine drop-outs from the fault plan: `(node, cycle)` —
+    /// from `cycle` on, the node's engine complex (engines, AXI slave,
+    /// multicast sink) is fail-silent while its router keeps routing.
+    /// Empty on a healthy SoC, so every fault check below reduces to one
+    /// `faults_armed` branch.
+    drop_at: Vec<(usize, u64)>,
+    /// True when the config carries any fault at all (fabric or SoC
+    /// layer) — the single gate in front of all degraded-path logic.
+    faults_armed: bool,
 }
 
 impl Soc {
@@ -108,14 +117,28 @@ impl Soc {
                 mem: Scratchpad::new(map.base_of(id), cfg.spm_bytes),
             })
             .collect();
+        let mut net = Network::new(topo);
+        net.install_faults(&cfg.faults);
+        let drop_at: Vec<(usize, u64)> = cfg
+            .faults
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::FollowerDrop { node } => Some((node, f.at_cycle)),
+                _ => None,
+            })
+            .collect();
+        let faults_armed = !cfg.faults.is_empty();
         Soc {
             cfg,
-            net: Network::new(topo),
+            net,
             nodes,
             map,
             step_mode: StepMode::default(),
             ticks_executed: 0,
             cycles_skipped: 0,
+            drop_at,
+            faults_armed,
         }
     }
 
@@ -136,6 +159,32 @@ impl Soc {
         self.net.cycle
     }
 
+    /// True when the node's endpoint logic is fail-silent: its engines
+    /// dropped out ([`FaultKind::FollowerDrop`]) or its router was killed
+    /// (the cluster behind the local port dies with it).
+    pub fn node_dropped(&self, node: NodeId) -> bool {
+        (self.faults_armed
+            && self.drop_at.iter().any(|&(n, at)| n == node.0 && at <= self.net.cycle))
+            || self.net.router_dead(node)
+    }
+
+    /// True once any scheduled fault — fabric or engine layer — has
+    /// taken effect. From this point on the event-driven stepper stops
+    /// skipping, so faulted runs are bit-identical across step modes.
+    pub fn any_fault_active(&self) -> bool {
+        self.net.fault_active()
+            || (self.faults_armed && self.drop_at.iter().any(|&(_, at)| at <= self.net.cycle))
+    }
+
+    /// Earliest not-yet-effective engine drop-out, if any.
+    fn next_drop_activation(&self) -> Option<u64> {
+        self.drop_at
+            .iter()
+            .filter(|&&(_, at)| at > self.net.cycle)
+            .map(|&(_, at)| at)
+            .min()
+    }
+
     /// Advance one cycle: deliver inboxes, tick engines, tick the fabric.
     pub fn tick(&mut self) {
         let now = self.net.cycle;
@@ -144,6 +193,12 @@ impl Soc {
         //    eavesdroppers return false), then the multicast sink and
         //    the AXI slave get their turn.
         for i in 0..self.nodes.len() {
+            if self.faults_armed && self.node_dropped(NodeId(i)) {
+                // Fail-silent endpoint: packets are ejected into the void
+                // (the router still routes if only the engines dropped).
+                while self.net.recv(NodeId(i)).is_some() {}
+                continue;
+            }
             while let Some(pkt) = self.net.recv(NodeId(i)) {
                 let SocNode { torrent, idma, xdma, mcast, mcast_sink, slave, mem } =
                     &mut self.nodes[i];
@@ -167,6 +222,9 @@ impl Soc {
         //    to the engines ticked after it; the Torrent frontend drains
         //    them before its own tick, so legs start the same cycle.
         for i in 0..self.nodes.len() {
+            if self.faults_armed && self.node_dropped(NodeId(i)) {
+                continue; // dead engines hold no clock
+            }
             let SocNode { torrent, idma, xdma, mcast, slave, mem, .. } = &mut self.nodes[i];
             let mut legs: Vec<(ChainTask, u64)> = Vec::new();
             {
@@ -186,12 +244,15 @@ impl Soc {
         self.net.tick();
     }
 
-    /// All engines and the fabric quiescent.
+    /// All engines and the fabric quiescent. Dropped nodes are excluded:
+    /// whatever state their dead engines hold can never move again, so it
+    /// must not keep the system formally "busy" forever.
     pub fn is_idle(&self) -> bool {
         self.net.is_idle()
             && self.net.inboxes_empty()
-            && self.nodes.iter().all(|n| {
-                n.engines().into_iter().all(|e| e.is_idle()) && n.slave.is_idle()
+            && self.nodes.iter().enumerate().all(|(i, n)| {
+                (self.faults_armed && self.node_dropped(NodeId(i)))
+                    || (n.engines().into_iter().all(|e| e.is_idle()) && n.slave.is_idle())
             })
     }
 
@@ -212,7 +273,16 @@ impl Soc {
                 min = Some(min.map_or(c, |m: u64| m.min(c)));
             }
         };
-        for n in &self.nodes {
+        // A scheduled engine drop-out is an event: the tick at its cycle
+        // must execute (not be skipped) so the drop takes effect at the
+        // same cycle under both step modes.
+        if self.faults_armed {
+            fold(self.next_drop_activation().map(|a| a.saturating_sub(1)));
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if self.faults_armed && self.node_dropped(NodeId(i)) {
+                continue; // dead engines schedule nothing
+            }
             for e in n.engines() {
                 fold(e.next_event(now));
             }
@@ -230,6 +300,12 @@ impl Soc {
         // (dispatch, cut-through forward gates) on the very next tick;
         // the fabric itself must also be skippable.
         if !self.net.inboxes_empty() || self.net.ejections_pending() || !self.net.can_skip() {
+            return;
+        }
+        // Degraded systems tick cycle-by-cycle (see Network::can_skip for
+        // the fabric half; engine drop-outs are SoC state the fabric
+        // cannot see, hence this second gate).
+        if self.faults_armed && self.any_fault_active() {
             return;
         }
         let now = self.net.cycle;
@@ -613,6 +689,34 @@ mod tests {
         let wr = AffinePattern::contiguous(s.map.base_of(NodeId(3)), 1024);
         s.chainwrite(1, NodeId(0), read, &[(NodeId(3), wr)], Strategy::Naive, false);
         s.run_until_idle(10); // a 1 KB chainwrite needs far more than 10 cycles
+    }
+
+    #[test]
+    fn dropped_follower_goes_fail_silent() {
+        use crate::sim::FaultPlan;
+        let cfg = SocConfig::custom(2, 2, 64 * 1024)
+            .with_faults(FaultPlan::parse("drop:1@0").unwrap());
+        let mut s = Soc::new(cfg);
+        assert!(s.node_dropped(NodeId(1)));
+        assert!(s.any_fault_active());
+        fill_src(&mut s, NodeId(0), 0, 1024);
+        let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), 1024);
+        let wr = AffinePattern::contiguous(s.map.base_of(NodeId(1)), 1024);
+        s.chainwrite(1, NodeId(0), read, &[(NodeId(1), wr)], Strategy::Naive, true);
+        for _ in 0..5_000 {
+            s.tick();
+        }
+        // The cfg packet was ejected into the void: no grant ever comes
+        // back, the task never completes, and the initiator still holds
+        // protocol state (the stall the coordinator's watchdog detects).
+        assert!(s.torrent_result(NodeId(0), 1).is_none());
+        assert!(!s.is_idle(), "initiator must still be waiting");
+        assert!(s.net.is_idle(), "no traffic may linger in the fabric");
+        assert_eq!(
+            s.nodes[1].mem.peek(s.map.base_of(NodeId(1)), 1024),
+            vec![0u8; 1024],
+            "a dropped follower must not write memory"
+        );
     }
 
     #[test]

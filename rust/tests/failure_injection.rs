@@ -1,12 +1,15 @@
 //! Failure-injection and adversarial-condition tests: busy followers,
 //! saturated fabrics, degenerate patterns, protocol edge cases.
 
-use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest, TaskStatus};
 use torrent::dma::torrent::dse::AffinePattern;
 use torrent::dma::torrent::{ChainDest, ChainTask};
-use torrent::noc::{Message, NodeId, Packet};
+use torrent::noc::{Message, NodeId, Packet, TopologyKind};
 use torrent::sched::Strategy;
+use torrent::sim::{Fault, FaultKind, FaultPlan, StepMode};
 use torrent::soc::{Soc, SocConfig};
+use torrent::util::rng::Rng;
+use torrent::workloads;
 
 fn coord() -> Coordinator {
     Coordinator::new(SocConfig::custom(3, 3, 256 * 1024))
@@ -206,5 +209,247 @@ fn worst_case_strided_write_pattern() {
             &data[r * 4..r * 4 + 4],
             "row {r}"
         );
+    }
+}
+
+// ===========================================================================
+// Seeded chaos property suite (DESIGN.md §Fault-model).
+//
+// Each case draws a random destination set, payload size and fault
+// schedule (router kills, follower drop-outs, stragglers) from a seeded
+// RNG, then checks three properties:
+//
+//   1. the run terminates well inside the watchdog bound — no fault
+//      combination may wedge the scheduler or the fabric;
+//   2. the task reaches a terminal classification (Done, Repaired or
+//      Failed), never a silent in-between;
+//   3. every destination that survives on the degraded fabric — live
+//      router, engines not dropped, clean routes to AND from the
+//      initiator (cfg/data out, grant/finish back) — holds byte-exact
+//      payload data, whether the original chain or a repair chain
+//      served it.
+//
+// 20 seeds per topology (mesh, torus, ring) = 60 randomized cases, plus
+// the cross-step-mode determinism cases below.
+// ===========================================================================
+
+const CHAOS_SEEDS: u64 = 20;
+const CHAOS_DETECT_TIMEOUT: u64 = 2_000;
+
+/// `TORRENT_TOPOLOGY={mesh,torus,ring}` filters the chaos suite to one
+/// fabric (the CI fault-matrix job runs one process per fabric; unset
+/// runs all three).
+fn fabric_selected(topology: TopologyKind) -> bool {
+    match std::env::var("TORRENT_TOPOLOGY").ok().as_deref() {
+        Some(s) if !s.is_empty() => {
+            TopologyKind::parse(s)
+                .unwrap_or_else(|| panic!("TORRENT_TOPOLOGY={s:?} (mesh|torus|ring)"))
+                == topology
+        }
+        _ => true,
+    }
+}
+
+/// Deterministic payload derived from the case seed.
+fn chaos_payload(seed: u64, bytes: usize) -> Vec<u8> {
+    (0..bytes).map(|i| (i as u64).wrapping_mul(131).wrapping_add(seed) as u8).collect()
+}
+
+/// Draw one randomized (dest-set, payload, fault-schedule) case on a
+/// 4x4 fabric of the given topology.
+fn chaos_case(topology: TopologyKind, seed: u64) -> (SocConfig, Vec<NodeId>, usize) {
+    let mut rng = Rng::new(seed ^ ((topology as u64 + 1) << 40));
+    let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
+    let n_nodes = cfg.n_nodes();
+    let n_dests = rng.range(2, 5) as usize;
+    let dests = workloads::random_dest_sets(
+        &cfg.build_topo(),
+        NodeId(0),
+        n_dests,
+        1,
+        rng.next_u64(),
+    )
+    .remove(0);
+    let bytes = rng.range(1, 4) as usize * 1024;
+    let mut faults = Vec::new();
+    for _ in 0..rng.range(1, 2) {
+        let node = rng.range(0, n_nodes as u64 - 1) as usize;
+        let at_cycle = rng.range(20, 1_200);
+        let kind = match rng.range(0, 2) {
+            0 => FaultKind::RouterKill { node },
+            1 => FaultKind::FollowerDrop { node },
+            _ => FaultKind::Straggler { node, factor: rng.range(2, 4) as u32 },
+        };
+        faults.push(Fault { at_cycle, kind });
+    }
+    let plan = FaultPlan { faults, detect_timeout: CHAOS_DETECT_TIMEOUT, repair: true };
+    (cfg.with_faults(plan), dests, bytes)
+}
+
+/// Run one chaos case and check the three properties.
+fn check_chaos_case(topology: TopologyKind, seed: u64) {
+    let (cfg, dests, bytes) = chaos_case(topology, seed);
+    let mut c = Coordinator::new(cfg);
+    let src = NodeId(0);
+    let payload = chaos_payload(seed, bytes);
+    let base = c.soc.map.base_of(src);
+    c.soc.nodes[src.0].mem.write(base, &payload);
+    let t = c
+        .submit_simple(src, &dests, bytes, EngineKind::Torrent(Strategy::Greedy), true)
+        .expect("chaos case is a valid request");
+    // Property 1: terminates inside the bound (the watchdog panics
+    // otherwise, and detection alone needs only a few multiples of the
+    // 2000-cycle stall window).
+    c.run_to_completion(1_000_000);
+    // Property 2: terminal classification.
+    let st = t.status(&c);
+    assert!(
+        matches!(st, TaskStatus::Done | TaskStatus::Repaired | TaskStatus::Failed),
+        "{topology:?} seed {seed}: non-terminal status {st:?} after quiescence"
+    );
+    // Property 3: surviving destinations hold byte-exact data. A
+    // destination survives when its router is alive, its engines were
+    // not dropped, and both route directions to the initiator are clean
+    // (a one-hop repair chain needs cfg/data out and grant/finish back).
+    let deg = c.soc.net.degraded_topology();
+    if !deg.node_alive(src) || c.soc.node_dropped(src) {
+        return; // initiator lost: no delivery guarantees remain
+    }
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    for &d in &dests {
+        let survivor = deg.node_alive(d)
+            && !c.soc.node_dropped(d)
+            && deg.path_is_clean(src, d)
+            && deg.path_is_clean(d, src);
+        if !survivor {
+            continue;
+        }
+        assert_eq!(
+            c.soc.nodes[d.0].mem.peek(c.soc.map.base_of(d) + half, bytes),
+            &payload[..],
+            "{topology:?} seed {seed}: surviving dest {d:?} lost data (status {st:?})"
+        );
+    }
+}
+
+#[test]
+fn chaos_mesh_survivors_get_exact_bytes() {
+    if !fabric_selected(TopologyKind::Mesh) {
+        return;
+    }
+    for seed in 0..CHAOS_SEEDS {
+        check_chaos_case(TopologyKind::Mesh, seed);
+    }
+}
+
+#[test]
+fn chaos_torus_survivors_get_exact_bytes() {
+    if !fabric_selected(TopologyKind::Torus) {
+        return;
+    }
+    for seed in 0..CHAOS_SEEDS {
+        check_chaos_case(TopologyKind::Torus, seed);
+    }
+}
+
+#[test]
+fn chaos_ring_survivors_get_exact_bytes() {
+    if !fabric_selected(TopologyKind::Ring) {
+        return;
+    }
+    for seed in 0..CHAOS_SEEDS {
+        check_chaos_case(TopologyKind::Ring, seed);
+    }
+}
+
+/// One randomized fault-free workload run under a given step mode;
+/// returns (report cycles, task latency, bytes at each destination).
+fn fault_free_run(
+    topology: TopologyKind,
+    seed: u64,
+    mode: StepMode,
+) -> (u64, u64, Vec<Vec<u8>>) {
+    let mut rng = Rng::new(seed ^ ((topology as u64 + 1) << 48));
+    let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
+    let n_dests = rng.range(2, 5) as usize;
+    let dests = workloads::random_dest_sets(
+        &cfg.build_topo(),
+        NodeId(0),
+        n_dests,
+        1,
+        rng.next_u64(),
+    )
+    .remove(0);
+    let bytes = rng.range(1, 4) as usize * 1024;
+    let mut c = Coordinator::with_step_mode(cfg, mode);
+    let src = NodeId(0);
+    let payload = chaos_payload(seed, bytes);
+    let base = c.soc.map.base_of(src);
+    c.soc.nodes[src.0].mem.write(base, &payload);
+    let t = c
+        .submit_simple(src, &dests, bytes, EngineKind::Torrent(Strategy::Greedy), true)
+        .unwrap();
+    let report = c.run_to_completion(1_000_000);
+    assert!(report.is_clean(), "{topology:?} seed {seed}: fault machinery fired without faults");
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    let mem: Vec<Vec<u8>> = dests
+        .iter()
+        .map(|&d| c.soc.nodes[d.0].mem.peek(c.soc.map.base_of(d) + half, bytes).to_vec())
+        .collect();
+    (report.cycles, c.latency_of(t).expect("fault-free run completes"), mem)
+}
+
+/// With no faults scheduled the fault layer must be invisible:
+/// event-driven and full-tick stepping stay bit-identical in cycle
+/// count, latency and delivered bytes (12 fault-free seeds).
+#[test]
+fn chaos_fault_free_runs_bit_identical_across_step_modes() {
+    for topology in TopologyKind::ALL {
+        if !fabric_selected(topology) {
+            continue;
+        }
+        for seed in 0..4 {
+            let ev = fault_free_run(topology, seed, StepMode::EventDriven);
+            let ft = fault_free_run(topology, seed, StepMode::FullTick);
+            assert_eq!(ev, ft, "{topology:?} seed {seed}: step modes diverged");
+        }
+    }
+}
+
+/// Detection and repair are deterministic across step modes: once a
+/// fault activates, event-driven stepping stops skipping, so heartbeat
+/// sampling, stall detection and repair dispatch land on identical
+/// cycles. Compares full outcome records on faulted runs (6 cases).
+#[test]
+fn chaos_faulted_runs_identical_across_step_modes() {
+    for topology in TopologyKind::ALL {
+        if !fabric_selected(topology) {
+            continue;
+        }
+        for seed in [3, 11] {
+            let run = |mode: StepMode| {
+                let (cfg, dests, bytes) = chaos_case(topology, seed);
+                let mut c = Coordinator::with_step_mode(cfg, mode);
+                let src = NodeId(0);
+                let payload = chaos_payload(seed, bytes);
+                let base = c.soc.map.base_of(src);
+                c.soc.nodes[src.0].mem.write(base, &payload);
+                let t = c
+                    .submit_simple(
+                        src,
+                        &dests,
+                        bytes,
+                        EngineKind::Torrent(Strategy::Greedy),
+                        true,
+                    )
+                    .unwrap();
+                let report = c.run_to_completion(1_000_000);
+                let rec = c.record(t).unwrap();
+                (report.cycles, rec.outcome.clone(), c.latency_of(t))
+            };
+            let ev = run(StepMode::EventDriven);
+            let ft = run(StepMode::FullTick);
+            assert_eq!(ev, ft, "{topology:?} seed {seed}: faulted step modes diverged");
+        }
     }
 }

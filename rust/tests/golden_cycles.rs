@@ -3,10 +3,11 @@
 //!
 //! A table of fixed mesh scenarios (the quickstart example, the
 //! multicast_sweep example's headline points, the batch_pipeline DAG,
-//! and Fig 7's per-destination marginal cost) runs under both step
-//! modes; every metric must be bit-identical between `FullTick` and
-//! `EventDriven`, and — once blessed — bit-identical to the committed
-//! `rust/tests/golden_cycles.tsv`.
+//! Fig 7's per-destination marginal cost, and the quickstart transfer
+//! under a mid-stream router kill — fail-stop and repaired) runs under
+//! both step modes; every metric must be bit-identical between
+//! `FullTick` and `EventDriven`, and — once blessed — bit-identical to
+//! the committed `rust/tests/golden_cycles.tsv`.
 //!
 //! Blessing: the pins are measured numbers, so the first machine with a
 //! toolchain runs `make golden-bless` (sets `TORRENT_GOLDEN_BLESS=1`)
@@ -21,7 +22,7 @@ use std::fmt::Write as _;
 use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest};
 use torrent::noc::NodeId;
 use torrent::sched::Strategy;
-use torrent::sim::StepMode;
+use torrent::sim::{FaultPlan, StepMode};
 use torrent::soc::SocConfig;
 
 const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden_cycles.tsv");
@@ -130,12 +131,44 @@ fn marginal_cost(m: &mut Metrics, mode: StepMode) {
     record(m, "fig7", "marginal_cc_per_dest", l4 - l3);
 }
 
+/// The quickstart transfer with chain hop 10's router killed mid-stream
+/// (DESIGN.md §Fault-model), measured fail-stop vs repaired. Detection
+/// and re-chaining are deterministic once a fault activates — both step
+/// modes tick cycle-by-cycle from then on — so the watchdog firing
+/// cycle, the repair latency and the quiesce cycle pin the fault
+/// machinery exactly like the healthy scenarios above pin the fabric.
+fn fault_scenarios(m: &mut Metrics, mode: StepMode) {
+    for (label, spec) in [
+        ("fault_failstop", "router:10@400;timeout:1000;norepair"),
+        ("fault_repair", "router:10@400;timeout:1000"),
+    ] {
+        let cfg = SocConfig::custom(4, 4, 64 * 1024)
+            .with_faults(FaultPlan::parse(spec).expect("valid fault spec"));
+        let mut c = Coordinator::with_step_mode(cfg, mode);
+        fill(&mut c, 0, 16 * 1024);
+        let dests = [NodeId(5), NodeId(10), NodeId(15)];
+        let task = c
+            .submit_simple(NodeId(0), &dests, 16 * 1024, EngineKind::Torrent(Strategy::Greedy), true)
+            .expect("valid request");
+        let report = c.run_to_completion(1_000_000);
+        record(m, label, "quiesce_cycle", c.soc.cycle());
+        if label == "fault_failstop" {
+            assert!(c.latency_of(task).is_none(), "fail-stop must not report a latency");
+            assert_eq!(report.failed(), vec![task.id()], "fail-stop run must close the task");
+        } else {
+            record(m, label, "repaired_latency", c.latency_of(task).unwrap());
+            assert_eq!(report.repaired(), vec![task.id()], "repair run must complete the task");
+        }
+    }
+}
+
 fn measure(mode: StepMode) -> Metrics {
     let mut m = Metrics::new();
     quickstart(&mut m, mode);
     multicast_sweep(&mut m, mode);
     batch_pipeline(&mut m, mode);
     marginal_cost(&mut m, mode);
+    fault_scenarios(&mut m, mode);
     m
 }
 

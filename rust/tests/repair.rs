@@ -1,0 +1,302 @@
+//! Unit tests for the fault-repair machinery: dead-hop diagnosis,
+//! re-chain planning over a degraded fabric, and repair idempotence
+//! (DESIGN.md §Fault-model).
+//!
+//! Geometry used throughout: a 4x4 XY-routed mesh, node id = y*4 + x.
+//! Killing router 1 = (1,0) severs the XY route 0 -> 5 (which turns at
+//! (1,0)) while leaving 0 -> 4, 4 -> 5 and the reverse routes intact —
+//! the asymmetric damage that distinguishes per-leg route checks from
+//! whole-protocol route checks.
+
+use torrent::coordinator::{plan_repair_chains, Coordinator, EngineKind, TaskOutcome, TaskStatus};
+use torrent::noc::{Degraded, NodeId, Topo, TopologyKind};
+use torrent::sched::{schedule_pairs, Strategy};
+use torrent::sim::FaultPlan;
+use torrent::soc::SocConfig;
+
+fn mesh4() -> Topo {
+    Topo::build(TopologyKind::Mesh, 4, 4)
+}
+
+/// A degraded view of `mesh4` with the given routers dead.
+fn degraded(dead_routers: &[usize]) -> Degraded {
+    let topo = mesh4();
+    let n = 16;
+    let mut dead = vec![false; n];
+    for &r in dead_routers {
+        dead[r] = true;
+    }
+    Degraded::new(topo, dead, vec![[false; 5]; n])
+}
+
+fn dests(nodes: &[usize]) -> Vec<(NodeId, ())> {
+    nodes.iter().map(|&n| (NodeId(n), ())).collect()
+}
+
+fn chain_nodes(chain: &[(NodeId, ())]) -> Vec<usize> {
+    chain.iter().map(|(n, _)| n.0).collect()
+}
+
+// ---------------------------------------------------------------------------
+// plan_repair_chains: re-chain ordering over the degraded fabric
+// ---------------------------------------------------------------------------
+
+/// On an undamaged view the planner reproduces the scheduler's single
+/// chain verbatim — repair planning degenerates to normal dispatch.
+#[test]
+fn healthy_fabric_plans_one_chain_in_schedule_order() {
+    let deg = Degraded::healthy(mesh4());
+    let src = NodeId(0);
+    let (order, _) = schedule_pairs(Strategy::Greedy, &deg, src, dests(&[10, 3, 5]));
+    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&[10, 3, 5]));
+    assert!(lost.is_empty());
+    assert_eq!(chains.len(), 1, "no damage, no reason to split");
+    assert_eq!(chain_nodes(&chains[0]), order.iter().map(|n| n.0).collect::<Vec<_>>());
+}
+
+/// A destination whose router is dead is reported lost, never chained.
+#[test]
+fn dead_destination_is_lost_not_chained() {
+    let deg = degraded(&[5]);
+    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]));
+    assert_eq!(lost, vec![NodeId(5)]);
+    assert_eq!(chains.len(), 1);
+    assert_eq!(chain_nodes(&chains[0]), vec![4]);
+}
+
+/// With the initiator's own router dead nothing is reachable: every
+/// destination is lost and no chain is emitted.
+#[test]
+fn dead_source_loses_everything() {
+    let deg = degraded(&[0]);
+    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[1, 4, 5]));
+    assert!(chains.is_empty());
+    let mut lost: Vec<usize> = lost.iter().map(|n| n.0).collect();
+    lost.sort_unstable();
+    assert_eq!(lost, vec![1, 4, 5]);
+}
+
+/// The planner validates every route the protocol uses, not just the
+/// forward data legs. Killing router 1 leaves the legs 0 -> 4 and
+/// 4 -> 5 clean, but the cfg descriptor for hop 5 travels the direct
+/// route 0 -> 5 through the dead router — so 5 must be lost, not
+/// chained behind 4 (where its missing grant would wedge the chain).
+#[test]
+fn cfg_route_damage_loses_the_hop_despite_clean_data_legs() {
+    let deg = degraded(&[1]);
+    assert!(deg.path_is_clean(NodeId(0), NodeId(4)) && deg.path_is_clean(NodeId(4), NodeId(5)));
+    assert!(!deg.path_is_clean(NodeId(0), NodeId(5)), "geometry premise");
+    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]));
+    assert_eq!(lost, vec![NodeId(5)]);
+    assert_eq!(chains.len(), 1);
+    assert_eq!(chain_nodes(&chains[0]), vec![4]);
+}
+
+/// Every emitted chain satisfies the full protocol-route invariant:
+/// cfg src->hop, data prev->hop and grant/finish hop->prev all clean;
+/// and lost is exactly the set of destinations unreachable both ways.
+#[test]
+fn plans_partition_dests_into_clean_chains_and_unreachable() {
+    let src = NodeId(0);
+    let all = [3, 5, 6, 9, 10, 12, 15];
+    for kill in 1..16usize {
+        let deg = degraded(&[kill]);
+        let ds: Vec<usize> = all.iter().copied().filter(|&d| d != kill).collect();
+        let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&ds));
+        let mut covered: Vec<usize> = lost.iter().map(|n| n.0).collect();
+        for chain in &chains {
+            let mut prev = src;
+            for &(node, _) in chain {
+                assert!(
+                    deg.path_is_clean(src, node)
+                        && deg.path_is_clean(prev, node)
+                        && deg.path_is_clean(node, prev),
+                    "kill {kill}: chain hop {node:?} has a dirty protocol route"
+                );
+                covered.push(node.0);
+                prev = node;
+            }
+        }
+        covered.sort_unstable();
+        let mut expect = ds.clone();
+        expect.sort_unstable();
+        assert_eq!(covered, expect, "kill {kill}: chains + lost must partition the dests");
+        for &l in &lost {
+            assert!(
+                !deg.path_is_clean(src, l) || !deg.path_is_clean(l, src),
+                "kill {kill}: {l:?} was declared lost but is reachable both ways"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diagnosis: naming the hop that killed a chain
+// ---------------------------------------------------------------------------
+
+fn faulted_coordinator(spec: &str) -> Coordinator {
+    let cfg = SocConfig::custom(4, 4, 64 * 1024)
+        .with_faults(FaultPlan::parse(spec).expect("valid fault spec"));
+    Coordinator::new(cfg)
+}
+
+/// A killed router that is itself a chain hop is named directly.
+#[test]
+fn diagnose_names_dead_chain_hop() {
+    let mut c = faulted_coordinator("router:5@100;timeout:500;norepair");
+    let t = c
+        .submit_simple(
+            NodeId(0),
+            &[NodeId(4), NodeId(5)],
+            2048,
+            EngineKind::Torrent(Strategy::Greedy),
+            false,
+        )
+        .unwrap();
+    c.run_to_completion(100_000);
+    assert_eq!(t.status(&c), TaskStatus::Failed);
+    let outcome = c.record(t).unwrap().outcome.clone().unwrap();
+    match outcome {
+        TaskOutcome::Failed { suspect, .. } => assert_eq!(suspect, Some(NodeId(5))),
+        o => panic!("expected Failed, got {o:?}"),
+    }
+}
+
+/// A dropped follower (live router, dead engines) is told apart from
+/// fabric damage and named as the suspect.
+#[test]
+fn diagnose_names_dropped_follower() {
+    let mut c = faulted_coordinator("drop:4@100;timeout:500;norepair");
+    let t = c
+        .submit_simple(
+            NodeId(0),
+            &[NodeId(4), NodeId(5)],
+            2048,
+            EngineKind::Torrent(Strategy::Greedy),
+            false,
+        )
+        .unwrap();
+    c.run_to_completion(100_000);
+    assert_eq!(t.status(&c), TaskStatus::Failed);
+    match c.record(t).unwrap().outcome.clone().unwrap() {
+        TaskOutcome::Failed { suspect, .. } => assert_eq!(suspect, Some(NodeId(4))),
+        o => panic!("expected Failed, got {o:?}"),
+    }
+}
+
+/// Damage on a hop's cfg route (not on any data leg) is attributed to
+/// that hop: with router 1 dead from cycle 0, hop 5 never receives its
+/// descriptor even though every chain leg is clean.
+#[test]
+fn diagnose_names_hop_behind_dead_cfg_route() {
+    let mut c = faulted_coordinator("router:1@0;timeout:500;norepair");
+    let t = c
+        .submit_simple(
+            NodeId(0),
+            &[NodeId(4), NodeId(5)],
+            2048,
+            EngineKind::Torrent(Strategy::Greedy),
+            false,
+        )
+        .unwrap();
+    c.run_to_completion(100_000);
+    assert_eq!(t.status(&c), TaskStatus::Failed);
+    match c.record(t).unwrap().outcome.clone().unwrap() {
+        TaskOutcome::Failed { suspect, .. } => assert_eq!(suspect, Some(NodeId(5))),
+        o => panic!("expected Failed, got {o:?}"),
+    }
+}
+
+/// The per-router activity counters that back the diagnosis baseline:
+/// routers on the task's routes move, routers off them stay flat.
+#[test]
+fn activity_counters_isolate_routers_off_the_route() {
+    let mut c = Coordinator::new(SocConfig::custom(2, 2, 64 * 1024));
+    let t = c
+        .submit_simple(NodeId(0), &[NodeId(1)], 2048, EngineKind::Torrent(Strategy::Greedy), false)
+        .unwrap();
+    c.run_to_completion(100_000);
+    assert_eq!(t.status(&c), TaskStatus::Done);
+    assert!(c.soc.net.router_activity(NodeId(0)) > 0);
+    assert!(c.soc.net.router_activity(NodeId(1)) > 0);
+    // 0 -> 1 is a single east hop; the top row never sees a flit.
+    assert_eq!(c.soc.net.router_activity(NodeId(2)), 0);
+    assert_eq!(c.soc.net.router_activity(NodeId(3)), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Repair: re-chaining and idempotence
+// ---------------------------------------------------------------------------
+
+/// cfg-route damage with repair enabled: the task completes as Repaired,
+/// serving hop 4 on a fresh chain and writing off unreachable hop 5 —
+/// instead of re-issuing the doomed [4, 5] chain until the budget runs
+/// out.
+#[test]
+fn repair_replans_around_cfg_route_damage() {
+    let mut c = faulted_coordinator("router:1@0;timeout:500");
+    let src = NodeId(0);
+    let bytes = 2048usize;
+    let payload: Vec<u8> = (0..bytes).map(|i| (i % 239) as u8).collect();
+    let base = c.soc.map.base_of(src);
+    c.soc.nodes[src.0].mem.write(base, &payload);
+    let t = c
+        .submit_simple(
+            src,
+            &[NodeId(4), NodeId(5)],
+            bytes,
+            EngineKind::Torrent(Strategy::Greedy),
+            true,
+        )
+        .unwrap();
+    c.run_to_completion(200_000);
+    assert_eq!(t.status(&c), TaskStatus::Repaired);
+    let rec = c.record(t).unwrap();
+    assert_eq!(rec.repairs, 1, "one repair round suffices");
+    match rec.outcome.clone().unwrap() {
+        TaskOutcome::Repaired { suspect, served, lost } => {
+            assert_eq!(suspect, NodeId(5));
+            assert_eq!(served, 1);
+            assert_eq!(lost, vec![NodeId(5)]);
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    assert_eq!(
+        c.soc.nodes[4].mem.peek(c.soc.map.base_of(NodeId(4)) + half, bytes),
+        &payload[..],
+        "survivor must hold the payload"
+    );
+    assert!(c.latency_of(t).is_some(), "repaired tasks report a latency");
+}
+
+/// Repair is idempotent: the stall window is re-armed when replacement
+/// chains are issued, so the watchdog firing every cycle afterwards
+/// neither double-issues chains during the run nor disturbs a finished
+/// record when invoked again by hand.
+#[test]
+fn repair_is_not_double_issued() {
+    let mut c = faulted_coordinator("router:5@100;timeout:400");
+    let t = c
+        .submit_simple(
+            NodeId(0),
+            &[NodeId(4), NodeId(5)],
+            2048,
+            EngineKind::Torrent(Strategy::Greedy),
+            false,
+        )
+        .unwrap();
+    c.run_to_completion(200_000);
+    assert_eq!(t.status(&c), TaskStatus::Repaired);
+    assert_eq!(
+        c.record(t).unwrap().repairs,
+        1,
+        "the detector ran every cycle after activation yet issued one repair round"
+    );
+    let outcome = c.record(t).unwrap().outcome.clone();
+    for _ in 0..5 {
+        c.watch_faults();
+    }
+    assert_eq!(c.record(t).unwrap().repairs, 1, "manual re-checks must not re-issue");
+    assert_eq!(c.record(t).unwrap().outcome, outcome);
+}
