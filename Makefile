@@ -2,8 +2,8 @@
 # python/compile/aot.py (artifacts).
 
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
-	examples-smoke doc clean topo-sweep topo-matrix golden-bless \
-	fault-sweep fault-matrix
+	bench-scaling examples-smoke doc clean topo-sweep topo-matrix \
+	golden-bless fault-sweep fault-matrix
 
 all: tier1
 
@@ -33,9 +33,18 @@ bench-smoke:
 		cargo bench --bench simcore
 
 # Rewrite BENCH_simcore.json from a full local run (commit the result).
+# Includes the sharded-stepper scaling curve so the baseline keeps its
+# parallel_net_* entries across recalibrations.
 bench-baseline:
-	TORRENT_BENCH_JSON=BENCH_simcore.json TORRENT_BENCH_CALIBRATED=1 \
-		cargo bench --bench simcore
+	TORRENT_BENCH_SCALING=1 TORRENT_BENCH_JSON=BENCH_simcore.json \
+		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench simcore
+
+# The sharded-stepper scaling curve (cycles/s vs threads at 8x8 through
+# 64x64; ISSUE 7 satellite). Prints M cycles/s and the speedup vs t=1
+# per point; too slow for bench-smoke, so it is opt-in here and in
+# bench-baseline only.
+bench-scaling:
+	TORRENT_BENCH_SCALING=1 cargo bench --bench simcore
 
 # Build every example and run the fast ones (CI smoke). attention_e2e is
 # build-only here: it exercises the full artifact suite and is covered by

@@ -107,6 +107,49 @@ fn main() {
     });
     record("tsp_heldkarp_exact_15dst", &s);
 
+    // 4. Sharded-stepper scaling curve (`make bench-scaling`): saturated
+    // all-to-opposite-corner traffic, fabric ticked through the parallel
+    // kernel at a fixed ladder of thread counts and grid sizes. t=1 is
+    // the sequential kernel (`tick_parallel(1)` collapses to `tick()`),
+    // so each row's speedup column reads directly off the JSON. Gated
+    // behind an env var: the 64x64 points are too slow for `bench-smoke`.
+    if std::env::var("TORRENT_BENCH_SCALING").is_ok() {
+        common::banner("simcore: sharded-stepper scaling (cycles/s vs threads)");
+        const SCALE_CYCLES: u64 = 2_000;
+        for (cols, rows) in [(8usize, 8usize), (16, 16), (32, 32), (64, 64)] {
+            let mut seq_p50 = 0.0f64;
+            for threads in [1usize, 2, 4, 8] {
+                let name = format!("parallel_net_{cols}x{rows}_t{threads}");
+                let s = common::bench(&name, 0, common::iters(3), || {
+                    let mut net = Network::new(Mesh::new(cols, rows));
+                    let n = cols * rows;
+                    for src in 0..n {
+                        let dst = NodeId(n - 1 - src);
+                        if dst.0 != src {
+                            net.send(
+                                NodeId(src),
+                                Packet::new(0, NodeId(src), dst, Message::Raw(src as u64))
+                                    .with_phantom_payload(16 * 1024),
+                            );
+                        }
+                    }
+                    for _ in 0..SCALE_CYCLES {
+                        net.tick_parallel(threads);
+                    }
+                });
+                if threads == 1 {
+                    seq_p50 = s.p50;
+                }
+                println!(
+                    "  -> {cols}x{rows} t{threads}: {:.3} M cycles/s (speedup {:.2}x vs t1)",
+                    SCALE_CYCLES as f64 / (s.p50 / 1e3) / 1e6,
+                    seq_p50 / s.p50.max(1e-9),
+                );
+                record(&name, &s);
+            }
+        }
+    }
+
     // Baseline plumbing (see module docs / Makefile).
     if let Ok(path) = std::env::var("TORRENT_BENCH_JSON") {
         let calibrated = std::env::var("TORRENT_BENCH_CALIBRATED").is_ok();

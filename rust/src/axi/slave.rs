@@ -8,7 +8,7 @@
 use std::collections::VecDeque;
 
 use crate::mem::Scratchpad;
-use crate::noc::{Message, Network, NodeId, Packet};
+use crate::noc::{Message, NetPort, NodeId, Packet};
 
 /// SRAM pipeline latency from request tail to response injection.
 pub const MEM_LATENCY: u64 = 2;
@@ -81,9 +81,9 @@ impl AxiSlave {
     }
 
     /// Inject ready responses.
-    pub fn tick(&mut self, node: NodeId, net: &mut Network) {
+    pub fn tick(&mut self, node: NodeId, net: &mut dyn NetPort) {
         while let Some(p) = self.queue.front() {
-            if p.ready_at > net.cycle {
+            if p.ready_at > net.cycle() {
                 break;
             }
             let p = self.queue.pop_front().unwrap();
@@ -110,7 +110,7 @@ impl AxiSlave {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::noc::Mesh;
+    use crate::noc::{Mesh, Network};
 
     fn setup() -> (Network, Scratchpad, AxiSlave) {
         (

@@ -56,7 +56,7 @@
 //! assert!(c.latency_of(a).is_some() && c.latency_of(b).is_some());
 //! ```
 
-use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fmt;
 
 use crate::analysis::eta_p2mp;
@@ -443,7 +443,7 @@ pub struct Coordinator {
     /// the O(1) accessor.
     pub records: Vec<Record>,
     /// `TaskId` → `records` index.
-    index: HashMap<u32, usize>,
+    index: BTreeMap<u32, usize>,
     /// Per-initiator admission queues: dependency-blocked tasks wait
     /// here until their last dependency completes.
     admission: BTreeMap<NodeId, VecDeque<u32>>,
@@ -454,7 +454,7 @@ pub struct Coordinator {
     /// results are dropped, not kept here.
     pub orphan_results: Vec<TaskResult>,
     /// Repair-chain engine id → index of the record it is healing.
-    repair_parent: HashMap<u32, usize>,
+    repair_parent: BTreeMap<u32, usize>,
     /// Fault plan armed: run the heartbeat watchdog between quanta.
     fault_watch: bool,
 }
@@ -481,11 +481,11 @@ impl Coordinator {
             soc,
             next_task: 1,
             records: Vec::new(),
-            index: HashMap::new(),
+            index: BTreeMap::new(),
             admission: BTreeMap::new(),
             open_tasks: 0,
             orphan_results: Vec::new(),
-            repair_parent: HashMap::new(),
+            repair_parent: BTreeMap::new(),
             fault_watch,
         }
     }

@@ -10,11 +10,11 @@
 //! shows against distributed DMAs.
 
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::axi::{split_bursts, IdPool};
 use crate::mem::Scratchpad;
-use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
+use crate::noc::{Message, NetPort, NodeId, Packet, FLIT_BYTES};
 
 use super::torrent::dse::AffinePattern;
 use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
@@ -39,7 +39,7 @@ struct Active {
     submitted_at: u64,
     /// Flattened (dest index, burst addr, stream offset, len) work list.
     bursts: VecDeque<(usize, u64, usize, usize)>,
-    stream: Option<Rc<Vec<u8>>>,
+    stream: Option<Arc<Vec<u8>>>,
     ids: IdPool,
     /// Read-side DSE budget in bytes.
     budget: f64,
@@ -114,11 +114,11 @@ impl Idma {
         true
     }
 
-    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
-        let now = net.cycle;
+    pub fn tick(&mut self, net: &mut dyn NetPort, mem: &mut Scratchpad) {
+        let now = net.cycle();
         if self.active.is_none() {
             if let Some((task, submitted_at)) = self.queue.pop_front() {
-                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let stream = task.with_data.then(|| Arc::new(task.read.gather(mem)));
                 let mut bursts = VecDeque::new();
                 for (di, (_, pat)) in task.dests.iter().enumerate() {
                     let mut off = 0;

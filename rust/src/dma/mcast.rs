@@ -10,11 +10,11 @@
 //! its drop address and acknowledges the final segment; the source
 //! timestamps completion at the last ack.
 
-use std::collections::{HashSet, VecDeque};
-use std::rc::Rc;
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::Arc;
 
 use crate::mem::Scratchpad;
-use crate::noc::{Message, Network, NodeId, Packet, FLIT_BYTES};
+use crate::noc::{Message, NetPort, NodeId, Packet, FLIT_BYTES};
 
 use super::torrent::dse::AffinePattern;
 use super::torrent::timing::SEG_BYTES;
@@ -52,13 +52,13 @@ struct Active {
     task: McastTask,
     submitted_at: u64,
     cfg_done_at: u64,
-    stream: Option<Rc<Vec<u8>>>,
+    stream: Option<Arc<Vec<u8>>>,
     segs: Vec<(usize, usize)>,
     next_seg: usize,
     budget: f64,
     rate: f64,
     /// Destinations that acked the last segment.
-    acked: HashSet<NodeId>,
+    acked: BTreeSet<NodeId>,
     sent_all: bool,
 }
 
@@ -126,12 +126,12 @@ impl McastEngine {
         true
     }
 
-    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
-        let now = net.cycle;
+    pub fn tick(&mut self, net: &mut dyn NetPort, mem: &mut Scratchpad) {
+        let now = net.cycle();
         if self.active.is_none() {
             if let Some((task, submitted_at)) = self.queue.pop_front() {
                 let total = task.read.total_bytes();
-                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let stream = task.with_data.then(|| Arc::new(task.read.gather(mem)));
                 let mut segs = Vec::new();
                 let mut off = 0;
                 while off < total {
@@ -148,7 +148,7 @@ impl McastEngine {
                     next_seg: 0,
                     budget: 0.0,
                     rate,
-                    acked: HashSet::new(),
+                    acked: BTreeSet::new(),
                     sent_all: false,
                     task,
                 });
@@ -165,7 +165,7 @@ impl McastEngine {
                 break;
             }
             a.budget -= len as f64;
-            let payload = a.stream.as_ref().map(|s| Rc::new(s[off..off + len].to_vec()));
+            let payload = a.stream.as_ref().map(|s| Arc::new(s[off..off + len].to_vec()));
             let last = a.next_seg == a.segs.len() - 1;
             let pkt = Packet::new(
                 0,
@@ -259,7 +259,7 @@ impl McastSink {
         node: NodeId,
         pkt: &Packet,
         mem: &mut Scratchpad,
-        net: &mut Network,
+        net: &mut dyn NetPort,
     ) -> bool {
         let Message::McastData { task, seq, last, addr } = pkt.msg else { return false };
         // `addr` is a window-local offset: resolve against this node's base.

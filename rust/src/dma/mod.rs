@@ -28,7 +28,7 @@ pub mod xdma;
 pub use torrent::{ChainDest, ChainTask, Torrent};
 
 use crate::mem::Scratchpad;
-use crate::noc::{Network, NodeId, Packet};
+use crate::noc::{NetPort, NodeId, Packet};
 use crate::sched::Strategy;
 use anyhow::anyhow;
 use std::fmt;
@@ -195,11 +195,13 @@ pub enum TaskPhase {
     Streaming,
 }
 
-/// Per-call context handed to an engine: the fabric and the node's local
+/// Per-call context handed to an engine: the fabric (through the
+/// [`NetPort`] endpoint surface, so the same engine code runs against the
+/// whole `Network` or a parallel-stepper shard view) and the node's local
 /// scratchpad. The borrows live only for the duration of one `handle` /
 /// `tick` call, so the SoC can rebuild the context per node per cycle.
 pub struct EngineCtx<'a> {
-    pub net: &'a mut Network,
+    pub net: &'a mut dyn NetPort,
     pub mem: &'a mut Scratchpad,
 }
 

@@ -27,11 +27,11 @@ pub mod cfg;
 pub mod dse;
 pub mod timing;
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
-use std::rc::Rc;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
 
 use crate::mem::Scratchpad;
-use crate::noc::{Gate, Message, Network, NodeId, Packet, PacketId, FLIT_BYTES};
+use crate::noc::{Gate, GateCell, Message, NetPort, NodeId, Packet, PacketId, FLIT_BYTES};
 
 use self::cfg::{CfgType, TorrentCfg};
 use self::dse::AffinePattern;
@@ -75,7 +75,7 @@ struct InitiatorState {
     submitted_at: u64,
     phase: InitPhase,
     /// Gathered source stream (None for phantom runs).
-    stream: Option<Rc<Vec<u8>>>,
+    stream: Option<Arc<Vec<u8>>>,
     /// Segment boundaries (byte offsets).
     segs: Vec<(usize, usize)>,
     /// DSE rate limiter: fractional flits of injection budget.
@@ -106,10 +106,12 @@ struct FollowerState {
     finish_from_next: bool,
     finish_sent: bool,
     finish_ready_at: Option<u64>,
-    /// Cut-through forwarding gates keyed by incoming packet id.
-    forwards: HashMap<PacketId, Gate>,
+    /// Cut-through forwarding gates keyed by incoming packet id. Ordered
+    /// (composed packet ids sort in allocation order) so gate updates
+    /// iterate deterministically.
+    forwards: BTreeMap<PacketId, Gate>,
     /// Incoming packet ids already forwarded (guards the delivered path).
-    forwarded: std::collections::HashSet<PacketId>,
+    forwarded: BTreeSet<PacketId>,
 }
 
 /// Activity counters (power model inputs, Fig 11(d–f)).
@@ -138,11 +140,11 @@ pub struct Torrent {
     /// Outstanding read-tunnel requests we initiated: task -> submit time.
     /// The remote Torrent streams the data back as a 1-node chain; we
     /// record a local TaskResult when our follower role completes.
-    pending_reads: HashMap<u32, u64>,
+    pending_reads: BTreeMap<u32, u64>,
     /// Tasks the coordinator cancelled here (fault repair). Late traffic
     /// for these ids — cfgs still in flight, stale ChainData segments —
     /// is consumed silently instead of re-creating state or panicking.
-    cancelled: HashSet<u32>,
+    cancelled: BTreeSet<u32>,
     pub results: Vec<TaskResult>,
     pub stats: TorrentStats,
 }
@@ -154,8 +156,8 @@ impl Torrent {
             queue: VecDeque::new(),
             active: None,
             followers: BTreeMap::new(),
-            pending_reads: HashMap::new(),
-            cancelled: HashSet::new(),
+            pending_reads: BTreeMap::new(),
+            cancelled: BTreeSet::new(),
             results: Vec::new(),
             stats: TorrentStats::default(),
         }
@@ -271,7 +273,7 @@ impl Torrent {
         remote: NodeId,
         remote_read: AffinePattern,
         local_write: AffinePattern,
-        net: &mut Network,
+        net: &mut dyn NetPort,
         now: u64,
     ) {
         assert_eq!(remote_read.total_bytes(), local_write.total_bytes());
@@ -436,7 +438,7 @@ impl Torrent {
                         finish_from_next: false,
                         finish_sent: false,
                         finish_ready_at: None,
-                        forwards: HashMap::new(),
+                        forwards: BTreeMap::new(),
                         forwarded: Default::default(),
                     },
                 );
@@ -520,17 +522,17 @@ impl Torrent {
     // Per-cycle engine logic
     // ------------------------------------------------------------------
 
-    pub fn tick(&mut self, net: &mut Network, mem: &mut Scratchpad) {
-        let now = net.cycle;
+    pub fn tick(&mut self, net: &mut dyn NetPort, mem: &mut Scratchpad) {
+        let now = net.cycle();
         self.tick_initiator(net, mem, now);
         self.tick_followers(net, now);
     }
 
-    fn tick_initiator(&mut self, net: &mut Network, mem: &mut Scratchpad, now: u64) {
+    fn tick_initiator(&mut self, net: &mut dyn NetPort, mem: &mut Scratchpad, now: u64) {
         if self.active.is_none() {
             if let Some((task, submitted_at)) = self.queue.pop_front() {
                 let total = task.read.total_bytes();
-                let stream = task.with_data.then(|| Rc::new(task.read.gather(mem)));
+                let stream = task.with_data.then(|| Arc::new(task.read.gather(mem)));
                 let mut segs = Vec::new();
                 let mut off = 0;
                 while off < total {
@@ -609,7 +611,7 @@ impl Torrent {
                     let seg_payload = init
                         .stream
                         .as_ref()
-                        .map(|s| Rc::new(s[off..off + len].to_vec()));
+                        .map(|s| Arc::new(s[off..off + len].to_vec()));
                     let last = *next_seg == init.segs.len() - 1;
                     let msg = Message::ChainData {
                         task: init.task.task,
@@ -619,7 +621,7 @@ impl Torrent {
                     let pkt = Packet::new(0, self.node, init.task.dests[0].node, msg)
                         .with_shared_payload(seg_payload, len);
                     let n_flits = pkt.len_flits() as u32;
-                    let gate: Gate = Rc::new(std::cell::Cell::new(1)); // head free
+                    let gate: Gate = Arc::new(GateCell::new(1)); // head free
                     net.send_gated(self.node, pkt, gate.clone());
                     init.cur_gate = Some(gate);
                     init.cur_gate_total = n_flits;
@@ -633,7 +635,7 @@ impl Torrent {
         }
     }
 
-    fn tick_followers(&mut self, net: &mut Network, now: u64) {
+    fn tick_followers(&mut self, net: &mut dyn NetPort, now: u64) {
         if self.followers.is_empty() {
             return; // §Perf: skip the per-cycle NI scan on idle endpoints
         }
@@ -660,7 +662,7 @@ impl Torrent {
             // New incoming segment: start the forwarded copy, gated.
             let fwd = Packet::new(0, node, next, Message::ChainData { task, seq, last })
                 .with_shared_payload(pkt.payload.clone(), pkt.payload_bytes);
-            let gate: Gate = Rc::new(std::cell::Cell::new(allowed));
+            let gate: Gate = Arc::new(GateCell::new(allowed));
             net.send_gated(node, fwd, gate.clone());
             f.forwards.insert(id, gate);
             f.forwarded.insert(id);

@@ -183,7 +183,7 @@ impl Engine for Xdma {
     }
 
     fn tick(&mut self, ctx: &mut EngineCtx<'_>) {
-        Xdma::tick(self, ctx.net.cycle)
+        Xdma::tick(self, ctx.net.cycle())
     }
 
     fn next_event(&self, now: u64) -> Option<u64> {

@@ -12,6 +12,7 @@
 //! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
 //!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
 //!             [--faults SPEC]             # e.g. "router:5@300;timeout:2000"
+//!             [--threads N]               # sharded parallel stepper (default 1)
 //! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
 //! ```
 //!
@@ -36,6 +37,7 @@ const USAGE: &str =
   run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
          [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
          [--faults \"link:FROM-TO@C;router:N@C;straggle:NxF@C;drop:N@C;timeout:C;norepair\"]
+         [--threads N]
   artifacts [--dir artifacts]";
 
 fn main() {
@@ -112,6 +114,14 @@ fn run_custom(args: &Args) {
             torrent::sim::FaultPlan::parse(spec)
                 .unwrap_or_else(|e| panic!("--faults: {e}")),
         ),
+        None => cfg,
+    };
+    // --threads overrides the config file; absent both, stay sequential.
+    let cfg = match args.get("threads") {
+        Some(_) => {
+            let threads = args.usize_or("threads", 1);
+            cfg.with_threads(threads)
+        }
         None => cfg,
     };
     let size_kb = args.usize_or("size", 64);

@@ -11,9 +11,11 @@ pub mod multicast;
 pub mod network;
 pub mod packet;
 pub mod router;
+pub mod shard;
 pub mod topology;
 
-pub use network::{Gate, NetStats, Network};
+pub use network::{Gate, GateCell, NetPort, NetStats, Network};
+pub use shard::shard_ranges;
 pub use packet::{Flit, Message, Packet, PacketId, FLIT_BYTES};
 pub use router::{BUF_FLITS, LINK_CYCLES, NUM_VCS, ROUTER_PIPELINE};
 pub use topology::{Coord, Degraded, Dir, Mesh, NodeId, Ring, Topo, Topology, TopologyKind, Torus};

@@ -3,19 +3,59 @@
 //! Links are 64 bytes/cycle (paper §IV-A), so one flit carries 64 B. A
 //! packet is one head flit (routing + message metadata) followed by
 //! `ceil(payload / 64)` body flits; the last flit is the tail. Payload
-//! bytes ride the packet as an `Rc<Vec<u8>>` shared by all of its flits —
+//! bytes ride the packet as an `Arc<Vec<u8>>` shared by all of its flits —
 //! wormhole timing comes from flit accounting, data integrity from the
-//! payload arriving with the tail.
+//! payload arriving with the tail. (`Arc`, not `Rc`: flits cross shard
+//! boundaries under the parallel stepper, so everything a flit can carry
+//! must be `Send`.)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::topology::NodeId;
 
 /// Link width: bytes moved per flit per cycle (64 B/CC, paper §IV-A).
 pub const FLIT_BYTES: usize = 64;
 
-/// Unique packet id (simulation-global).
+/// Unique packet id.
+///
+/// Ids are *composed*, not sequentially counted: `(cycle, phase, node,
+/// seq)` packed most-significant-first (see [`compose_id`]). The
+/// lexicographic order of composed ids equals the allocation order the
+/// old global counter produced — external sends happen between ticks,
+/// dispatch-phase sends before engine-phase sends, nodes in index order
+/// within a phase, calls in order within a node — so every ordered
+/// structure keyed by id (NI ejection maps, forward tables) iterates
+/// exactly as before. The payoff: a shard can allocate ids for its own
+/// nodes with no cross-thread coordination and still produce the ids a
+/// sequential run would have produced.
 pub type PacketId = u64;
+
+/// Bits of per-(cycle, phase, node) send sequence in a composed id.
+pub const ID_SEQ_BITS: u32 = 12;
+/// Bits of node index in a composed id (8191-node fabrics, 64×64 + slack).
+pub const ID_NODE_BITS: u32 = 13;
+/// Bits of tick phase in a composed id.
+pub const ID_PHASE_BITS: u32 = 2;
+
+/// Send issued outside any tick (test harnesses, task submission).
+pub const PHASE_EXTERNAL: u8 = 0;
+/// Send issued during the SoC packet-dispatch phase.
+pub const PHASE_DISPATCH: u8 = 1;
+/// Send issued during the SoC engine-tick phase (incl. the AXI slave).
+pub const PHASE_ENGINE: u8 = 2;
+
+/// Pack `(cycle, phase, node, seq)` into a [`PacketId`] whose numeric
+/// order is the sequential allocation order (see [`PacketId`]).
+pub fn compose_id(cycle: u64, phase: u8, node: usize, seq: u32) -> PacketId {
+    debug_assert!(cycle < 1 << (64 - ID_SEQ_BITS - ID_NODE_BITS - ID_PHASE_BITS), "cycle overflow");
+    debug_assert!((phase as u32) < 1 << ID_PHASE_BITS, "phase overflow");
+    debug_assert!((node as u64) < 1 << ID_NODE_BITS, "node overflow");
+    debug_assert!(seq < 1 << ID_SEQ_BITS, "per-cycle send sequence overflow");
+    (cycle << (ID_PHASE_BITS + ID_NODE_BITS + ID_SEQ_BITS))
+        | ((phase as u64) << (ID_NODE_BITS + ID_SEQ_BITS))
+        | ((node as u64) << ID_SEQ_BITS)
+        | seq as u64
+}
 
 /// Message vocabulary. The NoC treats these opaquely; the AXI layer and
 /// the DMA engines give them meaning.
@@ -56,9 +96,9 @@ pub struct Packet {
     /// `payload.len()` only when a test models phantom data.
     pub payload_bytes: usize,
     /// Actual data moved, if any.
-    pub payload: Option<Rc<Vec<u8>>>,
+    pub payload: Option<Arc<Vec<u8>>>,
     /// ESP-style multicast destination set; `dst` is ignored when set.
-    pub mcast_dsts: Option<Rc<Vec<NodeId>>>,
+    pub mcast_dsts: Option<Arc<Vec<NodeId>>>,
 }
 
 impl Packet {
@@ -68,7 +108,7 @@ impl Packet {
 
     pub fn with_payload(mut self, data: Vec<u8>) -> Self {
         self.payload_bytes = data.len();
-        self.payload = Some(Rc::new(data));
+        self.payload = Some(Arc::new(data));
         self
     }
 
@@ -81,14 +121,14 @@ impl Packet {
 
     /// Attach an already-shared payload without copying (the Torrent data
     /// switch forwards the incoming stream's bytes to the next hop).
-    pub fn with_shared_payload(mut self, data: Option<Rc<Vec<u8>>>, bytes: usize) -> Self {
+    pub fn with_shared_payload(mut self, data: Option<Arc<Vec<u8>>>, bytes: usize) -> Self {
         self.payload_bytes = bytes;
         self.payload = data;
         self
     }
 
     pub fn with_mcast(mut self, dsts: Vec<NodeId>) -> Self {
-        self.mcast_dsts = Some(Rc::new(dsts));
+        self.mcast_dsts = Some(Arc::new(dsts));
         self
     }
 
@@ -99,10 +139,10 @@ impl Packet {
 }
 
 /// One flit of a packet in flight. All flits of a packet share the
-/// `Rc<Packet>`; `seq` runs 0..len_flits.
+/// `Arc<Packet>`; `seq` runs 0..len_flits.
 #[derive(Debug, Clone)]
 pub struct Flit {
-    pub packet: Rc<Packet>,
+    pub packet: Arc<Packet>,
     pub seq: u32,
 }
 
@@ -117,7 +157,7 @@ impl Flit {
 }
 
 /// Expand a packet into its flit sequence (used by injection queues).
-pub fn flits_of(packet: Rc<Packet>) -> impl Iterator<Item = Flit> {
+pub fn flits_of(packet: Arc<Packet>) -> impl Iterator<Item = Flit> {
     let n = packet.len_flits() as u32;
     (0..n).map(move |seq| Flit { packet: packet.clone(), seq })
 }
@@ -141,7 +181,7 @@ mod tests {
 
     #[test]
     fn head_and_tail_flags() {
-        let p = Rc::new(pkt(128));
+        let p = Arc::new(pkt(128));
         let fl: Vec<Flit> = flits_of(p).collect();
         assert_eq!(fl.len(), 3);
         assert!(fl[0].is_head() && !fl[0].is_tail());
@@ -151,7 +191,7 @@ mod tests {
 
     #[test]
     fn single_flit_packet_is_head_and_tail() {
-        let p = Rc::new(pkt(0));
+        let p = Arc::new(pkt(0));
         let fl: Vec<Flit> = flits_of(p).collect();
         assert!(fl[0].is_head() && fl[0].is_tail());
     }
@@ -163,5 +203,22 @@ mod tests {
         assert_eq!(p.payload_bytes, 200);
         assert_eq!(p.len_flits(), 1 + 4);
         assert_eq!(&**p.payload.as_ref().unwrap(), &data);
+    }
+
+    #[test]
+    fn composed_ids_sort_in_sequential_allocation_order() {
+        // External < dispatch < engine at the same cycle; node order
+        // within a phase; call order within a node; cycle dominates all.
+        let ids = [
+            compose_id(5, PHASE_EXTERNAL, 3, 0),
+            compose_id(5, PHASE_DISPATCH, 0, 0),
+            compose_id(5, PHASE_DISPATCH, 0, 1),
+            compose_id(5, PHASE_DISPATCH, 2, 0),
+            compose_id(5, PHASE_ENGINE, 1, 0),
+            compose_id(6, PHASE_EXTERNAL, 0, 0),
+        ];
+        for w in ids.windows(2) {
+            assert!(w[0] < w[1], "composed order violated: {:#x} !< {:#x}", w[0], w[1]);
+        }
     }
 }

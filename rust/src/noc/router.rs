@@ -19,7 +19,7 @@
 //! ring shortest-arc — `noc::topology`); nothing here assumes a mesh.
 
 use std::collections::VecDeque;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::multicast::mcast_fork;
 use super::packet::{Flit, Message, Packet};
@@ -51,7 +51,7 @@ pub fn vc_of(msg: &Message) -> usize {
 #[derive(Debug, Clone)]
 struct RouteLock {
     /// Per-branch output: direction + the packet clone to emit there.
-    branches: Vec<(Dir, Rc<Packet>)>,
+    branches: Vec<(Dir, Arc<Packet>)>,
 }
 
 /// One input VC: flit FIFO + the locked route of the packet being routed.
@@ -173,7 +173,7 @@ impl Router {
     }
 
     /// Compute the route for the packet at the head of `(port, vc)`.
-    fn compute_route(&self, topo: &dyn Topology, pkt: &Rc<Packet>) -> RouteLock {
+    fn compute_route(&self, topo: &dyn Topology, pkt: &Arc<Packet>) -> RouteLock {
         if let Some(dsts) = &pkt.mcast_dsts {
             let branches = mcast_fork(topo, self.node, dsts)
                 .into_iter()
@@ -186,9 +186,9 @@ impl Router {
                         p.mcast_dsts = None;
                     } else {
                         p.dst = subset[0];
-                        p.mcast_dsts = Some(Rc::new(subset));
+                        p.mcast_dsts = Some(Arc::new(subset));
                     }
-                    (dir, Rc::new(p))
+                    (dir, Arc::new(p))
                 })
                 .collect();
             RouteLock { branches }
@@ -311,7 +311,7 @@ mod tests {
     fn unicast_flit_moves_toward_dst() {
         let m = Mesh::new(3, 1);
         let mut r = mk(&m, 0);
-        let pkt = Rc::new(Packet::new(1, NodeId(0), NodeId(2), Message::Raw(0)));
+        let pkt = Arc::new(Packet::new(1, NodeId(0), NodeId(2), Message::Raw(0)));
         r.accept(Dir::Local, 0, Flit { packet: pkt, seq: 0 });
         let moved = r.tick(&m);
         assert_eq!(moved.len(), 1);
@@ -322,7 +322,7 @@ mod tests {
     fn multicast_head_forks_to_all_branches() {
         let m = Mesh::new(3, 3);
         let mut r = mk(&m, 4); // center
-        let pkt = Rc::new(
+        let pkt = Arc::new(
             Packet::new(1, NodeId(4), NodeId(3), Message::Raw(0))
                 .with_mcast(vec![NodeId(3), NodeId(5), NodeId(4)]),
         );
@@ -343,7 +343,7 @@ mod tests {
         for _ in 0..BUF_FLITS {
             r.credits[Dir::East.index()][0] -= 1;
         }
-        let pkt = Rc::new(
+        let pkt = Arc::new(
             Packet::new(1, NodeId(1), NodeId(0), Message::Raw(0))
                 .with_mcast(vec![NodeId(0), NodeId(2)]),
         );
@@ -358,10 +358,10 @@ mod tests {
     fn wormhole_locks_output_until_tail() {
         let m = Mesh::new(2, 1);
         let mut r = mk(&m, 0);
-        let a = Rc::new(
+        let a = Arc::new(
             Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)).with_phantom_payload(64),
         ); // 2 flits
-        let b = Rc::new(Packet::new(2, NodeId(0), NodeId(1), Message::Raw(1)));
+        let b = Arc::new(Packet::new(2, NodeId(0), NodeId(1), Message::Raw(1)));
         // Packet a on VC0 via Local, packet b head on VC1 via Local: same
         // output. b must wait until a's tail frees the port.
         r.accept(Dir::Local, 0, Flit { packet: a.clone(), seq: 0 });
@@ -386,7 +386,7 @@ mod tests {
         for _ in 0..BUF_FLITS {
             r.credits[Dir::East.index()][0] -= 1;
         }
-        let pkt = Rc::new(Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)));
+        let pkt = Arc::new(Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)));
         r.accept(Dir::Local, 0, Flit { packet: pkt, seq: 0 });
         assert!(r.tick(&m).is_empty());
     }
@@ -396,7 +396,7 @@ mod tests {
         let m = Mesh::new(2, 1);
         let mut r = mk(&m, 0);
         assert!(r.is_idle());
-        let pkt = Rc::new(Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)));
+        let pkt = Arc::new(Packet::new(1, NodeId(0), NodeId(1), Message::Raw(0)));
         r.accept(Dir::Local, 0, Flit { packet: pkt, seq: 0 });
         assert!(!r.is_idle());
         r.tick(&m);

@@ -1,0 +1,597 @@
+//! Sharded parallel stepping for the fabric (`StepMode::Parallel`).
+//!
+//! The fabric's per-node state lives in [`Lane`]s (`noc::network`); a
+//! shard is a contiguous node range that one worker thread owns for the
+//! duration of a tick. Workers run the *same* phase helpers as the
+//! sequential [`Network::tick`] — link delivery, injection, switch — over
+//! their own slice; the only cross-shard traffic is
+//!
+//! * **boundary flits** (a link whose downstream router lives in another
+//!   shard) and
+//! * **freed credits** (an input slot freed by a switch whose upstream
+//!   router lives in another shard),
+//!
+//! both of which travel through per-(src-shard, dst-shard) mailboxes and
+//! are committed after a [`Barrier`], in ascending src-shard order with
+//! FIFO order preserved within a shard. That (cycle, src-shard, FIFO)
+//! key makes the merge independent of thread interleaving — the same
+//! discipline that replaced hash-map iteration with `BTreeMap`s in the
+//! endpoint engines.
+//!
+//! # Why this is bit-exact, not just deterministic
+//!
+//! Determinism alone would let `Parallel` disagree with `EventDriven` by
+//! a fixed-but-different schedule. The stronger claim — bit-identical
+//! cycles for every thread count, enforced by the three-way differential
+//! in `rust/tests/stepping.rs` — rests on three facts:
+//!
+//! 1. **Each input FIFO has exactly one producer.** A router's input
+//!    `(port, vc)` FIFO is fed only by the upstream node's link delay
+//!    line for that direction, and a lane owns its node's *outbound*
+//!    links. So every FIFO's content is determined by one source queue's
+//!    pop order, which the mailbox preserves; cross-FIFO commit order is
+//!    immaterial because the switch reads FIFOs, not a global queue.
+//! 2. **No same-cycle credit visibility, in either kernel.** The
+//!    sequential switch phase collects freed credits and applies them
+//!    after every router has allocated (see `Network::tick`); workers do
+//!    the same — in-shard credits after their own switch loop,
+//!    cross-shard credits after the post-switch barrier. Credits are
+//!    commutative counter increments, so apply order within the window
+//!    cannot matter.
+//! 3. **Packet ids are composed, not counted.** `packet::compose_id`
+//!    packs (cycle, phase, node, seq), so a shard allocates the exact id
+//!    a sequential run would have allocated, with no shared counter.
+//!
+//! Fault activation is a *barrier event*: activations mutate arbitrary
+//! lanes (a router kill returns purged credits to its neighbours), so
+//! they are applied on the main thread between the endpoint and fabric
+//! phases — exactly where the sequential kernel applies them — and the
+//! fabric phases only ever *read* fault state.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use super::network::{
+    deliver_links_range, inject_range, lane_send, switch_range, FaultState, Gate, Lane, NetPort,
+    NetStats, Network,
+};
+use super::packet::{Flit, Packet, PacketId, PHASE_EXTERNAL};
+use super::topology::{Dir, NodeId, Topo};
+use std::sync::Arc;
+
+/// A boundary flit headed for another shard: `(dst node, input port, vc,
+/// flit)` in the source link queue's FIFO order.
+type BoundaryFlit = (usize, Dir, usize, Flit);
+/// A freed credit headed for another shard: `(upstream node, upstream
+/// output port, vc)`.
+type BoundaryCredit = (usize, Dir, usize);
+
+/// Partition `n` nodes into at most `threads` contiguous shards, sizes
+/// differing by at most one (the first `n % s` shards take the extra
+/// node). Contiguity keeps a shard's lanes a single `&mut [Lane]` slice
+/// and makes "src-shard order" well defined.
+pub fn shard_ranges(n: usize, threads: usize) -> Vec<Range<usize>> {
+    let s = threads.max(1).min(n.max(1));
+    let (q, r) = (n / s, n % s);
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0;
+    for i in 0..s {
+        let len = q + usize::from(i < r);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Shard index owning `node` (ranges are sorted and contiguous).
+pub(crate) fn shard_of(ranges: &[Range<usize>], node: usize) -> usize {
+    let s = ranges.partition_point(|r| r.end <= node);
+    debug_assert!(ranges[s].contains(&node), "node {node} outside every shard");
+    s
+}
+
+/// Split `items` into the per-shard `&mut` slices described by `ranges`
+/// (which must tile `items` from 0). The borrow-splitting primitive both
+/// the fabric and the SoC endpoint phases use.
+pub(crate) fn split_ranges<'a, T>(items: &'a mut [T], ranges: &[Range<usize>]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = items;
+    let mut off = 0;
+    for r in ranges {
+        debug_assert_eq!(r.start, off, "ranges must tile the slice");
+        let (head, tail) = rest.split_at_mut(r.end - off);
+        out.push(head);
+        rest = tail;
+        off = r.end;
+    }
+    debug_assert!(rest.is_empty(), "ranges must cover the slice");
+    out
+}
+
+/// Per-tick cross-shard rendezvous: the barrier every worker meets
+/// between phases, plus the (src-shard × dst-shard) mailboxes for
+/// boundary flits and credits. A cell is written by exactly one shard
+/// (pre-barrier) and drained by exactly one shard (post-barrier), so the
+/// mutexes are never contended — they exist to make the cells `Sync`.
+pub(crate) struct ShardMail {
+    pub(crate) barrier: Barrier,
+    shards: usize,
+    flits: Vec<Mutex<Vec<BoundaryFlit>>>,
+    credits: Vec<Mutex<Vec<BoundaryCredit>>>,
+}
+
+impl ShardMail {
+    pub(crate) fn new(shards: usize) -> Self {
+        ShardMail {
+            barrier: Barrier::new(shards),
+            shards,
+            flits: (0..shards * shards).map(|_| Mutex::new(Vec::new())).collect(),
+            credits: (0..shards * shards).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    fn cell(&self, src: usize, dst: usize) -> usize {
+        src * self.shards + dst
+    }
+
+    fn post_flits(&self, src: usize, dst: usize, v: Vec<BoundaryFlit>) {
+        let mut g = self.flits[self.cell(src, dst)].lock().unwrap();
+        debug_assert!(g.is_empty(), "flit mailbox double-posted");
+        *g = v;
+    }
+
+    fn take_flits(&self, src: usize, dst: usize) -> Vec<BoundaryFlit> {
+        std::mem::take(&mut *self.flits[self.cell(src, dst)].lock().unwrap())
+    }
+
+    fn post_credits(&self, src: usize, dst: usize, v: Vec<BoundaryCredit>) {
+        let mut g = self.credits[self.cell(src, dst)].lock().unwrap();
+        debug_assert!(g.is_empty(), "credit mailbox double-posted");
+        *g = v;
+    }
+
+    fn take_credits(&self, src: usize, dst: usize) -> Vec<BoundaryCredit> {
+        std::mem::take(&mut *self.credits[self.cell(src, dst)].lock().unwrap())
+    }
+}
+
+/// One worker's share of a fabric tick: the same link-delivery /
+/// injection / switch sequence as `Network::tick`, with boundary flits
+/// and credits exchanged through `mail` at the two barriers. Every
+/// worker of the tick must call this (the barriers count all shards).
+pub(crate) fn fabric_phases(
+    lanes: &mut [Lane],
+    base: usize,
+    si: usize,
+    ranges: &[Range<usize>],
+    topo: Topo,
+    cycle: u64,
+    faults: Option<&FaultState>,
+    mail: &ShardMail,
+    stats: &mut NetStats,
+) {
+    let s = ranges.len();
+
+    // 1. Link delivery. In-shard flits enter their input FIFO directly;
+    //    boundary flits are bucketed per destination shard in source-
+    //    queue pop order. Fault-sunk flits return their credit to the
+    //    sending router, which is in-shard by lane ownership.
+    {
+        let mut out: Vec<Vec<BoundaryFlit>> = vec![Vec::new(); s];
+        deliver_links_range(lanes, base, topo, cycle, faults, stats, |dst, port, vc, flit| {
+            out[shard_of(ranges, dst)].push((dst, port, vc, flit));
+        });
+        for (ds, v) in out.into_iter().enumerate() {
+            if !v.is_empty() {
+                mail.post_flits(si, ds, v);
+            }
+        }
+    }
+    mail.barrier.wait();
+    // Commit inbound boundary flits in ascending src-shard order, FIFO
+    // within each. (Each (dst, port, vc) FIFO has exactly one producer
+    // queue, so this order is for auditability — any commit order yields
+    // the same FIFO contents.)
+    for src in 0..s {
+        for (dst, port, vc, flit) in mail.take_flits(src, si) {
+            lanes[dst - base].router.accept(port, vc, flit);
+        }
+    }
+
+    // 2. Injection — entirely node-local.
+    inject_range(lanes, base, faults, stats);
+
+    // 3. Switch allocation + traversal, credits deferred. In-shard
+    //    credits apply after this shard's full switch pass (no router of
+    //    ours has allocation left to run); cross-shard credits wait for
+    //    the barrier so the owning shard has finished allocating too.
+    //    Either way no router sees a credit freed this same cycle —
+    //    matching the sequential kernel's deferred-credit rule.
+    let mut scratch = Vec::new();
+    let mut credits = Vec::new();
+    switch_range(lanes, base, &topo, cycle, faults, stats, &mut scratch, &mut credits);
+    {
+        let mut out: Vec<Vec<BoundaryCredit>> = vec![Vec::new(); s];
+        for (node, dir, vc) in credits {
+            let ds = shard_of(ranges, node);
+            if ds == si {
+                lanes[node - base].router.return_credit(dir, vc);
+            } else {
+                out[ds].push((node, dir, vc));
+            }
+        }
+        for (ds, v) in out.into_iter().enumerate() {
+            if !v.is_empty() {
+                mail.post_credits(si, ds, v);
+            }
+        }
+    }
+    mail.barrier.wait();
+    // Credits are commutative increments; src-shard order is cosmetic.
+    for src in 0..s {
+        for (node, dir, vc) in mail.take_credits(src, si) {
+            lanes[node - base].router.return_credit(dir, vc);
+        }
+    }
+}
+
+impl Network {
+    /// Advance one cycle with the per-node work sharded across (at most)
+    /// `threads` worker threads. Bit-identical to [`Network::tick`] for
+    /// every thread count; `threads <= 1` (or a single-node fabric) runs
+    /// the sequential kernel directly.
+    pub fn tick_parallel(&mut self, threads: usize) {
+        let ranges = shard_ranges(self.lanes.len(), threads);
+        if ranges.len() <= 1 {
+            self.tick();
+            return;
+        }
+        self.cycle += 1;
+        let cycle = self.cycle;
+        // Fault activations mutate arbitrary lanes (kill_router returns
+        // purged credits to the victim's neighbours), so they happen
+        // here, on the main thread, before any worker exists — the
+        // global barrier event. Workers then only read fault state.
+        if self.faults.is_some() {
+            self.activate_due_faults();
+        }
+        if self.lanes.iter().all(Lane::fabric_quiet) {
+            for l in &mut self.lanes {
+                l.router.rr_advance(1);
+            }
+            return;
+        }
+        let topo = self.topo;
+        let Network { lanes, faults, stats, .. } = self;
+        let faults = faults.as_deref();
+        let mail = ShardMail::new(ranges.len());
+        let deltas: Vec<NetStats> = std::thread::scope(|sc| {
+            let handles: Vec<_> = split_ranges(lanes, &ranges)
+                .into_iter()
+                .enumerate()
+                .map(|(si, slice)| {
+                    let (ranges, mail) = (&ranges, &mail);
+                    sc.spawn(move || {
+                        let mut stats = NetStats::default();
+                        fabric_phases(
+                            slice,
+                            ranges[si].start,
+                            si,
+                            ranges,
+                            topo,
+                            cycle,
+                            faults,
+                            mail,
+                            &mut stats,
+                        );
+                        stats
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fabric shard worker panicked"))
+                .collect()
+        });
+        // Merge per-shard stat deltas in shard order (sums — order is
+        // cosmetic, but fixed anyway).
+        for d in &deltas {
+            stats.merge(d);
+        }
+    }
+
+    /// Carve the fabric's lanes into per-shard endpoint views for the
+    /// SoC's parallel dispatch/engine phases. The views borrow the lanes;
+    /// fabric-wide queries are unavailable until they are dropped.
+    pub(crate) fn endpoint_shards(&mut self, ranges: &[Range<usize>]) -> Vec<EndpointShard<'_>> {
+        let cycle = self.cycle;
+        split_ranges(&mut self.lanes, ranges)
+            .into_iter()
+            .zip(ranges)
+            .map(|(slice, r)| EndpointShard::new(r.start, cycle, slice))
+            .collect()
+    }
+}
+
+/// A shard-local [`NetPort`]: the endpoint surface over one shard's
+/// lanes, used by the SoC's dispatch and engine phases on a worker
+/// thread. Sends allocate composed packet ids from the lane's own
+/// allocator, so the ids (and everything ordered by them) are identical
+/// to a sequential run. Any access outside the shard panics — engines
+/// only ever touch their own node's NI, and this is where that
+/// invariant is enforced.
+pub(crate) struct EndpointShard<'a> {
+    base: usize,
+    cycle: u64,
+    phase: u8,
+    lanes: &'a mut [Lane],
+    stats: NetStats,
+}
+
+impl<'a> EndpointShard<'a> {
+    pub(crate) fn new(base: usize, cycle: u64, lanes: &'a mut [Lane]) -> Self {
+        EndpointShard { base, cycle, phase: PHASE_EXTERNAL, lanes, stats: NetStats::default() }
+    }
+
+    fn idx(&self, node: NodeId) -> usize {
+        assert!(
+            node.0 >= self.base && node.0 - self.base < self.lanes.len(),
+            "endpoint access outside shard: node {} not in [{}, {})",
+            node.0,
+            self.base,
+            self.base + self.lanes.len()
+        );
+        node.0 - self.base
+    }
+
+    /// Release the lane borrow, handing back the slice (for the fused
+    /// endpoint+fabric worker) and the stats delta accumulated by sends.
+    pub(crate) fn finish(self) -> (&'a mut [Lane], NetStats) {
+        (self.lanes, self.stats)
+    }
+}
+
+impl NetPort for EndpointShard<'_> {
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    fn send(&mut self, from: NodeId, pkt: Packet) -> PacketId {
+        let i = self.idx(from);
+        lane_send(&mut self.lanes[i], self.cycle, self.phase, from, pkt, None, &mut self.stats)
+    }
+
+    fn send_gated(&mut self, from: NodeId, pkt: Packet, gate: Gate) -> PacketId {
+        let i = self.idx(from);
+        lane_send(
+            &mut self.lanes[i],
+            self.cycle,
+            self.phase,
+            from,
+            pkt,
+            Some(gate),
+            &mut self.stats,
+        )
+    }
+
+    fn eject_in_progress(&self, node: NodeId) -> Vec<(PacketId, Arc<Packet>, u32)> {
+        self.lanes[self.idx(node)]
+            .eject
+            .iter()
+            .map(|(&id, st)| (id, st.packet.clone(), st.arrived))
+            .collect()
+    }
+
+    fn progress_of(&self, node: NodeId, id: PacketId) -> Option<u32> {
+        self.lanes[self.idx(node)].eject.get(&id).map(|e| e.arrived)
+    }
+
+    fn recv(&mut self, node: NodeId) -> Option<Arc<Packet>> {
+        let i = self.idx(node);
+        self.lanes[i].inbox.pop_front()
+    }
+
+    fn set_phase(&mut self, phase: u8) {
+        self.phase = phase;
+    }
+}
+
+/// Shared quiet-consensus vote for the fused endpoint+fabric worker (see
+/// `soc::Soc::tick_parallel`): each worker ORs in its shard's busyness
+/// before the barrier; all read the verdict after it. Relaxed ordering
+/// suffices — the barrier provides the happens-before edge.
+pub(crate) struct QuietVote(AtomicBool);
+
+impl QuietVote {
+    pub(crate) fn new() -> Self {
+        QuietVote(AtomicBool::new(false))
+    }
+
+    /// Record this shard's vote: lanes with any fabric work mark the
+    /// whole tick busy.
+    pub(crate) fn report(&self, lanes: &[Lane]) {
+        if !lanes.iter().all(Lane::fabric_quiet) {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// The global verdict. Only valid after a barrier following every
+    /// shard's [`QuietVote::report`].
+    pub(crate) fn busy(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::packet::Message;
+    use crate::noc::topology::{Mesh, Ring, Torus, Topology};
+    use crate::sim::FaultPlan;
+
+    #[test]
+    fn shard_ranges_tile_and_balance() {
+        assert_eq!(shard_ranges(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(shard_ranges(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(shard_ranges(4, 9), vec![0..1, 1..2, 2..3, 3..4], "shards clamp to nodes");
+        assert_eq!(shard_ranges(5, 1), vec![0..5]);
+        assert_eq!(shard_ranges(5, 0), vec![0..5], "0 threads means sequential");
+        for (n, t) in [(64, 4), (20, 3), (9, 2), (4096, 16)] {
+            let r = shard_ranges(n, t);
+            assert_eq!(r[0].start, 0);
+            assert_eq!(r.last().unwrap().end, n);
+            assert!(r.windows(2).all(|w| w[0].end == w[1].start), "gap in ranges");
+            let (lo, hi) = (
+                r.iter().map(|x| x.len()).min().unwrap(),
+                r.iter().map(|x| x.len()).max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "unbalanced shards for n={n} t={t}");
+            for node in 0..n {
+                assert!(r[shard_of(&r, node)].contains(&node));
+            }
+        }
+    }
+
+    /// Drive the same traffic through sequential and sharded fabric
+    /// ticks and require identical delivery cycles, stats and payloads.
+    fn assert_fabric_equivalent(mk: impl Fn() -> Network, threads: usize, max_cycles: u64) {
+        let mut seq = mk();
+        let mut par = mk();
+        let mut delivered_seq: Vec<(u64, usize, PacketId)> = Vec::new();
+        let mut delivered_par: Vec<(u64, usize, PacketId)> = Vec::new();
+        for _ in 0..max_cycles {
+            seq.tick();
+            par.tick_parallel(threads);
+            for node in 0..seq.topo.n_nodes() {
+                while let Some(p) = seq.recv(NodeId(node)) {
+                    delivered_seq.push((seq.cycle, node, p.id));
+                }
+                while let Some(p) = par.recv(NodeId(node)) {
+                    delivered_par.push((par.cycle, node, p.id));
+                }
+            }
+            if seq.is_idle() && par.is_idle() {
+                break;
+            }
+        }
+        assert!(seq.is_idle() && par.is_idle(), "traffic did not drain");
+        assert_eq!(delivered_seq, delivered_par, "delivery schedule diverged");
+        assert_eq!(seq.stats.flit_hops, par.stats.flit_hops);
+        assert_eq!(seq.stats.flit_ejections, par.stats.flit_ejections);
+        assert_eq!(seq.stats.packets_delivered, par.stats.packets_delivered);
+        assert_eq!(seq.stats.flits_dropped, par.stats.flits_dropped);
+    }
+
+    fn all_to_one(topo: impl Into<Topo> + Copy) -> impl Fn() -> Network {
+        move || {
+            let mut n = Network::new(topo);
+            let nodes = n.topo.n_nodes();
+            for src in 0..nodes {
+                if src == nodes - 1 {
+                    continue;
+                }
+                n.send(
+                    NodeId(src),
+                    Packet::new(0, NodeId(src), NodeId(nodes - 1), Message::Raw(src as u64))
+                        .with_phantom_payload(64 * (1 + src % 7)),
+                );
+            }
+            n
+        }
+    }
+
+    #[test]
+    fn parallel_fabric_matches_sequential_on_mesh() {
+        for threads in [2, 3, 4, 16] {
+            assert_fabric_equivalent(all_to_one(Mesh::new(4, 4)), threads, 10_000);
+        }
+    }
+
+    #[test]
+    fn parallel_fabric_matches_sequential_on_torus_and_ring() {
+        assert_fabric_equivalent(all_to_one(Torus::new(4, 4)), 4, 10_000);
+        assert_fabric_equivalent(all_to_one(Ring::new(9)), 4, 10_000);
+    }
+
+    #[test]
+    fn parallel_fabric_matches_sequential_with_multicast() {
+        let mk = || {
+            let mut n = Network::new(Mesh::new(4, 4));
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(3), Message::Raw(1))
+                    .with_phantom_payload(512)
+                    .with_mcast(vec![NodeId(3), NodeId(12), NodeId(15), NodeId(5)]),
+            );
+            n.send(
+                NodeId(15),
+                Packet::new(0, NodeId(15), NodeId(0), Message::Raw(2)).with_phantom_payload(256),
+            );
+            n
+        };
+        for threads in [2, 4] {
+            assert_fabric_equivalent(mk, threads, 10_000);
+        }
+    }
+
+    #[test]
+    fn parallel_fabric_matches_sequential_under_faults() {
+        // Kills and a straggler land mid-stream; activation is a main-
+        // thread barrier event in the parallel tick and must produce the
+        // same drop set and drain cycle as the sequential kernel.
+        let mk = || {
+            let mut n = Network::new(Mesh::new(4, 4));
+            n.install_faults(&FaultPlan::parse("router:5@30;link:9-10@20;straggle:6x3@0").unwrap());
+            for src in [0usize, 3, 12, 8] {
+                n.send(
+                    NodeId(src),
+                    Packet::new(0, NodeId(src), NodeId(10), Message::Raw(src as u64))
+                        .with_phantom_payload(64 * 20),
+                );
+            }
+            n
+        };
+        for threads in [2, 4] {
+            assert_fabric_equivalent(mk, threads, 20_000);
+        }
+    }
+
+    #[test]
+    fn tick_parallel_with_one_thread_is_the_sequential_kernel() {
+        // Not just equivalent — the same code path (ranges collapse to
+        // one shard), so Parallel{1} ≡ EventDriven holds by construction.
+        let mk = all_to_one(Mesh::new(3, 3));
+        assert_fabric_equivalent(mk, 1, 10_000);
+    }
+
+    #[test]
+    fn endpoint_shard_sends_compose_the_sequential_ids() {
+        let mut seq = Network::new(Mesh::new(4, 1));
+        let a = seq.send(NodeId(1), Packet::new(0, NodeId(1), NodeId(0), Message::Raw(0)));
+        let b = seq.send(NodeId(2), Packet::new(0, NodeId(2), NodeId(0), Message::Raw(1)));
+
+        let mut par = Network::new(Mesh::new(4, 1));
+        let ranges = shard_ranges(4, 2);
+        let mut shards = par.endpoint_shards(&ranges);
+        // Reverse order on purpose: id values must not depend on which
+        // shard sends first.
+        let b2 = shards[1].send(NodeId(2), Packet::new(0, NodeId(2), NodeId(0), Message::Raw(1)));
+        let a2 = shards[0].send(NodeId(1), Packet::new(0, NodeId(1), NodeId(0), Message::Raw(0)));
+        let deltas: Vec<NetStats> = shards.into_iter().map(|s| s.finish().1).collect();
+        for d in &deltas {
+            par.stats.merge(d);
+        }
+        assert_eq!((a, b), (a2, b2));
+        assert_eq!(par.stats.packets_sent, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint access outside shard")]
+    fn endpoint_shard_rejects_foreign_nodes() {
+        let mut n = Network::new(Mesh::new(4, 1));
+        let ranges = shard_ranges(4, 2);
+        let mut shards = n.endpoint_shards(&ranges);
+        shards[0].send(NodeId(3), Packet::new(0, NodeId(3), NodeId(0), Message::Raw(0)));
+    }
+}

@@ -1,7 +1,7 @@
 //! Naive and greedy (paper Alg. 1) chain ordering, over any
 //! [`Topology`] (the link-overlap test walks the fabric's own routes).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::noc::{NodeId, Topology};
 
@@ -44,7 +44,7 @@ pub fn greedy_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<N
         .unwrap();
     remaining.retain(|&d| d != start);
     let mut order = vec![start];
-    let mut used: HashSet<(NodeId, NodeId)> = topo.links(src, start).into_iter().collect();
+    let mut used: BTreeSet<(NodeId, NodeId)> = topo.links(src, start).into_iter().collect();
 
     while !remaining.is_empty() {
         let tail = *order.last().unwrap();

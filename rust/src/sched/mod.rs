@@ -23,7 +23,7 @@ pub use chain::{greedy_order, naive_order, Strategy};
 pub use hops::{chain_hops, unicast_hops};
 pub use tsp::tsp_order;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::noc::{NodeId, Topology};
 
@@ -60,7 +60,7 @@ pub fn schedule_pairs<T>(
 ) -> (Vec<NodeId>, Vec<(NodeId, T)>) {
     let nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
     let order = schedule(strategy, topo, src, &nodes);
-    let mut slots: HashMap<NodeId, VecDeque<(NodeId, T)>> = HashMap::with_capacity(dests.len());
+    let mut slots: BTreeMap<NodeId, VecDeque<(NodeId, T)>> = BTreeMap::new();
     for pair in dests {
         slots.entry(pair.0).or_default().push_back(pair);
     }

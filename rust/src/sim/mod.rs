@@ -70,6 +70,24 @@ pub enum StepMode {
     /// hints. Bit-identical cycle counts to [`StepMode::FullTick`].
     #[default]
     EventDriven,
+    /// Event-driven stepping with the per-cycle work sharded across
+    /// `threads` worker threads (contiguous node ranges; cross-shard
+    /// flits merge through per-cycle barriers in a fixed (cycle,
+    /// src-shard, FIFO) order — see DESIGN.md §Parallel core).
+    /// Bit-identical to [`StepMode::EventDriven`] for every thread
+    /// count; `threads <= 1` runs the sequential kernel unchanged.
+    ///
+    /// Fast-forwarding stays a *global* decision: the main thread checks
+    /// quiescence over all shards before skipping, so a shard never
+    /// runs ahead of a fabric another shard still considers busy. Fault
+    /// activations are applied between the engine and fabric phases on
+    /// the main thread — a global barrier event, exactly where the
+    /// sequential kernel applies them.
+    Parallel {
+        /// Worker threads (and shards) per tick. Clamped to the node
+        /// count; 0 and 1 both mean "sequential".
+        threads: usize,
+    },
 }
 
 /// Simulation clock.

@@ -24,6 +24,11 @@ pub struct SocConfig {
     pub name: String,
     /// Fault-injection scenario (empty by default — a healthy SoC).
     pub faults: FaultPlan,
+    /// Simulation worker threads. `1` (default) selects the sequential
+    /// stepper; `> 1` selects [`crate::sim::StepMode::Parallel`] — the
+    /// sharded kernel with the deterministic barrier merge, bit-identical
+    /// to the sequential modes at any thread count.
+    pub threads: usize,
 }
 
 impl SocConfig {
@@ -38,6 +43,7 @@ impl SocConfig {
             window: DEFAULT_WINDOW,
             name: "eval-4x5".into(),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -52,6 +58,7 @@ impl SocConfig {
             window: DEFAULT_WINDOW,
             name: "mesh-8x8".into(),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -67,6 +74,7 @@ impl SocConfig {
             window: 4 << 20,
             name: "fpga-3x3".into(),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -80,6 +88,7 @@ impl SocConfig {
             window: DEFAULT_WINDOW,
             name: "synth-2x2".into(),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -94,6 +103,7 @@ impl SocConfig {
             window: DEFAULT_WINDOW,
             name: format!("custom-{cols}x{rows}"),
             faults: FaultPlan::default(),
+            threads: 1,
         }
     }
 
@@ -101,6 +111,14 @@ impl SocConfig {
     /// (`SocConfig::eval_4x5().with_topology(TopologyKind::Torus)`).
     pub fn with_topology(mut self, topology: TopologyKind) -> Self {
         self.topology = topology;
+        self
+    }
+
+    /// Set the worker-thread count for the sharded parallel stepper
+    /// (`SocConfig::eval_4x5().with_threads(4)`). `1` keeps the
+    /// sequential kernel.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -124,6 +142,7 @@ impl SocConfig {
     /// rows = 5
     /// topology = "torus"   # mesh (default) | torus | ring
     /// spm_kib = 1024
+    /// threads = 4          # parallel stepper workers (default 1)
     /// ```
     ///
     /// Supports `key = value` lines, `#` comments, quoted strings and
@@ -154,6 +173,7 @@ impl SocConfig {
                     })?;
                 }
                 "spm_kib" => cfg.spm_bytes = int(v)? << 10,
+                "threads" => cfg.threads = int(v)?.max(1),
                 "window_mib" => cfg.window = (int(v)? as u64) << 20,
                 "faults" => {
                     cfg.faults = FaultPlan::parse(v.trim_matches('"'))
@@ -224,6 +244,23 @@ mod tests {
         let topo = ring.build_topo();
         assert_eq!(topo.n_nodes(), 16);
         assert_eq!(topo.distance(NodeId(0), NodeId(15)), 1);
+    }
+
+    #[test]
+    fn threads_default_and_override() {
+        use crate::sim::StepMode;
+        assert_eq!(SocConfig::eval_4x5().threads, 1);
+        let cfg = SocConfig::from_toml("threads = 4").unwrap();
+        assert_eq!(cfg.threads, 4);
+        // threads = 0 is clamped, not an error (matches with_threads).
+        assert_eq!(SocConfig::from_toml("threads = 0").unwrap().threads, 1);
+        assert_eq!(SocConfig::custom(2, 2, 1024).with_threads(0).threads, 1);
+        // The builder maps threads > 1 to the parallel step mode, and a
+        // single thread keeps the default sequential stepper.
+        let par = crate::soc::Soc::new(SocConfig::custom(2, 2, 1024).with_threads(3));
+        assert_eq!(par.step_mode, StepMode::Parallel { threads: 3 });
+        let seq = crate::soc::Soc::new(SocConfig::custom(2, 2, 1024));
+        assert_eq!(seq.step_mode, StepMode::default());
     }
 
     #[test]

@@ -25,7 +25,9 @@ use crate::dma::torrent::dse::AffinePattern;
 use crate::dma::torrent::{ChainDest, ChainTask, Torrent};
 use crate::dma::{Engine, EngineCtx, EngineKind, TaskResult};
 use crate::mem::{AddrMap, Scratchpad};
-use crate::noc::{Network, NodeId, Topo, Topology};
+use crate::noc::packet::{PHASE_DISPATCH, PHASE_ENGINE, PHASE_EXTERNAL};
+use crate::noc::shard::{fabric_phases, shard_ranges, split_ranges, QuietVote, ShardMail};
+use crate::noc::{NetPort, NetStats, Network, NodeId, Topo, Topology};
 use crate::sched::{schedule_pairs, Strategy};
 use crate::sim::{FaultKind, StepMode, Watchdog};
 
@@ -90,12 +92,16 @@ pub struct Soc {
     pub ticks_executed: u64,
     /// Cycles fast-forwarded over by event-driven stepping.
     pub cycles_skipped: u64,
-    /// Follower-engine drop-outs from the fault plan: `(node, cycle)` —
-    /// from `cycle` on, the node's engine complex (engines, AXI slave,
-    /// multicast sink) is fail-silent while its router keeps routing.
-    /// Empty on a healthy SoC, so every fault check below reduces to one
-    /// `faults_armed` branch.
-    drop_at: Vec<(usize, u64)>,
+    /// Per-node engine drop-out cycle (`u64::MAX` = never), from the
+    /// fault plan's [`FaultKind::FollowerDrop`] entries — from that cycle
+    /// on, the node's engine complex (engines, AXI slave, multicast
+    /// sink) is fail-silent while its router keeps routing. A direct
+    /// table, not a scan over the plan: [`Soc::node_dropped`] sits on the
+    /// per-packet dispatch path and must be O(1).
+    drop_cycle: Vec<u64>,
+    /// Sorted, deduplicated drop-activation cycles (per-node earliest),
+    /// so [`Soc::next_drop_activation`] is one `partition_point`.
+    drop_events: Vec<u64>,
     /// True when the config carries any fault at all (fabric or SoC
     /// layer) — the single gate in front of all degraded-path logic.
     faults_armed: bool,
@@ -119,25 +125,32 @@ impl Soc {
             .collect();
         let mut net = Network::new(topo);
         net.install_faults(&cfg.faults);
-        let drop_at: Vec<(usize, u64)> = cfg
-            .faults
-            .faults
-            .iter()
-            .filter_map(|f| match f.kind {
-                FaultKind::FollowerDrop { node } => Some((node, f.at_cycle)),
-                _ => None,
-            })
-            .collect();
+        let mut drop_cycle = vec![u64::MAX; topo.n_nodes()];
+        for f in &cfg.faults.faults {
+            if let FaultKind::FollowerDrop { node } = f.kind {
+                drop_cycle[node] = drop_cycle[node].min(f.at_cycle);
+            }
+        }
+        let mut drop_events: Vec<u64> =
+            drop_cycle.iter().copied().filter(|&c| c != u64::MAX).collect();
+        drop_events.sort_unstable();
+        drop_events.dedup();
         let faults_armed = !cfg.faults.is_empty();
+        let step_mode = if cfg.threads > 1 {
+            StepMode::Parallel { threads: cfg.threads }
+        } else {
+            StepMode::default()
+        };
         Soc {
             cfg,
             net,
             nodes,
             map,
-            step_mode: StepMode::default(),
+            step_mode,
             ticks_executed: 0,
             cycles_skipped: 0,
-            drop_at,
+            drop_cycle,
+            drop_events,
             faults_armed,
         }
     }
@@ -163,8 +176,7 @@ impl Soc {
     /// dropped out ([`FaultKind::FollowerDrop`]) or its router was killed
     /// (the cluster behind the local port dies with it).
     pub fn node_dropped(&self, node: NodeId) -> bool {
-        (self.faults_armed
-            && self.drop_at.iter().any(|&(n, at)| n == node.0 && at <= self.net.cycle))
+        (self.faults_armed && self.drop_cycle[node.0] <= self.net.cycle)
             || self.net.router_dead(node)
     }
 
@@ -173,75 +185,150 @@ impl Soc {
     /// skipping, so faulted runs are bit-identical across step modes.
     pub fn any_fault_active(&self) -> bool {
         self.net.fault_active()
-            || (self.faults_armed && self.drop_at.iter().any(|&(_, at)| at <= self.net.cycle))
+            || (self.faults_armed
+                && self.drop_events.first().is_some_and(|&at| at <= self.net.cycle))
     }
 
     /// Earliest not-yet-effective engine drop-out, if any.
     fn next_drop_activation(&self) -> Option<u64> {
-        self.drop_at
-            .iter()
-            .filter(|&&(_, at)| at > self.net.cycle)
-            .map(|&(_, at)| at)
-            .min()
+        let i = self.drop_events.partition_point(|&at| at <= self.net.cycle);
+        self.drop_events.get(i).copied()
+    }
+
+    /// Per-node fail-silent flags for this tick, `None` on a fault-free
+    /// run (the healthy path allocates nothing). Safe to compute once per
+    /// tick: drop activations and router kills cannot change during the
+    /// endpoint phases — fault activation happens inside the fabric tick.
+    fn dropped_now(&self) -> Option<Vec<bool>> {
+        if !self.faults_armed {
+            return None;
+        }
+        Some((0..self.nodes.len()).map(|i| self.node_dropped(NodeId(i))).collect())
     }
 
     /// Advance one cycle: deliver inboxes, tick engines, tick the fabric.
     pub fn tick(&mut self) {
         let now = self.net.cycle;
-        // 1. Dispatch delivered packets: every engine sees every packet
-        //    (uniform dispatch through `dma::Engine`; owners consume,
-        //    eavesdroppers return false), then the multicast sink and
-        //    the AXI slave get their turn.
-        for i in 0..self.nodes.len() {
-            if self.faults_armed && self.node_dropped(NodeId(i)) {
-                // Fail-silent endpoint: packets are ejected into the void
-                // (the router still routes if only the engines dropped).
-                while self.net.recv(NodeId(i)).is_some() {}
-                continue;
-            }
-            while let Some(pkt) = self.net.recv(NodeId(i)) {
-                let SocNode { torrent, idma, xdma, mcast, mcast_sink, slave, mem } =
-                    &mut self.nodes[i];
-                let mut consumed = false;
-                {
-                    let mut ctx = EngineCtx { net: &mut self.net, mem: &mut *mem };
-                    let engines: [&mut dyn Engine; 4] =
-                        [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
-                    for e in engines {
-                        consumed |= e.handle(&pkt, &mut ctx, now);
-                    }
-                }
-                consumed = consumed
-                    || mcast_sink.handle(NodeId(i), &pkt, mem, &mut self.net)
-                    || slave.handle(NodeId(i), &pkt, mem, now);
-                assert!(consumed, "undeliverable packet at node {i}: {:?}", pkt.msg);
-            }
-        }
-        // 2. Engine logic, uniformly through the trait. Frontend legs
-        //    emitted by one engine (XDMA's P2P sub-transfers) are offered
-        //    to the engines ticked after it; the Torrent frontend drains
-        //    them before its own tick, so legs start the same cycle.
-        for i in 0..self.nodes.len() {
-            if self.faults_armed && self.node_dropped(NodeId(i)) {
-                continue; // dead engines hold no clock
-            }
-            let SocNode { torrent, idma, xdma, mcast, slave, mem, .. } = &mut self.nodes[i];
-            let mut legs: Vec<(ChainTask, u64)> = Vec::new();
-            {
-                let mut ctx = EngineCtx { net: &mut self.net, mem: &mut *mem };
-                let engines: [&mut dyn Engine; 4] =
-                    [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
-                for e in engines {
-                    e.accept_frontend_legs(&mut legs);
-                    e.tick(&mut ctx);
-                    legs.extend(e.take_frontend_legs());
-                }
-            }
-            debug_assert!(legs.is_empty(), "frontend legs left unclaimed at node {i}");
-            slave.tick(NodeId(i), &mut self.net);
-        }
-        // 3. Fabric.
+        let dropped = self.dropped_now();
+        run_endpoint_phases(&mut self.nodes, &mut self.net, 0, now, dropped.as_deref());
         self.net.tick();
+    }
+
+    /// [`Soc::tick`] with the endpoint phases and the fabric sharded
+    /// across `threads` workers (the [`StepMode::Parallel`] kernel).
+    ///
+    /// Each worker owns a contiguous node range — routers and their
+    /// co-located engines/memory move together, so engine sends stay
+    /// shard-local ([`crate::noc::shard`] has the merge-order argument
+    /// for why the result is bit-identical to [`Soc::tick`]).
+    ///
+    /// Healthy and drop-only plans take a *fused* path: one thread scope
+    /// runs endpoint phases, a quiet consensus vote, and the fabric
+    /// phases back-to-back, with the vote's barrier separating endpoint
+    /// sends from fabric delivery. Plans with fabric faults split into
+    /// two scopes so fault activation runs on the main thread between
+    /// them — a global barrier event, exactly where the sequential kernel
+    /// activates faults (inside `Network::tick`, before delivery).
+    pub fn tick_parallel(&mut self, threads: usize) {
+        let ranges = shard_ranges(self.nodes.len(), threads);
+        if ranges.len() <= 1 {
+            // One shard is definitionally the sequential kernel; skip the
+            // scope/barrier machinery entirely.
+            self.tick();
+            return;
+        }
+        let now = self.net.cycle;
+        let topo = self.net.topo;
+        let dropped = self.dropped_now();
+        let drop_slices: Vec<Option<&[bool]>> = ranges
+            .iter()
+            .map(|r| dropped.as_deref().map(|d| &d[r.start..r.end]))
+            .collect();
+        if self.net.faults.is_some() {
+            // Split path: endpoint scope, then the fabric's own parallel
+            // tick (which activates due faults on the main thread first).
+            let shards = self.net.endpoint_shards(&ranges);
+            let node_slices = split_ranges(&mut self.nodes, &ranges);
+            let deltas: Vec<NetStats> = std::thread::scope(|sc| {
+                let handles: Vec<_> = shards
+                    .into_iter()
+                    .zip(node_slices)
+                    .zip(&drop_slices)
+                    .enumerate()
+                    .map(|(si, ((mut shard, nodes), &drop))| {
+                        let base = ranges[si].start;
+                        sc.spawn(move || {
+                            run_endpoint_phases(nodes, &mut shard, base, now, drop);
+                            shard.finish().1
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("soc endpoint shard worker panicked"))
+                    .collect()
+            });
+            for d in &deltas {
+                self.net.stats.merge(d);
+            }
+            self.net.tick_parallel(threads);
+            return;
+        }
+        // Fused path: endpoint phases at cycle `now`, then — behind the
+        // consensus barrier — the fabric phases at `now + 1`, all in one
+        // scope. The vote decides globally between a real fabric tick and
+        // the quiet round-robin advance, mirroring `Network::tick`'s
+        // all-lanes-quiet shortcut (fast-forward only when all shards
+        // agree the fabric is quiet).
+        let s = ranges.len();
+        let mail = ShardMail::new(s);
+        let vote = QuietVote::new();
+        let shards = self.net.endpoint_shards(&ranges);
+        let node_slices = split_ranges(&mut self.nodes, &ranges);
+        let deltas: Vec<NetStats> = std::thread::scope(|sc| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .zip(node_slices)
+                .zip(&drop_slices)
+                .enumerate()
+                .map(|(si, ((mut shard, nodes), &drop))| {
+                    let (ranges, mail, vote) = (&ranges, &mail, &vote);
+                    sc.spawn(move || {
+                        let base = ranges[si].start;
+                        run_endpoint_phases(nodes, &mut shard, base, now, drop);
+                        let (lanes, mut stats) = shard.finish();
+                        vote.report(lanes);
+                        mail.barrier.wait();
+                        if vote.busy() {
+                            fabric_phases(
+                                lanes,
+                                base,
+                                si,
+                                ranges,
+                                topo,
+                                now + 1,
+                                None,
+                                mail,
+                                &mut stats,
+                            );
+                        } else {
+                            for lane in lanes.iter_mut() {
+                                lane.router.rr_advance(1);
+                            }
+                        }
+                        stats
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("soc shard worker panicked"))
+                .collect()
+        });
+        self.net.cycle += 1;
+        for d in &deltas {
+            self.net.stats.merge(d);
+        }
     }
 
     /// All engines and the fabric quiescent. Dropped nodes are excluded:
@@ -327,10 +414,20 @@ impl Soc {
     /// interleave task dispatch/collection with stepping while keeping
     /// cycle counts bit-identical to an uninterrupted `run_until_idle`.
     pub fn step_quantum(&mut self, start: u64, max_cycles: u64) {
-        if self.step_mode == StepMode::EventDriven {
-            self.fast_forward(start, max_cycles);
+        match self.step_mode {
+            StepMode::FullTick => self.tick(),
+            StepMode::EventDriven => {
+                self.fast_forward(start, max_cycles);
+                self.tick();
+            }
+            StepMode::Parallel { threads } => {
+                // Fast-forward is a main-thread (all-shards) decision: the
+                // quiet predicate is global, so the skip is taken exactly
+                // when the event-driven stepper would take it.
+                self.fast_forward(start, max_cycles);
+                self.tick_parallel(threads);
+            }
         }
-        self.tick();
         self.ticks_executed += 1;
     }
 
@@ -377,6 +474,83 @@ impl Soc {
     pub fn torrent_result(&self, node: NodeId, task: u32) -> Option<&TaskResult> {
         self.nodes[node.0].torrent.results.iter().find(|r| r.task == task)
     }
+}
+
+/// The per-cycle endpoint phases — packet dispatch, then engine logic —
+/// for the node range `[base, base + nodes.len())`, against any
+/// [`NetPort`] (the whole fabric for sequential stepping, one
+/// [`crate::noc::shard::EndpointShard`] per worker for parallel
+/// stepping). This is THE single copy of the event loop's endpoint
+/// semantics: both kernels execute this exact code, which is half of the
+/// bit-exactness argument (the other half lives in `noc::shard`).
+///
+/// `now` is the cycle the phases run at (the fabric advances afterwards);
+/// `dropped`, when present, is base-relative fail-silent flags frozen at
+/// tick start. Packet-id phase stamps (`PHASE_DISPATCH` / `PHASE_ENGINE`)
+/// keep composed ids in global send order without any shared counter.
+fn run_endpoint_phases(
+    nodes: &mut [SocNode],
+    net: &mut dyn NetPort,
+    base: usize,
+    now: u64,
+    dropped: Option<&[bool]>,
+) {
+    // 1. Dispatch delivered packets: every engine sees every packet
+    //    (uniform dispatch through `dma::Engine`; owners consume,
+    //    eavesdroppers return false), then the multicast sink and the
+    //    AXI slave get their turn.
+    net.set_phase(PHASE_DISPATCH);
+    for li in 0..nodes.len() {
+        let i = base + li;
+        if dropped.is_some_and(|d| d[li]) {
+            // Fail-silent endpoint: packets are ejected into the void
+            // (the router still routes if only the engines dropped).
+            while net.recv(NodeId(i)).is_some() {}
+            continue;
+        }
+        while let Some(pkt) = net.recv(NodeId(i)) {
+            let SocNode { torrent, idma, xdma, mcast, mcast_sink, slave, mem } = &mut nodes[li];
+            let mut consumed = false;
+            {
+                let mut ctx = EngineCtx { net: &mut *net, mem: &mut *mem };
+                let engines: [&mut dyn Engine; 4] =
+                    [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
+                for e in engines {
+                    consumed |= e.handle(&pkt, &mut ctx, now);
+                }
+            }
+            consumed = consumed
+                || mcast_sink.handle(NodeId(i), &pkt, mem, &mut *net)
+                || slave.handle(NodeId(i), &pkt, mem, now);
+            assert!(consumed, "undeliverable packet at node {i}: {:?}", pkt.msg);
+        }
+    }
+    // 2. Engine logic, uniformly through the trait. Frontend legs
+    //    emitted by one engine (XDMA's P2P sub-transfers) are offered
+    //    to the engines ticked after it; the Torrent frontend drains
+    //    them before its own tick, so legs start the same cycle.
+    net.set_phase(PHASE_ENGINE);
+    for li in 0..nodes.len() {
+        let i = base + li;
+        if dropped.is_some_and(|d| d[li]) {
+            continue; // dead engines hold no clock
+        }
+        let SocNode { torrent, idma, xdma, mcast, slave, mem, .. } = &mut nodes[li];
+        let mut legs: Vec<(ChainTask, u64)> = Vec::new();
+        {
+            let mut ctx = EngineCtx { net: &mut *net, mem: &mut *mem };
+            let engines: [&mut dyn Engine; 4] =
+                [&mut *xdma, &mut *torrent, &mut *idma, &mut *mcast];
+            for e in engines {
+                e.accept_frontend_legs(&mut legs);
+                e.tick(&mut ctx);
+                legs.extend(e.take_frontend_legs());
+            }
+        }
+        debug_assert!(legs.is_empty(), "frontend legs left unclaimed at node {i}");
+        slave.tick(NodeId(i), &mut *net);
+    }
+    net.set_phase(PHASE_EXTERNAL);
 }
 
 #[cfg(test)]
@@ -655,6 +829,99 @@ mod tests {
         assert_eq!(t_full, c_full, "full-tick executes one tick per cycle");
         assert!(sk_ev > 0, "event-driven mode never skipped a cycle");
         assert_eq!(t_ev + sk_ev, c_ev, "ticks + skips must cover the run");
+    }
+
+    #[test]
+    fn parallel_stepping_matches_event_driven() {
+        use crate::sim::StepMode;
+        let run = |mode: StepMode| -> (u64, u64, u64, u64) {
+            let mut s = Soc::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+            let len = 8 * 1024;
+            fill_src(&mut s, NodeId(0), 0, len);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), len);
+            let dests: Vec<(NodeId, AffinePattern)> = [5usize, 10, 15]
+                .iter()
+                .map(|&n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), len))
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Greedy, true);
+            let cycles = s.run_until_idle(300_000);
+            let lat = s.torrent_result(NodeId(0), 1).unwrap().latency();
+            (cycles, lat, s.net.stats.flit_hops, s.cycles_skipped)
+        };
+        let (c_ev, l_ev, h_ev, sk_ev) = run(StepMode::EventDriven);
+        for threads in [1, 2, 3, 4, 16] {
+            let (c, l, h, sk) = run(StepMode::Parallel { threads });
+            assert_eq!(c, c_ev, "quiesce cycle diverged at {threads} threads");
+            assert_eq!(l, l_ev, "latency diverged at {threads} threads");
+            assert_eq!(h, h_ev, "flit-hops diverged at {threads} threads");
+            // Parallel mode shares the event-driven fast-forward, so the
+            // skip decisions are identical too.
+            assert_eq!(sk, sk_ev, "skips diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_ticks_match_sequential_under_engine_drop() {
+        use crate::sim::FaultPlan;
+        let cfg = || {
+            SocConfig::custom(3, 3, 64 * 1024)
+                .with_faults(FaultPlan::parse("drop:4@600").unwrap())
+        };
+        let submit = |s: &mut Soc| {
+            fill_src(s, NodeId(0), 0, 4096);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), 4096);
+            let dests: Vec<(NodeId, AffinePattern)> = [4usize, 8]
+                .iter()
+                .map(|&n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), 4096))
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Naive, true);
+        };
+        let mut seq = Soc::new(cfg());
+        let mut par = Soc::new(cfg());
+        submit(&mut seq);
+        submit(&mut par);
+        for _ in 0..3_000 {
+            seq.tick();
+            par.tick_parallel(3);
+            assert_eq!(seq.net.cycle, par.net.cycle);
+        }
+        assert_eq!(seq.net.stats.flit_hops, par.net.stats.flit_hops);
+        assert_eq!(seq.net.stats.packets_sent, par.net.stats.packets_sent);
+        assert_eq!(seq.net.stats.packets_delivered, par.net.stats.packets_delivered);
+        assert_eq!(
+            seq.nodes[8].mem.peek(seq.map.base_of(NodeId(8)), 4096),
+            par.nodes[8].mem.peek(par.map.base_of(NodeId(8)), 4096),
+            "surviving follower memory diverged"
+        );
+        assert_eq!(
+            seq.torrent_result(NodeId(0), 1).is_some(),
+            par.torrent_result(NodeId(0), 1).is_some()
+        );
+    }
+
+    #[test]
+    fn drop_table_matches_plan_semantics() {
+        use crate::sim::FaultPlan;
+        // Activations fire in sorted order; each node flips exactly at
+        // its own cycle, independent of plan order.
+        let cfg = SocConfig::custom(2, 2, 64 * 1024)
+            .with_faults(FaultPlan::parse("drop:1@50;drop:2@20").unwrap());
+        let mut s = Soc::new(cfg);
+        assert!(!s.node_dropped(NodeId(1)));
+        assert!(!s.any_fault_active());
+        assert_eq!(s.next_drop_activation(), Some(20));
+        s.net.cycle = 20;
+        assert!(s.node_dropped(NodeId(2)));
+        assert!(!s.node_dropped(NodeId(1)));
+        assert!(s.any_fault_active());
+        assert_eq!(s.next_drop_activation(), Some(50));
+        s.net.cycle = 50;
+        assert!(s.node_dropped(NodeId(1)));
+        assert_eq!(s.next_drop_activation(), None);
     }
 
     #[test]

@@ -4,9 +4,14 @@
 //! arguments, with typed getters and defaults. Used by `main.rs` and the
 //! examples.
 
+// Outside the simulation core: option lookup is by exact key, nothing
+// iterates `opts`, so hash-iteration order cannot reach simulated state
+// (clippy.toml bans HashMap in core code for determinism).
+#[allow(clippy::disallowed_types)]
 use std::collections::HashMap;
 
 /// Parsed command line: positionals + `--key value` options + `--flags`.
+#[allow(clippy::disallowed_types)] // see the import note above
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,

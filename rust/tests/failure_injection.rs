@@ -400,8 +400,9 @@ fn fault_free_run(
 }
 
 /// With no faults scheduled the fault layer must be invisible:
-/// event-driven and full-tick stepping stay bit-identical in cycle
-/// count, latency and delivered bytes (12 fault-free seeds).
+/// event-driven, full-tick and sharded-parallel stepping stay
+/// bit-identical in cycle count, latency and delivered bytes (12
+/// fault-free seeds × three steppers).
 #[test]
 fn chaos_fault_free_runs_bit_identical_across_step_modes() {
     for topology in TopologyKind::ALL {
@@ -412,6 +413,12 @@ fn chaos_fault_free_runs_bit_identical_across_step_modes() {
             let ev = fault_free_run(topology, seed, StepMode::EventDriven);
             let ft = fault_free_run(topology, seed, StepMode::FullTick);
             assert_eq!(ev, ft, "{topology:?} seed {seed}: step modes diverged");
+            let threads = 2 + (seed as usize % 3); // 2..=4 across the seeds
+            let par = fault_free_run(topology, seed, StepMode::Parallel { threads });
+            assert_eq!(
+                ev, par,
+                "{topology:?} seed {seed}: Parallel{{{threads}}} diverged fault-free"
+            );
         }
     }
 }
@@ -419,7 +426,10 @@ fn chaos_fault_free_runs_bit_identical_across_step_modes() {
 /// Detection and repair are deterministic across step modes: once a
 /// fault activates, event-driven stepping stops skipping, so heartbeat
 /// sampling, stall detection and repair dispatch land on identical
-/// cycles. Compares full outcome records on faulted runs (6 cases).
+/// cycles — and the parallel stepper activates faults as a main-thread
+/// barrier event, so its degraded runs land on the same cycles too.
+/// Compares full outcome records on faulted runs (6 cases × four
+/// steppers).
 #[test]
 fn chaos_faulted_runs_identical_across_step_modes() {
     for topology in TopologyKind::ALL {
@@ -450,6 +460,13 @@ fn chaos_faulted_runs_identical_across_step_modes() {
             let ev = run(StepMode::EventDriven);
             let ft = run(StepMode::FullTick);
             assert_eq!(ev, ft, "{topology:?} seed {seed}: faulted step modes diverged");
+            for threads in [2, 4] {
+                let par = run(StepMode::Parallel { threads });
+                assert_eq!(
+                    ev, par,
+                    "{topology:?} seed {seed}: Parallel{{{threads}}} diverged on a faulted run"
+                );
+            }
         }
     }
 }

@@ -5,8 +5,9 @@
 //! multicast_sweep example's headline points, the batch_pipeline DAG,
 //! Fig 7's per-destination marginal cost, and the quickstart transfer
 //! under a mid-stream router kill — fail-stop and repaired) runs under
-//! both step modes; every metric must be bit-identical between
-//! `FullTick` and `EventDriven`, and — once blessed — bit-identical to
+//! every step mode; each metric must be bit-identical across `FullTick`,
+//! `EventDriven` and `Parallel` (at every thread count; `TORRENT_THREADS`
+//! pins one for CI matrix legs), and — once blessed — bit-identical to
 //! the committed `rust/tests/golden_cycles.tsv`.
 //!
 //! Blessing: the pins are measured numbers, so the first machine with a
@@ -203,6 +204,22 @@ fn golden_mesh_cycle_counts_are_pinned_and_step_mode_invariant() {
     let full = measure(StepMode::FullTick);
     let ev = measure(StepMode::EventDriven);
     assert_eq!(full, ev, "EventDriven diverged from FullTick on a pinned mesh scenario");
+
+    // The sharded stepper is a third equal member of the pin contract:
+    // every scenario — including the faulted ones — must land on the
+    // same numbers at every thread count. `TORRENT_THREADS` lets the CI
+    // parallel matrix pin one count per job; default sweeps a few.
+    let counts: Vec<usize> = match std::env::var("TORRENT_THREADS") {
+        Ok(v) => vec![v.parse().expect("TORRENT_THREADS must be an integer")],
+        Err(_) => vec![1, 2, 4],
+    };
+    for threads in counts {
+        let par = measure(StepMode::Parallel { threads });
+        assert_eq!(
+            full, par,
+            "Parallel{{{threads}}} diverged from FullTick on a pinned mesh scenario"
+        );
+    }
 
     // The paper's Fig-7 trend: ~82 CC of configuration per added
     // destination. A loose band (the simulator is calibrated, not

@@ -1,11 +1,13 @@
-//! Activity-tracked (event-driven) stepping: equivalence against the
-//! full-tick reference, skip-ahead hints for every protocol wait, and
-//! watchdog deadline regressions.
+//! Stepping-mode equivalence: event-driven and sharded-parallel stepping
+//! against the full-tick reference, skip-ahead hints for every protocol
+//! wait, and watchdog deadline regressions.
 //!
-//! The contract under test (`sim::Clocked::next_event`, `Soc::run_until_idle`):
-//! event-driven stepping may skip only provably no-op cycles, so every
-//! reported cycle count — quiesce time, task latency, η_P2MP, traffic
-//! statistics — must be **bit-identical** to ticking every cycle.
+//! The contract under test (`sim::Clocked::next_event`, `Soc::run_until_idle`,
+//! `StepMode::Parallel`): event-driven stepping may skip only provably
+//! no-op cycles, and the parallel stepper's barrier merge must commit
+//! cross-shard traffic in the sequential order — so every reported cycle
+//! count — quiesce time, task latency, η_P2MP, traffic statistics — must
+//! be **bit-identical** across all three steppers at any thread count.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
@@ -24,11 +26,22 @@ use torrent::sim::StepMode;
 use torrent::soc::{Soc, SocConfig};
 use torrent::util::prop::{check, forall};
 
+/// Worker-thread counts the parallel differential sweeps: the
+/// degenerate single shard, small shard counts that exercise uneven
+/// splits, and whatever this machine actually has.
+fn thread_counts() -> [usize; 4] {
+    let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    [1, 2, 4, ncpus]
+}
+
 /// The tentpole property: ≥100 seeded random P2MP tasks (Fig-5-style
-/// size/destination grid points, all engines) run under both steppers
-/// with identical latencies, η_P2MP and traffic counters.
+/// size/destination grid points, all engines) run under all three
+/// steppers — full-tick, event-driven, sharded-parallel — with identical
+/// latencies, η_P2MP and traffic counters. Each case draws its parallel
+/// thread count from [`thread_counts`], so the sweep covers 1, 2, 4 and
+/// NUM_CPUS workers across the 110 workloads.
 #[test]
-fn prop_event_driven_bit_identical_to_full_tick() {
+fn prop_three_steppers_bit_identical() {
     let mut total_skipped = 0u64;
     forall(
         0x57E9,
@@ -45,9 +58,10 @@ fn prop_event_driven_bit_identical_to_full_tick() {
             let bytes = 256 + rng.index(8 * 1024);
             let engine_idx = rng.index(6) as u8;
             let with_data = rng.below(4) == 0;
-            (cols, rows, dests, bytes, engine_idx, with_data)
+            let threads = thread_counts()[rng.index(4)];
+            (cols, rows, dests, bytes, engine_idx, with_data, threads)
         },
-        |&(cols, rows, ref dests, bytes, engine_idx, with_data)| {
+        |&(cols, rows, ref dests, bytes, engine_idx, with_data, threads)| {
             let engine = match engine_idx {
                 0 => EngineKind::Torrent(Strategy::Naive),
                 1 => EngineKind::Torrent(Strategy::Greedy),
@@ -74,17 +88,126 @@ fn prop_event_driven_bit_identical_to_full_tick() {
             };
             let full = run(StepMode::FullTick);
             let fast = run(StepMode::EventDriven);
+            let par = run(StepMode::Parallel { threads });
             check(full.0 == fast.0, format!("quiesce cycle {} != {}", full.0, fast.0))?;
             check(full.1 == fast.1, format!("latency {} != {}", full.1, fast.1))?;
             check(full.2 == fast.2, "eta_P2MP bits diverged")?;
             check(full.3 == fast.3, format!("flit_hops {} != {}", full.3, fast.3))?;
             check(full.4 == fast.4, "packets_delivered diverged")?;
             check(full.5 == 0, "full-tick stepping must never skip")?;
+            check(
+                par.0 == fast.0,
+                format!("parallel({threads}) quiesce cycle {} != {}", par.0, fast.0),
+            )?;
+            check(
+                par.1 == fast.1,
+                format!("parallel({threads}) latency {} != {}", par.1, fast.1),
+            )?;
+            check(par.2 == fast.2, format!("parallel({threads}) eta_P2MP bits diverged"))?;
+            check(
+                par.3 == fast.3,
+                format!("parallel({threads}) flit_hops {} != {}", par.3, fast.3),
+            )?;
+            check(par.4 == fast.4, format!("parallel({threads}) packets_delivered diverged"))?;
+            check(
+                par.5 == fast.5,
+                format!("parallel({threads}) skipped {} != event-driven {}", par.5, fast.5),
+            )?;
             total_skipped += fast.5;
             Ok(())
         },
     );
     assert!(total_skipped > 0, "event-driven stepping never engaged across 110 workloads");
+}
+
+/// `Parallel {{ threads: 1 }}` collapses to the sequential kernel — same
+/// ticks, same skips, same counters as the event-driven stepper, with no
+/// scope/barrier machinery in the way.
+#[test]
+fn parallel_one_thread_is_event_driven() {
+    let run = |mode: StepMode| -> (u64, u64, u64, u64, u64) {
+        let mut c = Coordinator::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+        let task = c
+            .submit_simple(
+                NodeId(0),
+                &[NodeId(3), NodeId(9), NodeId(14)],
+                6 * 1024,
+                EngineKind::Torrent(Strategy::Greedy),
+                true,
+            )
+            .unwrap();
+        c.run_to_completion(1_000_000);
+        (
+            c.soc.net.cycle,
+            c.latency_of(task).unwrap(),
+            c.soc.net.stats.flit_hops,
+            c.soc.ticks_executed,
+            c.soc.cycles_skipped,
+        )
+    };
+    let fast = run(StepMode::EventDriven);
+    let par1 = run(StepMode::Parallel { threads: 1 });
+    assert_eq!(par1, fast, "Parallel{{1}} must be the event-driven stepper exactly");
+}
+
+/// Degraded fabrics across every topology: a schedule mixing a router
+/// kill, a link cut, a straggler and an engine drop must evolve
+/// bit-identically under the sequential and sharded kernels (fault
+/// activation is a barrier event on the parallel path). Faulted tasks
+/// may stall forever, so the comparison drives the two kernels in
+/// per-tick lockstep over a fixed window instead of running to
+/// quiescence.
+#[test]
+fn faulted_runs_identical_across_all_steppers() {
+    use torrent::noc::TopologyKind;
+    use torrent::sim::FaultPlan;
+    for topology in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring] {
+        let run = |threads: Option<usize>| -> (u64, u64, u64, u64, Vec<u8>) {
+            let plan = FaultPlan::parse("straggle:2x4@100;link:1-2@400;drop:7@600;router:4@800")
+                .unwrap();
+            let cfg = SocConfig::custom(3, 3, 64 * 1024)
+                .with_topology(topology)
+                .with_faults(plan);
+            let mut s = Soc::new(cfg);
+            let base = s.map.base_of(NodeId(0));
+            let data: Vec<u8> = (0..4096).map(|i| (i * 7 + 3) as u8).collect();
+            s.nodes[0].mem.write(base, &data);
+            let read = AffinePattern::contiguous(base, 4096);
+            let dests: Vec<(NodeId, AffinePattern)> = [5usize, 7, 3]
+                .iter()
+                .map(|&n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), 4096))
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Naive, true);
+            for _ in 0..4_000 {
+                match threads {
+                    Some(t) => s.tick_parallel(t),
+                    None => s.tick(),
+                }
+            }
+            (
+                s.net.cycle,
+                s.net.stats.flit_hops,
+                s.net.stats.packets_delivered,
+                s.net.stats.flits_dropped,
+                s.nodes[5].mem.peek(s.map.base_of(NodeId(5)), 4096).to_vec(),
+            )
+        };
+        let seq = run(None);
+        for threads in [2, 3, 4] {
+            let par = run(Some(threads));
+            assert_eq!(
+                (par.0, par.1, par.2, par.3),
+                (seq.0, seq.1, seq.2, seq.3),
+                "{topology:?} parallel({threads}) counters diverged under faults"
+            );
+            assert_eq!(
+                par.4, seq.4,
+                "{topology:?} parallel({threads}) survivor memory diverged"
+            );
+        }
+    }
 }
 
 /// Cut-through forwarding (the FWD_LATENCY-gated data switch) under both

@@ -2,7 +2,8 @@
 //!
 //! The topology-generic NoC refactor gives the test suite an
 //! independent axis: the same seeded scenario runs on three fabrics and
-//! two step modes, and every invariant must hold on all of them.
+//! three step modes (full-tick, event-driven, sharded-parallel), and
+//! every invariant must hold on all of them.
 //!
 //! Per seeded scenario (topology, src, dest set, engine, strategy):
 //! * **byte-exactness** — every destination's scratchpad ends with the
@@ -126,6 +127,26 @@ fn chainwrite_is_byte_exact_and_step_mode_invariant_on_every_fabric() {
                 full == ev,
                 format!("EventDriven {ev:?} != FullTick {full:?} on {kind:?}"),
             )
+        });
+    }
+}
+
+/// The sharded stepper as the third equal member of the cross-topology
+/// differential: same scenarios, every fabric, a sweep of shard counts
+/// (including one that exceeds the node count).
+#[test]
+fn chainwrite_is_parallel_invariant_on_every_fabric() {
+    for kind in fabric_kinds() {
+        forall(0x70D1 ^ kind as u64, 6, gen_scenario, |s| {
+            let full = run(kind, s, StepMode::FullTick)?;
+            for threads in [2, 3, 4, 32] {
+                let par = run(kind, s, StepMode::Parallel { threads })?;
+                check(
+                    full == par,
+                    format!("Parallel{{{threads}}} {par:?} != FullTick {full:?} on {kind:?}"),
+                )?;
+            }
+            Ok(())
         });
     }
 }
