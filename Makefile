@@ -3,7 +3,7 @@
 
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
 	bench-scaling examples-smoke doc clean topo-sweep topo-matrix \
-	golden-bless fault-sweep fault-matrix
+	golden-bless fault-sweep fault-matrix serve-sim serve-smoke
 
 all: tier1
 
@@ -32,12 +32,14 @@ bench-smoke:
 	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_simcore.json \
 		cargo bench --bench simcore
 
-# Rewrite BENCH_simcore.json from a full local run (commit the result).
-# Includes the sharded-stepper scaling curve so the baseline keeps its
-# parallel_net_* entries across recalibrations.
+# Rewrite BENCH_simcore.json + BENCH_serve.json from a full local run
+# (commit the result). Includes the sharded-stepper scaling curve so the
+# baseline keeps its parallel_net_* entries across recalibrations.
 bench-baseline:
 	TORRENT_BENCH_SCALING=1 TORRENT_BENCH_JSON=BENCH_simcore.json \
 		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench simcore
+	TORRENT_BENCH_JSON=BENCH_serve.json \
+		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench serve
 
 # The sharded-stepper scaling curve (cycles/s vs threads at 8x8 through
 # 64x64; ISSUE 7 satellite). Prints M cycles/s and the speedup vs t=1
@@ -75,6 +77,23 @@ fault-sweep:
 # (defaults to all fabrics).
 fault-matrix:
 	TORRENT_TOPOLOGY=$(TOPOLOGY) cargo test --release --test failure_injection --test repair
+
+# The full serving sweep: offered load past saturation on every
+# (fabric x scheduler x thread-count) leg, cross-mode parity asserted at
+# each point; writes serve_sweep.json + serve_sweep.md
+# (EXPERIMENTS.md §Serve sweep).
+serve-sim:
+	cargo run --release -- serve-sim --out serve_sweep
+
+# CI smoke: the quick sweep (three fixed-seed load points, parity
+# asserted internally), the serving determinism suite — including the
+# faulted leg — and one iteration of the serve bench against the
+# committed BENCH_serve.json.
+serve-smoke:
+	cargo run --release -- serve-sim --quick --out target/serve_smoke
+	cargo test --release --test serving
+	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_serve.json \
+		cargo bench --bench serve
 
 # Measure and commit the golden mesh cycle pins (rust/tests/
 # golden_cycles.tsv). Run once on the first machine with a toolchain;

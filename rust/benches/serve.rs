@@ -1,0 +1,111 @@
+//! Serving-simulator benchmarks — wall-clock cost of the open-loop
+//! driver (ISSUE 8).
+//!
+//! Three load points on the 4×4 custom fabric: an unloaded leg, a
+//! saturated leg, and a saturated leg on the sharded parallel stepper.
+//! Each run also prints its deterministic simulated tail latencies, so
+//! the log doubles as a quick sanity readout (those numbers are
+//! seed-exact and machine-independent; only the milliseconds vary).
+//!
+//! CI integration mirrors `simcore`: `TORRENT_BENCH_JSON` writes a
+//! `torrent-bench-v1` baseline, `TORRENT_BENCH_BASELINE` compares p50s
+//! against the committed `BENCH_serve.json` and fails on >2x
+//! calibrated regressions.
+
+mod common;
+
+use torrent::serve::{run, AdmissionPolicy, ArrivalKind, ServeConfig};
+use torrent::sim::StepMode;
+use torrent::soc::SocConfig;
+
+fn cfg(rate: u64) -> ServeConfig {
+    ServeConfig {
+        seed: 17,
+        horizon: 4_000,
+        drain: 40_000,
+        arrival: ArrivalKind::Poisson { rate_per_kcycle: rate },
+        policy: AdmissionPolicy::Queue,
+        ..ServeConfig::default()
+    }
+}
+
+fn fabric() -> SocConfig {
+    SocConfig::custom(4, 4, 64 * 1024)
+}
+
+fn main() {
+    common::banner("serve: open-loop serving-driver benchmarks");
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut record = |name: &str, s: &torrent::util::stats::Summary| {
+        results.push((name.to_string(), s.p50));
+    };
+
+    // 1. Light load: the driver overhead floor (fabric mostly idle).
+    let mut last = None;
+    let s = common::bench("serve_4x4_rate2_light", 1, common::iters(5), || {
+        last = Some(run(cfg(2), fabric(), StepMode::EventDriven));
+    });
+    let r = last.take().expect("bench ran");
+    println!(
+        "  -> {} offered, {} completed, p50/p99 = {}/{} CC",
+        r.offered,
+        r.completed,
+        r.p50(),
+        r.p99()
+    );
+    record("serve_4x4_rate2_light", &s);
+
+    // 2. Saturated load: admission queue and batcher exercised hard.
+    let s = common::bench("serve_4x4_rate12_saturated", 1, common::iters(5), || {
+        last = Some(run(cfg(12), fabric(), StepMode::EventDriven));
+    });
+    let r = last.take().expect("bench ran");
+    println!(
+        "  -> {} offered, {} completed, {} rejected, p99/p999 = {}/{} CC, pending peak {}",
+        r.offered,
+        r.completed,
+        r.rejected(),
+        r.p99(),
+        r.p999(),
+        r.pending_peak
+    );
+    record("serve_4x4_rate12_saturated", &s);
+
+    // 3. Same saturated leg through the sharded parallel stepper — the
+    // bit-exactness contract means only the wall clock may differ.
+    let s = common::bench("serve_4x4_rate12_parallel2", 1, common::iters(5), || {
+        last = Some(run(cfg(12), fabric(), StepMode::Parallel { threads: 2 }));
+    });
+    let r = last.take().expect("bench ran");
+    println!("  -> parallel(2): {} completed, p999 = {} CC", r.completed, r.p999());
+    record("serve_4x4_rate12_parallel2", &s);
+
+    // Baseline plumbing (see Makefile `bench-baseline` / `serve-smoke`).
+    if let Ok(path) = std::env::var("TORRENT_BENCH_JSON") {
+        let calibrated = std::env::var("TORRENT_BENCH_CALIBRATED").is_ok();
+        let note = if calibrated {
+            "calibrated from a real run via `make bench-baseline`"
+        } else {
+            "placeholder written without calibration; run `make bench-baseline`"
+        };
+        common::write_bench_json(&path, "serve", calibrated, note, &results)
+            .expect("write bench JSON");
+        println!("wrote baseline {path} (calibrated={calibrated})");
+    }
+    if let Ok(path) = std::env::var("TORRENT_BENCH_BASELINE") {
+        common::banner("serve: baseline comparison");
+        match common::read_bench_json(&path) {
+            Err(e) => {
+                eprintln!("baseline unavailable: {e}");
+                std::process::exit(1);
+            }
+            Ok(base) => {
+                let regressions = common::count_regressions(&results, &base);
+                if regressions > 0 {
+                    eprintln!("{regressions} bench regression(s) vs {path}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+}

@@ -20,7 +20,6 @@ use torrent::noc::{Mesh, Message, Network, NodeId, Packet};
 use torrent::sched::{self, Strategy};
 use torrent::sim::StepMode;
 use torrent::soc::SocConfig;
-use torrent::util::rng::Rng;
 use torrent::workloads;
 
 fn main() {
@@ -97,7 +96,7 @@ fn main() {
         }
     });
     record("tsp_2opt_32dst_x64", &s);
-    let mut rng = Rng::new(3);
+    let mut rng = torrent::util::rng(3, torrent::util::stream::BENCH);
     let mut set15: Vec<NodeId> = Vec::new();
     for v in rng.sample_distinct(63, 15) {
         set15.push(NodeId(v + 1));

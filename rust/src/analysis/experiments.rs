@@ -4,7 +4,7 @@
 
 use crate::coordinator::{Coordinator, EngineKind};
 use crate::dma::torrent::dse::AffinePattern;
-use crate::noc::{Mesh, NodeId, Ring, Topo, Topology, Torus};
+use crate::noc::{Mesh, NodeId, Ring, Topo, Topology, TopologyKind, Torus};
 use crate::sched::{self, Strategy};
 use crate::soc::SocConfig;
 use crate::util::stats::linregress;
@@ -179,9 +179,8 @@ pub fn topology_sweep(seed: u64, trials: usize) -> Table {
 /// run still credits destinations fully written before the fault hit);
 /// p99 is over completed-task latencies, `-` when nothing completed.
 pub fn fault_sweep(seed: u64, trials: usize) -> (Vec<FaultSweepRow>, Table) {
-    use crate::noc::TopologyKind;
     use crate::sim::{Fault, FaultKind, FaultPlan};
-    use crate::util::rng::Rng;
+    use crate::util::stream;
 
     let bytes = 4 * 1024;
     let n_dst = 4;
@@ -200,10 +199,12 @@ pub fn fault_sweep(seed: u64, trials: usize) -> (Vec<FaultSweepRow>, Table) {
                     // One seed stream per (fabric, rate, trial): both
                     // repair modes replay the identical workload + fault
                     // schedule, so the comparison is paired.
-                    let mut rng = Rng::new(
-                        seed ^ ((rate as u64) << 8)
-                            ^ ((topology as u64) << 16)
-                            ^ ((trial as u64) << 24),
+                    let mut rng = crate::util::rng(
+                        seed,
+                        stream::FAULTS
+                            + (rate as u64)
+                            + ((topology as u64) << 8)
+                            + ((trial as u64) << 16),
                     );
                     let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
                     let dests: Vec<NodeId> = {
@@ -392,6 +393,122 @@ pub fn fig9() -> (Vec<Fig9Row>, Table) {
     (rows, t)
 }
 
+/// ISSUE 8 serving sweep: open-loop offered-load sweep past saturation,
+/// one leg per (topology × scheduler × thread-count). Every load point
+/// runs under FullTick, EventDriven *and* Parallel{threads}, and the
+/// per-request dispositions and occupancy time-series are asserted
+/// bit-identical across the three — the cross-mode acceptance criterion
+/// is re-checked on every sweep, not just in the test suite. The
+/// EventDriven run supplies the reported row.
+///
+/// `quick` runs one leg (mesh/greedy/2 threads) over three rates;
+/// the full sweep crosses {mesh, torus} × {greedy, tsp} × {1, 2}
+/// threads over five rates up to well past the ~8-task service
+/// capacity of the 4×4 fabric.
+pub fn serve_sweep(seed: u64, quick: bool) -> (Vec<crate::serve::ServeSweepRow>, Table) {
+    use crate::serve::{self, AdmissionPolicy, ArrivalKind, ServeConfig, ServeSweepRow};
+    use crate::sim::StepMode;
+
+    let legs: Vec<(TopologyKind, Strategy, usize)> = if quick {
+        vec![(TopologyKind::Mesh, Strategy::Greedy, 2)]
+    } else {
+        let mut l = Vec::new();
+        for topo in [TopologyKind::Mesh, TopologyKind::Torus] {
+            for strat in [Strategy::Greedy, Strategy::Tsp] {
+                for threads in [1usize, 2] {
+                    l.push((topo, strat, threads));
+                }
+            }
+        }
+        l
+    };
+    let rates: Vec<u64> = if quick { vec![1, 4, 12] } else { vec![1, 2, 4, 8, 16] };
+    let horizon = if quick { 6_000 } else { 16_000 };
+
+    let mut rows = Vec::new();
+    let mut t = Table::new("Serve sweep — open-loop tail latency vs offered load").header([
+        "fabric", "sched", "thr", "rate/kcc", "offered", "admitted", "rejected", "completed",
+        "p50", "p99", "p999", "util", "pend_pk",
+    ]);
+    for (topo, strat, threads) in legs {
+        let sched_label = match strat {
+            Strategy::Naive => "naive",
+            Strategy::Greedy => "greedy",
+            Strategy::Tsp => "tsp",
+        };
+        for &rate in &rates {
+            let cfg = ServeConfig {
+                seed,
+                horizon,
+                drain: 60_000,
+                arrival: ArrivalKind::Poisson { rate_per_kcycle: rate },
+                policy: AdmissionPolicy::Queue,
+                strategy: strat,
+                ..ServeConfig::default()
+            };
+            let soc = SocConfig::custom(4, 4, 64 * 1024).with_topology(topo);
+            let reference = serve::run(cfg.clone(), soc.clone(), StepMode::EventDriven);
+            for mode in [StepMode::FullTick, StepMode::Parallel { threads }] {
+                let other = serve::run(cfg.clone(), soc.clone(), mode);
+                assert_eq!(
+                    reference.dispositions,
+                    other.dispositions,
+                    "per-request dispositions diverged across step modes \
+                     ({} {} t={} rate={} vs {:?})",
+                    topo.label(),
+                    sched_label,
+                    threads,
+                    rate,
+                    mode
+                );
+                assert_eq!(
+                    reference.samples,
+                    other.samples,
+                    "occupancy samples diverged across step modes \
+                     ({} {} t={} rate={} vs {:?})",
+                    topo.label(),
+                    sched_label,
+                    threads,
+                    rate,
+                    mode
+                );
+            }
+            let r = reference;
+            t.row([
+                topo.label().to_string(),
+                sched_label.to_string(),
+                threads.to_string(),
+                rate.to_string(),
+                r.offered.to_string(),
+                r.admitted.to_string(),
+                r.rejected().to_string(),
+                r.completed.to_string(),
+                r.p50().to_string(),
+                r.p99().to_string(),
+                r.p999().to_string(),
+                fnum(r.util, 3),
+                r.pending_peak.to_string(),
+            ]);
+            rows.push(ServeSweepRow {
+                fabric: topo.label(),
+                sched: sched_label,
+                threads,
+                rate_per_kcycle: rate,
+                offered: r.offered,
+                admitted: r.admitted,
+                rejected: r.rejected(),
+                completed: r.completed,
+                p50: r.p50(),
+                p99: r.p99(),
+                p999: r.p999(),
+                util: r.util,
+                pending_peak: r.pending_peak,
+            });
+        }
+    }
+    (rows, t)
+}
+
 /// Fig 11 + Fig 1(d): area/power breakdowns and scaling.
 pub fn fig11() -> Vec<Table> {
     use crate::analysis::{area, power};
@@ -574,6 +691,27 @@ mod tests {
                 rep.fabric,
                 rep.rate
             );
+        }
+    }
+
+    #[test]
+    fn serve_sweep_quick_holds_accounting_and_mode_parity() {
+        // serve_sweep asserts cross-mode disposition/sample equality
+        // internally; reaching the end means FullTick, EventDriven and
+        // Parallel{2} agreed bit-exactly at every load point.
+        let (rows, table) = serve_sweep(5, true);
+        assert_eq!(rows.len(), 3, "one quick leg x three rates");
+        for r in &rows {
+            assert_eq!((r.fabric, r.sched, r.threads), ("mesh", "greedy", 2), "{r:?}");
+            assert_eq!(r.offered, r.admitted + r.rejected, "{r:?}");
+            assert!(r.completed <= r.admitted, "{r:?}");
+            assert!(r.util > 0.0, "a served leg must move flits: {r:?}");
+        }
+        // Open loop: a 12x arrival rate must offer more work than 1x.
+        assert!(rows[0].offered < rows[2].offered, "{rows:?}");
+        let rendered = table.render();
+        for needle in ["mesh", "greedy", "p999"] {
+            assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
         }
     }
 

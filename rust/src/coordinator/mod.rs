@@ -156,6 +156,117 @@ pub enum TaskOutcome {
     Failed { suspect: Option<NodeId>, reason: String },
 }
 
+impl TaskStatus {
+    /// Stable snake_case wire form, used verbatim in serve-sim JSON
+    /// reports and CLI output (ISSUE 8 satellite) — additions are fine,
+    /// renames are a report-schema break.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskStatus::Queued => "queued",
+            TaskStatus::Configuring => "configuring",
+            TaskStatus::Streaming => "streaming",
+            TaskStatus::Done => "done",
+            TaskStatus::Degraded => "degraded",
+            TaskStatus::Repaired => "repaired",
+            TaskStatus::Failed => "failed",
+        }
+    }
+
+    /// Every variant, for round-trip tests and report legends.
+    pub const ALL: [TaskStatus; 7] = [
+        TaskStatus::Queued,
+        TaskStatus::Configuring,
+        TaskStatus::Streaming,
+        TaskStatus::Done,
+        TaskStatus::Degraded,
+        TaskStatus::Repaired,
+        TaskStatus::Failed,
+    ];
+}
+
+impl fmt::Display for TaskStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for TaskStatus {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .into_iter()
+            .find(|t| t.as_str() == s)
+            .ok_or_else(|| format!("unknown TaskStatus '{s}'"))
+    }
+}
+
+impl TaskOutcome {
+    /// Stable snake_case kind tag for reports ("repairing" /
+    /// "repaired" / "failed"); the variant payload is detail, not
+    /// identity, so the tag alone round-trips through report schemas.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TaskOutcome::Repairing { .. } => "repairing",
+            TaskOutcome::Repaired { .. } => "repaired",
+            TaskOutcome::Failed { .. } => "failed",
+        }
+    }
+}
+
+impl fmt::Display for TaskOutcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TaskOutcome::Repairing { suspect } => {
+                write!(f, "repairing (suspect {suspect:?})")
+            }
+            TaskOutcome::Repaired { suspect, served, lost } => write!(
+                f,
+                "repaired (suspect {suspect:?}, served {served}, lost {})",
+                lost.len()
+            ),
+            TaskOutcome::Failed { suspect, reason } => match suspect {
+                Some(n) => write!(f, "failed (suspect {n:?}: {reason})"),
+                None => write!(f, "failed ({reason})"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod status_string_tests {
+    use super::*;
+
+    #[test]
+    fn task_status_strings_round_trip() {
+        for status in TaskStatus::ALL {
+            let s = status.as_str();
+            assert_eq!(s, s.to_lowercase(), "{status:?} form is not snake_case");
+            assert!(!s.contains(' '), "{status:?} form contains spaces");
+            assert_eq!(s.parse::<TaskStatus>().unwrap(), status);
+            assert_eq!(status.to_string(), s);
+        }
+        assert!("not_a_status".parse::<TaskStatus>().is_err());
+    }
+
+    #[test]
+    fn task_outcome_kind_and_display_are_stable() {
+        let repairing = TaskOutcome::Repairing { suspect: NodeId(3) };
+        let repaired =
+            TaskOutcome::Repaired { suspect: NodeId(3), served: 2, lost: vec![NodeId(5)] };
+        let failed =
+            TaskOutcome::Failed { suspect: None, reason: "unreachable".to_string() };
+        assert_eq!(repairing.kind(), "repairing");
+        assert_eq!(repaired.kind(), "repaired");
+        assert_eq!(failed.kind(), "failed");
+        // Display leads with the kind tag so log lines grep by it.
+        for o in [&repairing, &repaired, &failed] {
+            assert!(o.to_string().starts_with(o.kind()), "{o}");
+        }
+        assert!(repaired.to_string().contains("served 2"));
+        assert!(failed.to_string().contains("unreachable"));
+    }
+}
+
 /// Typed result of [`Coordinator::run_to_completion`]: what happened to
 /// every task the fault machinery touched. Empty (`is_clean`) on healthy
 /// runs, so existing callers that ignore the return value see no change.
@@ -959,6 +1070,33 @@ impl Coordinator {
     /// to drain it).
     pub fn run_until_all_done(&mut self, max_cycles: u64) {
         self.run_scheduler(max_cycles, "coordinator.all_done", |c| c.open_tasks == 0);
+    }
+
+    /// Advance the system exactly `cycles` cycles — the coordinator half
+    /// of the bounded-horizon run API (ISSUE 8). Unlike the quiescence
+    /// drains above, this neither requires nor expects idleness: an
+    /// open-loop driver (see [`crate::serve`]) calls it between arrival
+    /// injections. Completions are collected and dependency edges
+    /// released after every executed tick, and the fault heartbeat runs
+    /// when armed, so task lifecycle timing is identical to an
+    /// uninterrupted [`Coordinator::run_to_completion`] over the same
+    /// cycles. Bit-identical across [`crate::sim::StepMode`]s: the
+    /// underlying [`Soc::step_toward`] lands every mode on the same
+    /// horizon, and a tick that produces a completion is never
+    /// fast-forwarded over (an active engine reports `next_event = now`),
+    /// so collection fires at the same cycles in all modes. Returns the
+    /// new cycle.
+    pub fn run_for(&mut self, cycles: u64) -> u64 {
+        let target = self.soc.cycle() + cycles;
+        self.collect_and_dispatch();
+        while self.soc.cycle() < target {
+            self.soc.step_toward(target);
+            self.collect_and_dispatch();
+            if self.fault_watch {
+                self.watch_faults();
+            }
+        }
+        self.soc.cycle()
     }
 
     /// Run until `task` completes; other in-flight tasks keep streaming.

@@ -162,6 +162,52 @@ pub enum SubmitErrorKind {
     UnknownDependency,
 }
 
+impl SubmitErrorKind {
+    /// Stable snake_case wire form, used verbatim in serve-sim JSON
+    /// reports and CLI output (ISSUE 8 satellite) — additions are fine,
+    /// renames are a report-schema break.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SubmitErrorKind::EmptyDestinations => "empty_destinations",
+            SubmitErrorKind::EmptyTransfer => "empty_transfer",
+            SubmitErrorKind::Underspecified => "underspecified",
+            SubmitErrorKind::UnmappedAddress => "unmapped_address",
+            SubmitErrorKind::InvalidDestinations => "invalid_destinations",
+            SubmitErrorKind::SizeMismatch => "size_mismatch",
+            SubmitErrorKind::TooLarge => "too_large",
+            SubmitErrorKind::UnknownDependency => "unknown_dependency",
+        }
+    }
+
+    /// Every variant, for round-trip tests and report legends.
+    pub const ALL: [SubmitErrorKind; 8] = [
+        SubmitErrorKind::EmptyDestinations,
+        SubmitErrorKind::EmptyTransfer,
+        SubmitErrorKind::Underspecified,
+        SubmitErrorKind::UnmappedAddress,
+        SubmitErrorKind::InvalidDestinations,
+        SubmitErrorKind::SizeMismatch,
+        SubmitErrorKind::TooLarge,
+        SubmitErrorKind::UnknownDependency,
+    ];
+}
+
+impl fmt::Display for SubmitErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SubmitErrorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .into_iter()
+            .find(|k| k.as_str() == s)
+            .ok_or_else(|| format!("unknown SubmitErrorKind '{s}'"))
+    }
+}
+
 /// Submission failure: a stable [`SubmitErrorKind`] for callers to match
 /// on plus a human-readable message (built with the vendored `anyhow`).
 #[derive(Debug)]
@@ -178,7 +224,7 @@ impl SubmitError {
 
 impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{:?}: {}", self.kind, self.msg)
+        write!(f, "{}: {}", self.kind, self.msg)
     }
 }
 
@@ -310,7 +356,19 @@ mod tests {
         };
         let err = spec.validate().unwrap_err();
         assert_eq!(err.kind, SubmitErrorKind::SizeMismatch);
-        assert!(err.to_string().contains("SizeMismatch"), "{err}");
+        assert!(err.to_string().contains("size_mismatch"), "{err}");
+    }
+
+    #[test]
+    fn submit_error_kind_strings_round_trip() {
+        for kind in SubmitErrorKind::ALL {
+            let s = kind.as_str();
+            assert_eq!(s, s.to_lowercase(), "{kind:?} form is not snake_case");
+            assert!(!s.contains(' '), "{kind:?} form contains spaces");
+            assert_eq!(s.parse::<SubmitErrorKind>().unwrap(), kind);
+            assert_eq!(kind.to_string(), s);
+        }
+        assert!("not_a_kind".parse::<SubmitErrorKind>().is_err());
     }
 
     #[test]

@@ -27,7 +27,11 @@
 //!   `pjrt` feature;
 //! * analytic area/power/efficiency models calibrated with the paper's
 //!   published constants ([`analysis`]);
-//! * the workload generators for every figure/table ([`workloads`]).
+//! * the workload generators for every figure/table ([`workloads`]);
+//! * an open-loop serving simulator — seeded arrival processes,
+//!   admission control, continuous batching, tail-latency telemetry —
+//!   driving the coordinator past saturation ([`serve`], CLI
+//!   `torrent serve-sim`).
 //!
 //! See `DESIGN.md` for the module map and experiment index and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
@@ -93,6 +97,7 @@ pub mod mem;
 pub mod noc;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod soc;
 pub mod util;

@@ -9,6 +9,7 @@
 //! torrent fig11                           # area/power (Fig 11, Fig 1d)
 //! torrent topo-sweep [--seed N] [--trials N]  # hops across mesh/torus/ring
 //! torrent fault-sweep [--seed N] [--trials N] # availability: repair vs fail-stop
+//! torrent serve-sim [--seed N] [--quick] [--out PREFIX]  # open-loop serving sweep
 //! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
 //!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
 //!             [--faults SPEC]             # e.g. "router:5@300;timeout:2000"
@@ -29,11 +30,12 @@ use torrent::soc::SocConfig;
 use torrent::util::cli::Args;
 
 const USAGE: &str =
-    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|run|artifacts> [options]
+    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|serve-sim|run|artifacts> [options]
   fig5   [--quick]
   fig6   [--seed N] [--trials N]
   topo-sweep [--seed N] [--trials N]
   fault-sweep [--seed N] [--trials N]
+  serve-sim [--seed N] [--quick] [--out PREFIX]   # writes PREFIX.json + PREFIX.md
   run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
          [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
          [--faults \"link:FROM-TO@C;router:N@C;straggle:NxF@C;drop:N@C;timeout:C;norepair\"]
@@ -87,6 +89,25 @@ fn main() {
             let trials = args.usize_or("trials", 24);
             let (_, t) = experiments::fault_sweep(seed, trials);
             t.print();
+        }
+        "serve-sim" => {
+            let seed = args.u64_or("seed", 2025);
+            let quick = args.flag("quick");
+            let (rows, t) = experiments::serve_sweep(seed, quick);
+            t.print();
+            println!(
+                "{} load points, cross-mode parity held (FullTick == EventDriven == Parallel)",
+                rows.len()
+            );
+            if let Some(prefix) = args.get("out") {
+                let json = format!("{prefix}.json");
+                let md = format!("{prefix}.md");
+                std::fs::write(&json, torrent::serve::sweep_json(&rows))
+                    .unwrap_or_else(|e| panic!("write {json}: {e}"));
+                std::fs::write(&md, torrent::serve::sweep_markdown(&rows))
+                    .unwrap_or_else(|e| panic!("write {md}: {e}"));
+                println!("wrote {json} + {md}");
+            }
         }
         "run" => run_custom(&args),
         "artifacts" => smoke_artifacts(&args),

@@ -51,7 +51,7 @@ impl Tensor {
 
     /// Deterministic pseudo-random tensor (test/workload inputs).
     pub fn random(shape: Vec<usize>, seed: u64) -> Self {
-        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut rng = crate::util::rng(seed, crate::util::stream::PAYLOAD);
         let n: usize = shape.iter().product();
         let data = (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
         Tensor { shape, data }

@@ -138,7 +138,7 @@ mod tests {
     #[test]
     fn greedy_beats_or_ties_naive_on_random_sets() {
         let m = Mesh::new(8, 8);
-        let mut rng = crate::util::rng::Rng::new(42);
+        let mut rng = crate::util::rng(42, crate::util::stream::WORKLOAD);
         let mut greedy_wins = 0;
         for _ in 0..50 {
             let mut set = rng.sample_distinct(63, 8);

@@ -134,7 +134,6 @@ mod tests {
     use super::*;
     use crate::noc::{Mesh, Torus};
     use crate::sched::hops::chain_hops;
-    use crate::util::rng::Rng;
 
     #[test]
     fn exact_matches_brute_force_small() {
@@ -153,7 +152,7 @@ mod tests {
     #[test]
     fn tsp_never_worse_than_greedy_or_naive() {
         let m = Mesh::new(8, 8);
-        let mut rng = Rng::new(7);
+        let mut rng = crate::util::rng(7, crate::util::stream::WORKLOAD);
         for _ in 0..30 {
             let set: Vec<NodeId> = rng
                 .sample_distinct(63, 10)

@@ -1,0 +1,219 @@
+//! Admission control for the open-loop serving driver (ISSUE 8).
+//!
+//! The controller bounds *admitted-but-incomplete requests* (`inflight`)
+//! — engine-level tasks may be fewer after batching coalesces requests —
+//! and decides what happens to an arrival once the bound is hit, by
+//! policy:
+//!
+//! * [`AdmissionPolicy::Shed`] — reject immediately (load shedding; the
+//!   client retries elsewhere). Latency stays flat, goodput saturates.
+//! * [`AdmissionPolicy::Queue`] — hold up to `queue_cap` requests in a
+//!   bounded FIFO, reject the overflow. The classic serving shape:
+//!   latency climbs with occupancy until the queue fills, then rejects.
+//! * [`AdmissionPolicy::Backpressure`] — unbounded FIFO, never reject.
+//!   Past saturation the queue grows without bound and tail latency
+//!   diverges — the congestion-collapse curve the sweep must expose.
+//!
+//! Queued requests keep their original arrival cycle, so queue wait is
+//! inside the reported latency (that is the point of the comparison).
+
+use std::collections::VecDeque;
+
+/// What the controller decided about one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Admitted now; the caller dispatches it.
+    Admit,
+    /// Held in the pending queue; released by [`Admission::release`].
+    Enqueue,
+    /// Dropped with the given typed reason.
+    Reject(RejectKind),
+}
+
+/// Why an arrival was dropped — stable snake_case forms for reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Shed at the door: the inflight bound was hit under `Shed`.
+    Shed,
+    /// The bounded pending queue overflowed under `Queue`.
+    QueueFull,
+}
+
+impl RejectKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectKind::Shed => "shed",
+            RejectKind::QueueFull => "queue_full",
+        }
+    }
+}
+
+/// The admission policy knob (CLI: `--policy shed|queue|backpressure`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    Shed,
+    #[default]
+    Queue,
+    Backpressure,
+}
+
+impl AdmissionPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Queue => "queue",
+            AdmissionPolicy::Backpressure => "backpressure",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AdmissionPolicy, String> {
+        match s {
+            "shed" => Ok(AdmissionPolicy::Shed),
+            "queue" => Ok(AdmissionPolicy::Queue),
+            "backpressure" => Ok(AdmissionPolicy::Backpressure),
+            _ => Err(format!("unknown admission policy '{s}' (shed|queue|backpressure)")),
+        }
+    }
+}
+
+/// The admission controller. Tracks only request ids, so it can be
+/// unit-tested without the full driver.
+#[derive(Debug)]
+pub struct Admission {
+    policy: AdmissionPolicy,
+    max_inflight: usize,
+    queue_cap: usize,
+    inflight: usize,
+    pending: VecDeque<u32>,
+}
+
+impl Admission {
+    pub fn new(policy: AdmissionPolicy, max_inflight: usize, queue_cap: usize) -> Self {
+        assert!(max_inflight > 0, "max_inflight must be > 0");
+        Admission { policy, max_inflight, queue_cap, inflight: 0, pending: VecDeque::new() }
+    }
+
+    /// Admitted-but-incomplete requests.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Requests waiting in the pending queue.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Decide one arrival. On [`Verdict::Admit`] the inflight slot is
+    /// already taken; on [`Verdict::Enqueue`] the id is parked.
+    pub fn offer(&mut self, req: u32) -> Verdict {
+        if self.inflight < self.max_inflight && self.pending.is_empty() {
+            self.inflight += 1;
+            return Verdict::Admit;
+        }
+        match self.policy {
+            AdmissionPolicy::Shed => Verdict::Reject(RejectKind::Shed),
+            AdmissionPolicy::Queue => {
+                if self.pending.len() < self.queue_cap {
+                    self.pending.push_back(req);
+                    Verdict::Enqueue
+                } else {
+                    Verdict::Reject(RejectKind::QueueFull)
+                }
+            }
+            AdmissionPolicy::Backpressure => {
+                self.pending.push_back(req);
+                Verdict::Enqueue
+            }
+        }
+    }
+
+    /// Release queued requests into freed inflight slots (FIFO). Call
+    /// after completions; returns the ids to dispatch now.
+    pub fn pump(&mut self) -> Vec<u32> {
+        let mut released = Vec::new();
+        while self.inflight < self.max_inflight {
+            match self.pending.pop_front() {
+                Some(req) => {
+                    self.inflight += 1;
+                    released.push(req);
+                }
+                None => break,
+            }
+        }
+        released
+    }
+
+    /// One admitted request finished (completed or failed): free its slot.
+    pub fn release(&mut self) {
+        debug_assert!(self.inflight > 0, "release without a matching admit");
+        self.inflight = self.inflight.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_rejects_once_full() {
+        let mut a = Admission::new(AdmissionPolicy::Shed, 2, 0);
+        assert_eq!(a.offer(1), Verdict::Admit);
+        assert_eq!(a.offer(2), Verdict::Admit);
+        assert_eq!(a.offer(3), Verdict::Reject(RejectKind::Shed));
+        a.release();
+        assert_eq!(a.offer(4), Verdict::Admit);
+        assert_eq!(a.inflight(), 2);
+    }
+
+    #[test]
+    fn queue_holds_then_overflows() {
+        let mut a = Admission::new(AdmissionPolicy::Queue, 1, 2);
+        assert_eq!(a.offer(1), Verdict::Admit);
+        assert_eq!(a.offer(2), Verdict::Enqueue);
+        assert_eq!(a.offer(3), Verdict::Enqueue);
+        assert_eq!(a.offer(4), Verdict::Reject(RejectKind::QueueFull));
+        assert_eq!(a.pending(), 2);
+        a.release();
+        // FIFO: the oldest queued request gets the freed slot.
+        assert_eq!(a.pump(), vec![2]);
+        assert_eq!(a.pending(), 1);
+    }
+
+    #[test]
+    fn backpressure_never_rejects() {
+        let mut a = Admission::new(AdmissionPolicy::Backpressure, 1, 0);
+        assert_eq!(a.offer(1), Verdict::Admit);
+        for req in 2..100 {
+            assert_eq!(a.offer(req), Verdict::Enqueue);
+        }
+        assert_eq!(a.pending(), 98);
+        a.release();
+        assert_eq!(a.pump(), vec![2]);
+    }
+
+    #[test]
+    fn arrivals_behind_a_queue_do_not_jump_it() {
+        // Even with a free slot, an arrival may not overtake queued
+        // requests: FIFO order is part of the latency semantics.
+        let mut a = Admission::new(AdmissionPolicy::Queue, 1, 4);
+        assert_eq!(a.offer(1), Verdict::Admit);
+        assert_eq!(a.offer(2), Verdict::Enqueue);
+        a.release();
+        // Slot free but 2 still queued: 3 must queue behind it.
+        assert_eq!(a.offer(3), Verdict::Enqueue);
+        assert_eq!(a.pump(), vec![2]);
+        assert_eq!(a.pump(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn policy_strings_are_stable() {
+        for p in
+            [AdmissionPolicy::Shed, AdmissionPolicy::Queue, AdmissionPolicy::Backpressure]
+        {
+            assert_eq!(AdmissionPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(AdmissionPolicy::parse("fifo").is_err());
+        assert_eq!(RejectKind::Shed.as_str(), "shed");
+        assert_eq!(RejectKind::QueueFull.as_str(), "queue_full");
+    }
+}

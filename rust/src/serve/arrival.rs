@@ -1,0 +1,246 @@
+//! Seeded open-loop arrival processes (ISSUE 8 tentpole).
+//!
+//! Open-loop means arrivals do not wait for the system: the generator
+//! produces a cycle schedule from `(seed, process)` alone, so offered
+//! load keeps climbing past saturation — exactly the regime where the
+//! closed-loop drivers (submit a batch, drain to quiescence) can never
+//! take the fabric. All randomness comes from
+//! [`crate::util::rng`] on [`crate::util::stream::ARRIVALS`]; the
+//! schedule is a pure function of the seed and is identical under every
+//! [`crate::sim::StepMode`] by construction (the simulator never feeds
+//! back into it).
+
+use crate::util::{self, stream};
+
+/// The arrival process shape. Rates are integers per kilocycle so
+/// configurations hash/compare exactly (no floats in config identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals: exponential gaps with mean `1000 /
+    /// rate_per_kcycle` cycles.
+    Poisson { rate_per_kcycle: u64 },
+    /// On-off (bursty) arrivals: Poisson at `rate_per_kcycle` inside
+    /// `on_cycles`-long windows separated by `off_cycles`-long silences.
+    /// Gaps that land in a silence carry over to the next window start,
+    /// so bursts open with a pile-up — the tail-latency stressor.
+    Bursty { rate_per_kcycle: u64, on_cycles: u64, off_cycles: u64 },
+    /// Deterministic arrivals every `interval` cycles (calibration runs:
+    /// the latency curve with zero arrival variance).
+    Fixed { interval: u64 },
+}
+
+impl ArrivalKind {
+    /// Parse the CLI form: `poisson:R`, `bursty:R:ON:OFF`, `fixed:I`.
+    pub fn parse(s: &str) -> Result<ArrivalKind, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |p: &str| -> Result<u64, String> {
+            p.parse::<u64>().map_err(|_| format!("bad number '{p}' in arrival spec '{s}'"))
+        };
+        match parts.as_slice() {
+            ["poisson", r] => {
+                let rate_per_kcycle = num(r)?;
+                if rate_per_kcycle == 0 {
+                    return Err("poisson rate must be > 0".to_string());
+                }
+                Ok(ArrivalKind::Poisson { rate_per_kcycle })
+            }
+            ["bursty", r, on, off] => {
+                let (rate_per_kcycle, on_cycles, off_cycles) = (num(r)?, num(on)?, num(off)?);
+                if rate_per_kcycle == 0 || on_cycles == 0 {
+                    return Err("bursty rate and on-window must be > 0".to_string());
+                }
+                Ok(ArrivalKind::Bursty { rate_per_kcycle, on_cycles, off_cycles })
+            }
+            ["fixed", i] => {
+                let interval = num(i)?;
+                if interval == 0 {
+                    return Err("fixed interval must be > 0".to_string());
+                }
+                Ok(ArrivalKind::Fixed { interval })
+            }
+            _ => Err(format!(
+                "unknown arrival spec '{s}' (want poisson:R | bursty:R:ON:OFF | fixed:I)"
+            )),
+        }
+    }
+
+    /// Offered rate in arrivals per kilocycle, averaged over on+off
+    /// periods for bursty processes (the sweep's x-axis).
+    pub fn mean_rate_per_kcycle(&self) -> f64 {
+        match *self {
+            ArrivalKind::Poisson { rate_per_kcycle } => rate_per_kcycle as f64,
+            ArrivalKind::Bursty { rate_per_kcycle, on_cycles, off_cycles } => {
+                rate_per_kcycle as f64 * on_cycles as f64 / (on_cycles + off_cycles) as f64
+            }
+            ArrivalKind::Fixed { interval } => 1000.0 / interval as f64,
+        }
+    }
+}
+
+/// Iterator over the arrival schedule: strictly driver-side state, never
+/// touched by the simulator.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    kind: ArrivalKind,
+    rng: util::rng::Rng,
+    /// Next arrival cycle (already mapped through on/off windows).
+    next: u64,
+}
+
+impl ArrivalGen {
+    pub fn new(kind: ArrivalKind, seed: u64) -> Self {
+        let mut gen = ArrivalGen { kind, rng: util::rng(seed, stream::ARRIVALS), next: 0 };
+        gen.next = gen.after(0);
+        gen
+    }
+
+    /// The upcoming arrival cycle without consuming it.
+    pub fn peek(&self) -> u64 {
+        self.next
+    }
+
+    /// Consume and return the upcoming arrival cycle.
+    pub fn pop(&mut self) -> u64 {
+        let cur = self.next;
+        self.next = self.after(cur);
+        cur
+    }
+
+    /// Next arrival strictly after `t`.
+    fn after(&mut self, t: u64) -> u64 {
+        let raw = t + self.gap();
+        match self.kind {
+            ArrivalKind::Bursty { on_cycles, off_cycles, .. } => {
+                let period = on_cycles + off_cycles;
+                let phase = raw % period;
+                if phase < on_cycles {
+                    raw
+                } else {
+                    // Carried into the next burst: arrivals pile up at the
+                    // window start (same cycle is fine, the driver injects
+                    // every arrival due at the wake cycle).
+                    raw + (period - phase)
+                }
+            }
+            _ => raw,
+        }
+    }
+
+    /// One inter-arrival gap (>= 1 cycle: two tasks cannot arrive with a
+    /// negative-duration gap, and a zero gap would loop forever).
+    fn gap(&mut self) -> u64 {
+        match self.kind {
+            ArrivalKind::Poisson { rate_per_kcycle }
+            | ArrivalKind::Bursty { rate_per_kcycle, .. } => {
+                // Inverse-CDF exponential. u in [0,1) so 1-u in (0,1]:
+                // ln never sees zero.
+                let u = self.rng.f64();
+                let gap = (-(1.0 - u).ln() * 1000.0 / rate_per_kcycle as f64).ceil();
+                (gap as u64).max(1)
+            }
+            ArrivalKind::Fixed { interval } => interval,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_replay_by_seed() {
+        for kind in [
+            ArrivalKind::Poisson { rate_per_kcycle: 8 },
+            ArrivalKind::Bursty { rate_per_kcycle: 16, on_cycles: 200, off_cycles: 800 },
+            ArrivalKind::Fixed { interval: 125 },
+        ] {
+            let mut a = ArrivalGen::new(kind, 7);
+            let mut b = ArrivalGen::new(kind, 7);
+            for _ in 0..200 {
+                assert_eq!(a.pop(), b.pop(), "{kind:?}");
+            }
+            let mut c = ArrivalGen::new(kind, 8);
+            let first_200: Vec<u64> = (0..200).map(|_| c.pop()).collect();
+            let mut d = ArrivalGen::new(kind, 7);
+            let other: Vec<u64> = (0..200).map(|_| d.pop()).collect();
+            if !matches!(kind, ArrivalKind::Fixed { .. }) {
+                assert_ne!(first_200, other, "{kind:?}: seeds 7 and 8 drew one schedule");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_right() {
+        let mut gen = ArrivalGen::new(ArrivalKind::Poisson { rate_per_kcycle: 10 }, 42);
+        let mut last = 0;
+        let n = 2_000;
+        for _ in 0..n {
+            last = gen.pop();
+        }
+        // Mean gap should be ~100 cycles; allow a wide statistical band.
+        let mean_gap = last as f64 / n as f64;
+        assert!((60.0..160.0).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_gapped() {
+        for kind in [
+            ArrivalKind::Poisson { rate_per_kcycle: 50 },
+            ArrivalKind::Bursty { rate_per_kcycle: 50, on_cycles: 100, off_cycles: 400 },
+        ] {
+            let mut gen = ArrivalGen::new(kind, 3);
+            let mut prev = 0;
+            for _ in 0..500 {
+                let t = gen.pop();
+                assert!(t >= prev, "{kind:?}: time went backwards");
+                assert!(t > 0);
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_land_only_in_on_windows() {
+        let (on, off) = (150u64, 350u64);
+        let mut gen = ArrivalGen::new(
+            ArrivalKind::Bursty { rate_per_kcycle: 40, on_cycles: on, off_cycles: off },
+            11,
+        );
+        for _ in 0..400 {
+            let t = gen.pop();
+            assert!(t % (on + off) < on, "arrival {t} inside the off window");
+        }
+    }
+
+    #[test]
+    fn fixed_is_exactly_periodic() {
+        let mut gen = ArrivalGen::new(ArrivalKind::Fixed { interval: 250 }, 1);
+        for i in 1..=20u64 {
+            assert_eq!(gen.pop(), 250 * i);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_forms() {
+        assert_eq!(
+            ArrivalKind::parse("poisson:12").unwrap(),
+            ArrivalKind::Poisson { rate_per_kcycle: 12 }
+        );
+        assert_eq!(
+            ArrivalKind::parse("bursty:8:200:800").unwrap(),
+            ArrivalKind::Bursty { rate_per_kcycle: 8, on_cycles: 200, off_cycles: 800 }
+        );
+        assert_eq!(ArrivalKind::parse("fixed:125").unwrap(), ArrivalKind::Fixed { interval: 125 });
+        assert!(ArrivalKind::parse("poisson:0").is_err());
+        assert!(ArrivalKind::parse("uniform:3").is_err());
+        assert!(ArrivalKind::parse("bursty:1:2").is_err());
+    }
+
+    #[test]
+    fn mean_rate_accounts_for_duty_cycle() {
+        let b = ArrivalKind::Bursty { rate_per_kcycle: 40, on_cycles: 250, off_cycles: 750 };
+        assert!((b.mean_rate_per_kcycle() - 10.0).abs() < 1e-9);
+        let f = ArrivalKind::Fixed { interval: 100 };
+        assert!((f.mean_rate_per_kcycle() - 10.0).abs() < 1e-9);
+    }
+}

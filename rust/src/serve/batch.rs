@@ -1,0 +1,163 @@
+//! Continuous-batching dispatcher (ISSUE 8): coalesce compatible KV
+//! multicast requests inside a bounded batching window.
+//!
+//! Serving stacks batch at the same point: many decode streams want the
+//! same attention KV block pushed to their engine regions, and one
+//! Chainwrite whose destination set is the union moves it in a single
+//! chain pass instead of N. Two requests are compatible when they share
+//! `(src, bytes)` — same source scratchpad window and transfer size, so
+//! the union set is one valid [`crate::dma::TaskSpec`]. The window is
+//! anchored at the *first* member (`flush_at = opened_at + window`), so
+//! no request waits more than `window` cycles in the batcher; `window =
+//! 0` degenerates to one task per request. Background unicast traffic
+//! never enters the batcher — the driver submits it directly.
+
+use crate::noc::NodeId;
+
+/// One open batch: the union destination set and the member request ids
+/// that will share the resulting task's completion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub src: NodeId,
+    pub bytes: usize,
+    /// Union of member destination sets, sorted and deduplicated (chain
+    /// order is the scheduler's job at submission).
+    pub dests: Vec<NodeId>,
+    /// Request ids sharing this batch's completion.
+    pub members: Vec<u32>,
+    /// Cycle the first member was staged.
+    pub opened_at: u64,
+    /// Cycle the batch closes and must be submitted.
+    pub flush_at: u64,
+}
+
+/// The batcher: open batches keyed by compatibility, flushed by the
+/// driver when their window expires.
+#[derive(Debug)]
+pub struct Batcher {
+    window: u64,
+    open: Vec<Batch>,
+}
+
+impl Batcher {
+    pub fn new(window: u64) -> Self {
+        Batcher { window, open: Vec::new() }
+    }
+
+    /// Stage one admitted KV request. Joins an open compatible batch
+    /// (keeping its original `flush_at`) or opens a new one closing at
+    /// `now + window`.
+    pub fn stage(&mut self, req: u32, src: NodeId, dests: &[NodeId], bytes: usize, now: u64) {
+        if let Some(b) = self.open.iter_mut().find(|b| b.src == src && b.bytes == bytes) {
+            b.members.push(req);
+            for &d in dests {
+                if !b.dests.contains(&d) {
+                    b.dests.push(d);
+                }
+            }
+            b.dests.sort_unstable_by_key(|n| n.0);
+            return;
+        }
+        let mut sorted: Vec<NodeId> = dests.to_vec();
+        sorted.sort_unstable_by_key(|n| n.0);
+        sorted.dedup();
+        self.open.push(Batch {
+            src,
+            bytes,
+            dests: sorted,
+            members: vec![req],
+            opened_at: now,
+            flush_at: now + self.window,
+        });
+    }
+
+    /// Earliest close cycle among open batches (a driver wake source).
+    pub fn next_flush(&self) -> Option<u64> {
+        self.open.iter().map(|b| b.flush_at).min()
+    }
+
+    /// Close and return every batch with `flush_at <= now`, oldest
+    /// first (stable: `open` is append-ordered, so the drain order is
+    /// deterministic).
+    pub fn flush_due(&mut self, now: u64) -> Vec<Batch> {
+        let mut due = Vec::new();
+        let mut keep = Vec::new();
+        for b in self.open.drain(..) {
+            if b.flush_at <= now {
+                due.push(b);
+            } else {
+                keep.push(b);
+            }
+        }
+        self.open = keep;
+        due
+    }
+
+    /// Close every open batch regardless of window (end-of-run drain).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        std::mem::take(&mut self.open)
+    }
+
+    /// Requests currently staged across all open batches.
+    pub fn staged(&self) -> usize {
+        self.open.iter().map(|b| b.members.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compatible_requests_coalesce_with_union_dests() {
+        let mut b = Batcher::new(32);
+        b.stage(1, NodeId(0), &[NodeId(3), NodeId(5)], 4096, 100);
+        b.stage(2, NodeId(0), &[NodeId(5), NodeId(7)], 4096, 110);
+        let due = b.flush_due(132);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].members, vec![1, 2]);
+        assert_eq!(due[0].dests, vec![NodeId(3), NodeId(5), NodeId(7)]);
+        assert_eq!(due[0].flush_at, 132, "window anchors at the first member");
+    }
+
+    #[test]
+    fn incompatible_requests_stay_separate() {
+        let mut b = Batcher::new(32);
+        b.stage(1, NodeId(0), &[NodeId(3)], 4096, 100);
+        b.stage(2, NodeId(1), &[NodeId(3)], 4096, 100); // other source
+        b.stage(3, NodeId(0), &[NodeId(3)], 8192, 100); // other size
+        assert_eq!(b.flush_all().len(), 3);
+    }
+
+    #[test]
+    fn window_bounds_the_wait() {
+        let mut b = Batcher::new(50);
+        b.stage(1, NodeId(0), &[NodeId(3)], 1024, 100);
+        assert_eq!(b.next_flush(), Some(150));
+        assert!(b.flush_due(149).is_empty());
+        // A late joiner does not extend the window.
+        b.stage(2, NodeId(0), &[NodeId(4)], 1024, 149);
+        let due = b.flush_due(150);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].members, vec![1, 2]);
+        assert_eq!(b.next_flush(), None);
+    }
+
+    #[test]
+    fn zero_window_is_one_task_per_flush_cycle() {
+        let mut b = Batcher::new(0);
+        b.stage(1, NodeId(0), &[NodeId(3)], 1024, 7);
+        assert_eq!(b.next_flush(), Some(7));
+        assert_eq!(b.flush_due(7).len(), 1);
+    }
+
+    #[test]
+    fn staged_counts_members() {
+        let mut b = Batcher::new(10);
+        assert_eq!(b.staged(), 0);
+        b.stage(1, NodeId(0), &[NodeId(1)], 512, 0);
+        b.stage(2, NodeId(0), &[NodeId(2)], 512, 1);
+        b.stage(3, NodeId(2), &[NodeId(1)], 512, 2);
+        assert_eq!(b.staged(), 3);
+    }
+}

@@ -1,0 +1,686 @@
+//! Open-loop serving simulator (ISSUE 8 tentpole): a multi-tenant
+//! inference service modeled on the simulated SoC.
+//!
+//! The closed-loop drivers elsewhere in the repo submit a batch and
+//! drain to quiescence; a serving stack never quiesces. This module
+//! drives the [`crate::coordinator::Coordinator`] open-loop: a seeded
+//! [`arrival::ArrivalGen`] produces request times regardless of system
+//! state, a workload mix turns each into either a chainwrite multicast
+//! of an attention KV block (the paper's DeepSeek-V3 pattern: one
+//! engine's KV pushed to the engine regions that attend over it) or
+//! unicast iDMA background traffic, an [`admission::Admission`]
+//! controller bounds what enters, a [`batch::Batcher`] coalesces
+//! compatible KV requests inside a batching window, and
+//! [`stats::LatencyHisto`] + occupancy [`stats::Sample`]s record what
+//! the clients saw. The question answered is tail latency vs offered
+//! load, up to and past saturation.
+//!
+//! # Determinism
+//!
+//! The driver is bit-identical across [`crate::sim::StepMode`]s because
+//! every decision it makes is a function of (a) the seed — arrivals and
+//! the mix draw from their own [`crate::util::stream`]s — and (b)
+//! engine-reported completion cycles, which are bit-exact across modes.
+//! Stepping happens only through [`Coordinator::run_for`], whose
+//! bounded-horizon landing is exact in every mode, and driver events at
+//! a wake cycle are processed in one fixed order: completions, then
+//! arrivals, then the admission pump, then batch flushes, then
+//! occupancy samples. `rust/tests/serving.rs` enforces this three ways
+//! (FullTick / EventDriven / Parallel) on three fabrics.
+
+pub mod admission;
+pub mod arrival;
+pub mod batch;
+pub mod report;
+pub mod stats;
+
+pub use admission::{Admission, AdmissionPolicy, RejectKind, Verdict};
+pub use arrival::{ArrivalGen, ArrivalKind};
+pub use batch::{Batch, Batcher};
+pub use report::{sweep_json, sweep_markdown, ServeSweepRow};
+pub use stats::{LatencyHisto, Sample};
+
+use crate::coordinator::{Coordinator, EngineKind, TaskId, TaskOutcome};
+use crate::noc::NodeId;
+use crate::sched::Strategy;
+use crate::util::{self, stream};
+
+/// Workload mix: what an arrival is, sized so every request passes
+/// simple-mode submission (`bytes <= spm/2`) by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MixConfig {
+    /// Percent of arrivals that are KV multicasts (the rest are
+    /// background unicasts).
+    pub mcast_pct: u64,
+    /// KV block size per destination (bytes).
+    pub kv_bytes: usize,
+    /// KV destination-set size range, inclusive.
+    pub kv_dests_lo: usize,
+    pub kv_dests_hi: usize,
+    /// KV blocks originate from the first N nodes (the "attention
+    /// engines"); background traffic uses the whole fabric.
+    pub kv_sources: usize,
+    /// Background unicast transfer size (bytes).
+    pub bg_bytes: usize,
+}
+
+impl Default for MixConfig {
+    fn default() -> Self {
+        MixConfig {
+            mcast_pct: 70,
+            kv_bytes: 4 * 1024,
+            kv_dests_lo: 2,
+            kv_dests_hi: 4,
+            kv_sources: 4,
+            bg_bytes: 1024,
+        }
+    }
+}
+
+/// Request class drawn from the mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqClass {
+    /// Chainwrite multicast of one KV block.
+    Kv,
+    /// Unicast iDMA background transfer.
+    Background,
+}
+
+impl ReqClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReqClass::Kv => "kv",
+            ReqClass::Background => "background",
+        }
+    }
+}
+
+/// One generated request (driver-side; becomes part of an engine task
+/// only if admitted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u32,
+    pub arrived: u64,
+    pub class: ReqClass,
+    pub src: NodeId,
+    pub dests: Vec<NodeId>,
+    pub bytes: usize,
+}
+
+/// Terminal state of one request, as the client saw it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served; latency is arrival → engine-reported finish (queue wait
+    /// and batching wait included — that is the client clock).
+    Completed { latency: u64 },
+    /// Dropped by admission control.
+    Rejected(RejectKind),
+    /// Admitted but closed without completing (fault machinery).
+    Failed,
+    /// Still somewhere in the pipeline when the run ended.
+    Unfinished,
+}
+
+/// Per-request terminal record; the cross-StepMode differential suite
+/// compares these vectors bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Disposition {
+    pub req: u32,
+    pub arrived: u64,
+    pub class: ReqClass,
+    pub outcome: Outcome,
+}
+
+/// Full configuration of one open-loop run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub seed: u64,
+    /// Injection horizon: arrivals stop after this many cycles.
+    pub horizon: u64,
+    /// Extra cycle budget to drain admitted work after the horizon;
+    /// whatever is still unresolved then is reported `Unfinished`.
+    pub drain: u64,
+    pub arrival: ArrivalKind,
+    pub policy: AdmissionPolicy,
+    /// Bound on admitted-but-incomplete requests.
+    pub max_inflight: usize,
+    /// Pending-queue bound (policy `queue` only).
+    pub queue_cap: usize,
+    /// Batching window in cycles (0 = no coalescing).
+    pub batch_window: u64,
+    /// Occupancy sampling cadence in cycles.
+    pub sample_every: u64,
+    /// Chain-order strategy for KV multicasts.
+    pub strategy: Strategy,
+    pub mix: MixConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            seed: 1,
+            horizon: 20_000,
+            drain: 60_000,
+            arrival: ArrivalKind::Poisson { rate_per_kcycle: 4 },
+            policy: AdmissionPolicy::Queue,
+            max_inflight: 8,
+            queue_cap: 16,
+            batch_window: 64,
+            sample_every: 1_000,
+            strategy: Strategy::Greedy,
+            mix: MixConfig::default(),
+        }
+    }
+}
+
+/// What one open-loop run measured.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected_shed: u64,
+    pub rejected_queue_full: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub unfinished: u64,
+    /// Engine tasks actually submitted (≤ admitted: batching coalesces).
+    pub tasks_submitted: u64,
+    /// Total cycles stepped (horizon + drain actually used).
+    pub cycles: u64,
+    pub histo: LatencyHisto,
+    pub samples: Vec<Sample>,
+    /// Normalized router-activity index over the run
+    /// ([`stats::utilization`]).
+    pub util: f64,
+    pub pending_peak: usize,
+    pub inflight_peak: usize,
+    /// Terminal record per request, in request-id order.
+    pub dispositions: Vec<Disposition>,
+}
+
+impl ServeReport {
+    pub fn rejected(&self) -> u64 {
+        self.rejected_shed + self.rejected_queue_full
+    }
+
+    /// Percentile helpers defaulting to 0 when nothing completed (the
+    /// saturated-shed corner of the sweep).
+    pub fn p50(&self) -> u64 {
+        self.histo.p50().unwrap_or(0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.histo.p99().unwrap_or(0)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.histo.p999().unwrap_or(0)
+    }
+}
+
+/// The open-loop driver. Owns all serving-layer state; the coordinator
+/// (and through it the step mode, topology, and fault plan) is the
+/// caller's.
+pub struct ServeSim {
+    cfg: ServeConfig,
+    c: Coordinator,
+    arrivals: ArrivalGen,
+    mix_rng: util::rng::Rng,
+    admission: Admission,
+    batcher: Batcher,
+    requests: Vec<Request>,
+    outcomes: Vec<Option<Outcome>>,
+    /// Submitted engine tasks → member request ids sharing completion.
+    outstanding: Vec<(TaskId, Vec<u32>)>,
+    tasks_submitted: u64,
+    admitted: u64,
+    rejected_shed: u64,
+    rejected_queue_full: u64,
+    samples: Vec<Sample>,
+    pending_peak: usize,
+    inflight_peak: usize,
+}
+
+impl ServeSim {
+    pub fn new(cfg: ServeConfig, c: Coordinator) -> Self {
+        let n_nodes = c.soc.cfg.n_nodes();
+        assert!(n_nodes >= 2, "serving needs at least two nodes");
+        let mix = cfg.mix;
+        assert!(
+            (1..n_nodes).contains(&mix.kv_dests_lo)
+                && mix.kv_dests_lo <= mix.kv_dests_hi
+                && mix.kv_dests_hi <= n_nodes - 1,
+            "KV destination range [{}, {}] does not fit a {n_nodes}-node fabric",
+            mix.kv_dests_lo,
+            mix.kv_dests_hi,
+        );
+        assert!(mix.mcast_pct <= 100, "mcast_pct is a percentage");
+        let arrivals = ArrivalGen::new(cfg.arrival, cfg.seed);
+        let mix_rng = util::rng(cfg.seed, stream::MIX);
+        let admission = Admission::new(cfg.policy, cfg.max_inflight, cfg.queue_cap);
+        let batcher = Batcher::new(cfg.batch_window);
+        ServeSim {
+            cfg,
+            c,
+            arrivals,
+            mix_rng,
+            admission,
+            batcher,
+            requests: Vec::new(),
+            outcomes: Vec::new(),
+            outstanding: Vec::new(),
+            tasks_submitted: 0,
+            admitted: 0,
+            rejected_shed: 0,
+            rejected_queue_full: 0,
+            samples: Vec::new(),
+            pending_peak: 0,
+            inflight_peak: 0,
+        }
+    }
+
+    /// Run the full open-loop scenario and consume the driver.
+    pub fn run(mut self) -> ServeReport {
+        let n_nodes = self.c.soc.cfg.n_nodes();
+        let start = self.c.soc.cycle();
+        let act_base: u64 =
+            (0..n_nodes).map(|n| self.c.soc.net.router_activity(NodeId(n))).sum();
+        let horizon = start + self.cfg.horizon;
+        let mut next_sample = start + self.cfg.sample_every;
+
+        // Injection phase: wake at the next driver event, step the SoC
+        // exactly to it, process events in the fixed order.
+        loop {
+            let now = self.c.soc.cycle();
+            let mut wake: Option<u64> = None;
+            let mut fold = |t: u64| wake = Some(wake.map_or(t, |w: u64| w.min(t)));
+            if self.arrivals.peek() <= horizon {
+                fold(self.arrivals.peek());
+            }
+            if let Some(f) = self.batcher.next_flush() {
+                fold(f);
+            }
+            if next_sample <= horizon {
+                fold(next_sample);
+            }
+            let Some(wake) = wake else { break };
+            debug_assert!(wake > now, "driver wake must advance time");
+            if wake > now {
+                self.c.run_for(wake - now);
+            }
+            let now = self.c.soc.cycle();
+            self.collect_completions();
+            while self.arrivals.peek() <= now && self.arrivals.peek() <= horizon {
+                let arrived = self.arrivals.pop();
+                self.inject(arrived, now);
+            }
+            self.pump(now);
+            self.flush_due(now);
+            while next_sample <= now && next_sample <= horizon {
+                self.sample(next_sample);
+                next_sample += self.cfg.sample_every;
+            }
+            self.note_peaks();
+        }
+
+        // Drain phase: no new arrivals; close batches immediately and
+        // keep stepping in fixed chunks until everything admitted
+        // resolves or the drain budget expires.
+        let drain_deadline = horizon + self.cfg.drain;
+        loop {
+            let now = self.c.soc.cycle();
+            self.collect_completions();
+            self.pump(now);
+            let open = self.batcher.flush_all();
+            for b in open {
+                self.submit_batch(&b);
+            }
+            self.note_peaks();
+            if self.outstanding.is_empty() && self.admission.pending() == 0 {
+                break;
+            }
+            if now >= drain_deadline {
+                break;
+            }
+            let chunk = 256.min(drain_deadline - now);
+            self.c.run_for(chunk);
+        }
+
+        // Whatever is left never resolved inside the budget.
+        let mut unfinished = 0u64;
+        for o in &mut self.outcomes {
+            if o.is_none() {
+                *o = Some(Outcome::Unfinished);
+                unfinished += 1;
+            }
+        }
+
+        let end = self.c.soc.cycle();
+        let act_now: u64 =
+            (0..n_nodes).map(|n| self.c.soc.net.router_activity(NodeId(n))).sum();
+        let util = stats::utilization(act_now - act_base, n_nodes, end - start);
+        let mut completed = 0u64;
+        let mut failed = 0u64;
+        let mut histo = LatencyHisto::new();
+        let dispositions: Vec<Disposition> = self
+            .requests
+            .iter()
+            .zip(&self.outcomes)
+            .map(|(r, o)| {
+                let outcome = o.expect("every request has a terminal outcome");
+                match outcome {
+                    Outcome::Completed { latency } => {
+                        completed += 1;
+                        histo.record(latency);
+                    }
+                    Outcome::Failed => failed += 1,
+                    _ => {}
+                }
+                Disposition { req: r.id, arrived: r.arrived, class: r.class, outcome }
+            })
+            .collect();
+        ServeReport {
+            offered: self.requests.len() as u64,
+            admitted: self.admitted,
+            rejected_shed: self.rejected_shed,
+            rejected_queue_full: self.rejected_queue_full,
+            completed,
+            failed,
+            unfinished,
+            tasks_submitted: self.tasks_submitted,
+            cycles: end - start,
+            histo,
+            samples: self.samples,
+            util,
+            pending_peak: self.pending_peak,
+            inflight_peak: self.inflight_peak,
+            dispositions,
+        }
+    }
+
+    /// Draw one request from the mix and offer it to admission.
+    fn inject(&mut self, arrived: u64, now: u64) {
+        let n_nodes = self.c.soc.cfg.n_nodes();
+        let mix = self.cfg.mix;
+        let id = self.requests.len() as u32;
+        let req = if self.mix_rng.below(100) < mix.mcast_pct {
+            let src = NodeId(self.mix_rng.index(mix.kv_sources.clamp(1, n_nodes)));
+            let n_d =
+                self.mix_rng.range(mix.kv_dests_lo as u64, mix.kv_dests_hi as u64) as usize;
+            let dests: Vec<NodeId> = self
+                .mix_rng
+                .sample_distinct(n_nodes - 1, n_d)
+                .into_iter()
+                .map(|i| NodeId(if i >= src.0 { i + 1 } else { i }))
+                .collect();
+            Request { id, arrived, class: ReqClass::Kv, src, dests, bytes: mix.kv_bytes }
+        } else {
+            let src = NodeId(self.mix_rng.index(n_nodes));
+            let d = self.mix_rng.index(n_nodes - 1);
+            let dst = NodeId(if d >= src.0 { d + 1 } else { d });
+            Request {
+                id,
+                arrived,
+                class: ReqClass::Background,
+                src,
+                dests: vec![dst],
+                bytes: mix.bg_bytes,
+            }
+        };
+        self.requests.push(req);
+        self.outcomes.push(None);
+        match self.admission.offer(id) {
+            Verdict::Admit => {
+                self.admitted += 1;
+                self.dispatch(id, now);
+            }
+            Verdict::Enqueue => {} // released later by pump()
+            Verdict::Reject(kind) => {
+                match kind {
+                    RejectKind::Shed => self.rejected_shed += 1,
+                    RejectKind::QueueFull => self.rejected_queue_full += 1,
+                }
+                self.outcomes[id as usize] = Some(Outcome::Rejected(kind));
+            }
+        }
+    }
+
+    /// Release queued requests into freed slots and dispatch them.
+    fn pump(&mut self, now: u64) {
+        for id in self.admission.pump() {
+            self.admitted += 1;
+            self.dispatch(id, now);
+        }
+    }
+
+    /// Route one admitted request: KV multicasts stage into the batcher
+    /// (or submit directly when the window is 0 — same-cycle stages
+    /// would still merge, and `batch_window = 0` must mean literally no
+    /// coalescing), background unicasts go straight to the iDMA engine.
+    fn dispatch(&mut self, id: u32, now: u64) {
+        let req = self.requests[id as usize].clone();
+        match req.class {
+            ReqClass::Kv if self.cfg.batch_window > 0 => {
+                self.batcher.stage(id, req.src, &req.dests, req.bytes, now);
+            }
+            ReqClass::Kv => {
+                let h = self
+                    .c
+                    .submit_simple(
+                        req.src,
+                        &req.dests,
+                        req.bytes,
+                        EngineKind::Torrent(self.cfg.strategy),
+                        false,
+                    )
+                    .expect("serve KV request valid by construction");
+                self.tasks_submitted += 1;
+                self.outstanding.push((h.id(), vec![id]));
+            }
+            ReqClass::Background => {
+                let h = self
+                    .c
+                    .submit_simple(req.src, &req.dests, req.bytes, EngineKind::Idma, false)
+                    .expect("serve background request valid by construction");
+                self.tasks_submitted += 1;
+                self.outstanding.push((h.id(), vec![id]));
+            }
+        }
+    }
+
+    /// Submit batches whose window expired.
+    fn flush_due(&mut self, now: u64) {
+        for b in self.batcher.flush_due(now) {
+            self.submit_batch(&b);
+        }
+    }
+
+    fn submit_batch(&mut self, b: &Batch) {
+        let h = self
+            .c
+            .submit_simple(
+                b.src,
+                &b.dests,
+                b.bytes,
+                EngineKind::Torrent(self.cfg.strategy),
+                false,
+            )
+            .expect("serve KV batch valid by construction");
+        self.tasks_submitted += 1;
+        self.outstanding.push((h.id(), b.members.clone()));
+    }
+
+    /// Drain finished tasks: latency clocks from each member request's
+    /// *arrival* to the engine-reported finish cycle (queue and batching
+    /// wait included), so the number is mode-independent — both ends are
+    /// bit-exact simulator state, not driver observation times.
+    fn collect_completions(&mut self) {
+        let c = &self.c;
+        let requests = &self.requests;
+        let outcomes = &mut self.outcomes;
+        let admission = &mut self.admission;
+        self.outstanding.retain(|(tid, members)| {
+            let rec = c.record(*tid).expect("outstanding task has a record");
+            if let Some(res) = &rec.result {
+                for &m in members {
+                    let lat = res.finished_at.saturating_sub(requests[m as usize].arrived);
+                    outcomes[m as usize] = Some(Outcome::Completed { latency: lat });
+                    admission.release();
+                }
+                false
+            } else if matches!(rec.outcome, Some(TaskOutcome::Failed { .. })) {
+                for &m in members {
+                    outcomes[m as usize] = Some(Outcome::Failed);
+                    admission.release();
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn sample(&mut self, cycle: u64) {
+        self.samples.push(Sample {
+            cycle,
+            pending: self.admission.pending(),
+            inflight: self.admission.inflight(),
+            admitted: self.admitted,
+            rejected: self.rejected_shed + self.rejected_queue_full,
+        });
+    }
+
+    fn note_peaks(&mut self) {
+        self.pending_peak = self.pending_peak.max(self.admission.pending());
+        self.inflight_peak = self.inflight_peak.max(self.admission.inflight());
+    }
+}
+
+/// Convenience: build a coordinator and run one scenario.
+pub fn run(
+    cfg: ServeConfig,
+    soc_cfg: crate::soc::SocConfig,
+    mode: crate::sim::StepMode,
+) -> ServeReport {
+    ServeSim::new(cfg, Coordinator::with_step_mode(soc_cfg, mode)).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::StepMode;
+    use crate::soc::SocConfig;
+
+    fn quick_cfg(rate: u64, policy: AdmissionPolicy) -> ServeConfig {
+        ServeConfig {
+            seed: 11,
+            horizon: 4_000,
+            drain: 30_000,
+            arrival: ArrivalKind::Poisson { rate_per_kcycle: rate },
+            policy,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn fabric() -> SocConfig {
+        SocConfig::custom(4, 4, 64 * 1024)
+    }
+
+    #[test]
+    fn accounting_is_conserved() {
+        let r = run(quick_cfg(6, AdmissionPolicy::Queue), fabric(), StepMode::EventDriven);
+        assert!(r.offered > 0, "no arrivals inside the horizon");
+        assert_eq!(r.offered, r.admitted + r.rejected(), "offered != admitted + rejected");
+        assert_eq!(
+            r.admitted,
+            r.completed + r.failed + r.unfinished,
+            "admitted requests must reach a terminal state"
+        );
+        assert_eq!(r.dispositions.len(), r.offered as usize);
+        assert_eq!(r.histo.count() as u64, r.completed);
+        assert!(r.tasks_submitted <= r.admitted, "batching can only reduce task count");
+        assert!(r.util > 0.0, "a served run must move flits");
+    }
+
+    #[test]
+    fn replays_identically_by_seed() {
+        let a = run(quick_cfg(8, AdmissionPolicy::Queue), fabric(), StepMode::EventDriven);
+        let b = run(quick_cfg(8, AdmissionPolicy::Queue), fabric(), StepMode::EventDriven);
+        assert_eq!(a.dispositions, b.dispositions);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn low_load_completes_everything() {
+        let r = run(quick_cfg(1, AdmissionPolicy::Queue), fabric(), StepMode::EventDriven);
+        assert_eq!(r.rejected(), 0, "1/kcycle must not saturate a 4x4 fabric");
+        assert_eq!(r.unfinished, 0, "drain budget too small for trickle load");
+        assert_eq!(r.completed, r.offered);
+    }
+
+    #[test]
+    fn saturation_sheds_under_shed_policy() {
+        // 60 arrivals/kcycle on max_inflight=8 is far past saturation:
+        // the shed policy must reject and never queue.
+        let mut cfg = quick_cfg(60, AdmissionPolicy::Shed);
+        cfg.queue_cap = 0;
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert!(r.rejected_shed > 0, "overload never shed");
+        assert_eq!(r.rejected_queue_full, 0);
+        assert_eq!(r.pending_peak, 0, "shed policy must not queue");
+        assert!(r.inflight_peak <= 8);
+    }
+
+    #[test]
+    fn backpressure_never_rejects_and_queues_deep() {
+        let r = run(quick_cfg(60, AdmissionPolicy::Backpressure), fabric(), StepMode::EventDriven);
+        assert_eq!(r.rejected(), 0, "backpressure must never reject");
+        assert!(r.pending_peak > 16, "overload should build a deep queue");
+    }
+
+    #[test]
+    fn queue_policy_bounds_the_queue() {
+        let mut cfg = quick_cfg(60, AdmissionPolicy::Queue);
+        cfg.queue_cap = 5;
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert!(r.pending_peak <= 5, "queue exceeded its cap");
+        assert!(r.rejected_queue_full > 0, "overload never overflowed the queue");
+    }
+
+    #[test]
+    fn batching_coalesces_under_load() {
+        // Many KV requests from few sources inside a wide window must
+        // produce fewer engine tasks than requests.
+        let mut cfg = quick_cfg(40, AdmissionPolicy::Backpressure);
+        cfg.batch_window = 256;
+        cfg.mix.mcast_pct = 100;
+        cfg.mix.kv_sources = 2;
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert!(
+            r.tasks_submitted < r.admitted,
+            "no coalescing: {} tasks for {} admitted",
+            r.tasks_submitted,
+            r.admitted
+        );
+    }
+
+    #[test]
+    fn zero_window_means_no_coalescing() {
+        let mut cfg = quick_cfg(20, AdmissionPolicy::Queue);
+        cfg.batch_window = 0;
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert_eq!(r.tasks_submitted, r.admitted);
+    }
+
+    #[test]
+    fn samples_cover_the_horizon() {
+        let cfg = quick_cfg(8, AdmissionPolicy::Queue);
+        let (every, horizon) = (cfg.sample_every, cfg.horizon);
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert_eq!(r.samples.len() as u64, horizon / every);
+        for (i, s) in r.samples.iter().enumerate() {
+            assert_eq!(s.cycle, (i as u64 + 1) * every);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Serve-sweep report rows and the JSON / Markdown emitters
+//! (`torrent serve-sim --out PREFIX` writes both).
+//!
+//! Lives in `serve` (not `analysis`) so `analysis::experiments` can
+//! import the row type without a module cycle. The JSON schema is
+//! `torrent-serve-sweep-v1`: flat rows, snake_case keys, one object per
+//! (fabric × scheduler × threads × rate) load point — the same
+//! hand-rolled no-serde convention as the bench baselines.
+
+/// One swept load point. Latencies in cycles; `util` is the normalized
+/// router-activity index from [`crate::serve::stats::utilization`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSweepRow {
+    pub fabric: &'static str,
+    pub sched: &'static str,
+    pub threads: usize,
+    /// Offered arrival rate (tasks per kilocycle, the x-axis).
+    pub rate_per_kcycle: u64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub util: f64,
+    /// Peak admission-queue depth over the run (the measured-pending
+    /// column in EXPERIMENTS.md).
+    pub pending_peak: usize,
+}
+
+/// Render sweep rows as `torrent-serve-sweep-v1` JSON.
+pub fn sweep_json(rows: &[ServeSweepRow]) -> String {
+    let mut out = String::from("{\n  \"schema\": \"torrent-serve-sweep-v1\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"fabric\": \"{}\", \"sched\": \"{}\", \"threads\": {}, \
+             \"rate_per_kcycle\": {}, \"offered\": {}, \"admitted\": {}, \
+             \"rejected\": {}, \"completed\": {}, \"p50\": {}, \"p99\": {}, \
+             \"p999\": {}, \"util\": {:.6}, \"pending_peak\": {}}}{}\n",
+            r.fabric,
+            r.sched,
+            r.threads,
+            r.rate_per_kcycle,
+            r.offered,
+            r.admitted,
+            r.rejected,
+            r.completed,
+            r.p50,
+            r.p99,
+            r.p999,
+            r.util,
+            r.pending_peak,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Render sweep rows as a Markdown latency/utilization curve, one table
+/// per (fabric × scheduler × threads) leg in input order.
+pub fn sweep_markdown(rows: &[ServeSweepRow]) -> String {
+    let mut out = String::from("# Serve sweep — tail latency vs offered load\n");
+    let mut cur: Option<(&str, &str, usize)> = None;
+    for r in rows {
+        let leg = (r.fabric, r.sched, r.threads);
+        if cur != Some(leg) {
+            cur = Some(leg);
+            out.push_str(&format!(
+                "\n## {} · {} · t={}\n\n\
+                 | rate/kcycle | offered | admitted | rejected | completed | p50 | p99 | p999 | util | pending peak |\n\
+                 |---|---|---|---|---|---|---|---|---|---|\n",
+                r.fabric, r.sched, r.threads
+            ));
+        }
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {:.3} | {} |\n",
+            r.rate_per_kcycle,
+            r.offered,
+            r.admitted,
+            r.rejected,
+            r.completed,
+            r.p50,
+            r.p99,
+            r.p999,
+            r.util,
+            r.pending_peak,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(rate: u64, threads: usize) -> ServeSweepRow {
+        ServeSweepRow {
+            fabric: "mesh",
+            sched: "greedy",
+            threads,
+            rate_per_kcycle: rate,
+            offered: 40,
+            admitted: 38,
+            rejected: 2,
+            completed: 38,
+            p50: 900,
+            p99: 2100,
+            p999: 2500,
+            util: 0.125,
+            pending_peak: 5,
+        }
+    }
+
+    #[test]
+    fn json_has_schema_and_balanced_braces() {
+        let s = sweep_json(&[row(1, 1), row(4, 1)]);
+        assert!(s.contains("\"schema\": \"torrent-serve-sweep-v1\""));
+        assert!(s.contains("\"rate_per_kcycle\": 4"));
+        assert_eq!(
+            s.matches('{').count(),
+            s.matches('}').count(),
+            "unbalanced JSON braces:\n{s}"
+        );
+        // Exactly one separating comma between the two row objects.
+        assert_eq!(s.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn markdown_groups_rows_by_leg() {
+        let md = sweep_markdown(&[row(1, 1), row(4, 1), row(1, 2)]);
+        assert_eq!(md.matches("## mesh · greedy · t=1").count(), 1);
+        assert_eq!(md.matches("## mesh · greedy · t=2").count(), 1);
+        assert_eq!(md.matches("| 1 | 40 |").count(), 2);
+        assert!(md.contains("pending peak"));
+    }
+}

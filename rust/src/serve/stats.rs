@@ -1,0 +1,163 @@
+//! Serving telemetry (ISSUE 8): log-bucketed latency histograms with
+//! exact tail percentiles, and admission/occupancy time-series.
+//!
+//! The histogram keeps both a 64-bucket log2 shape (for display: bucket
+//! `i` covers `[2^i, 2^(i+1))` cycles, bucket 0 covers `{0, 1}`) and the
+//! raw samples, so p50/p99/p999 are *exact* nearest-rank order
+//! statistics, not bucket interpolations — at serving scale the p999 of
+//! a log-bucketed estimate can be off by half a bucket (~40%), which is
+//! bigger than the effects the sweep measures.
+
+/// Latency histogram: log2 display buckets + exact percentile samples.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHisto {
+    buckets: [u64; 64],
+    samples: Vec<u64>,
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        LatencyHisto { buckets: [0; 64], samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, latency: u64) {
+        let idx = (64 - latency.max(1).leading_zeros() as usize - 1).min(63);
+        self.buckets[idx] += 1;
+        self.samples.push(latency);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Exact nearest-rank percentile (`q` in [0, 100]); `None` when
+    /// empty. p50/p99/p999 below are the report fields.
+    pub fn percentile(&self, q: f64) -> Option<u64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+        Some(sorted[rank.clamp(1, sorted.len()) - 1])
+    }
+
+    pub fn p50(&self) -> Option<u64> {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Option<u64> {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> Option<u64> {
+        self.percentile(99.9)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        Some(self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64)
+    }
+
+    pub fn max(&self) -> Option<u64> {
+        self.samples.iter().copied().max()
+    }
+
+    /// Non-empty log2 buckets as `(bucket_floor_cycles, count)`, for the
+    /// Markdown histogram rendering.
+    pub fn shape(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (1u64 << i, c))
+            .collect()
+    }
+}
+
+/// One occupancy sample on the driver's fixed cadence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sample {
+    pub cycle: u64,
+    /// Requests waiting in the admission queue.
+    pub pending: usize,
+    /// Admitted-but-incomplete requests.
+    pub inflight: usize,
+    /// Cumulative admitted arrivals.
+    pub admitted: u64,
+    /// Cumulative rejected arrivals.
+    pub rejected: u64,
+}
+
+/// Fabric utilization over a window: router lane-activity delta
+/// normalized per router per cycle. A router can move several flits per
+/// cycle (one per output lane), so this is an activity index — 0 means
+/// a quiet fabric, and the sweep reads it for the saturation knee, not
+/// as a percentage.
+pub fn utilization(activity_delta: u64, n_nodes: usize, cycles: u64) -> f64 {
+    if cycles == 0 || n_nodes == 0 {
+        return 0.0;
+    }
+    activity_delta as f64 / (n_nodes as f64 * cycles as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_exact_order_statistics() {
+        let mut h = LatencyHisto::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.p50(), Some(500));
+        assert_eq!(h.p99(), Some(990));
+        assert_eq!(h.p999(), Some(999));
+        assert_eq!(h.percentile(100.0), Some(1000));
+        assert_eq!(h.max(), Some(1000));
+        assert!((h.mean().unwrap() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut h = LatencyHisto::new();
+        h.record(42);
+        assert_eq!(h.p50(), Some(42));
+        assert_eq!(h.p999(), Some(42));
+    }
+
+    #[test]
+    fn empty_histogram_has_no_percentiles() {
+        let h = LatencyHisto::new();
+        assert_eq!(h.p50(), None);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn log_buckets_cover_the_tail() {
+        let mut h = LatencyHisto::new();
+        h.record(0); // clamps into bucket 0
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1024);
+        h.record(u64::MAX); // must not index out of bounds
+        let shape = h.shape();
+        assert_eq!(shape[0], (1, 2)); // {0, 1}
+        assert_eq!(shape[1], (2, 2)); // {2, 3}
+        assert!(shape.contains(&(1024, 1)));
+        assert!(shape.contains(&(1u64 << 63, 1)));
+    }
+
+    #[test]
+    fn utilization_normalizes_per_router_cycle() {
+        assert!((utilization(1600, 16, 100) - 1.0).abs() < 1e-9);
+        assert_eq!(utilization(5, 16, 0), 0.0);
+        assert!(utilization(800, 16, 100) < utilization(1600, 16, 100));
+    }
+}

@@ -383,6 +383,14 @@ impl Soc {
     /// jump is capped at the watchdog deadline so a stalled system panics
     /// at exactly the same cycle as full-tick stepping.
     fn fast_forward(&mut self, start: u64, max_cycles: u64) {
+        self.fast_forward_cap(start + max_cycles);
+    }
+
+    /// The skip kernel shared by [`Soc::run_until_idle`] (cap = watchdog
+    /// deadline) and the bounded-horizon stepper (cap = horizon − 1, so
+    /// the tick that follows lands exactly on the horizon in every step
+    /// mode — see [`Soc::step_toward`]).
+    fn fast_forward_cap(&mut self, deadline: u64) {
         // Inbox backlogs and packets mid-ejection drive endpoint logic
         // (dispatch, cut-through forward gates) on the very next tick;
         // the fabric itself must also be skippable.
@@ -396,11 +404,10 @@ impl Soc {
             return;
         }
         let now = self.net.cycle;
-        let deadline = start + max_cycles;
         let target = match self.next_event() {
             Some(ev) if ev > now => ev.min(deadline),
             Some(_) => return, // busy this cycle
-            None => deadline,  // stalled: every tick until the watchdog is a no-op
+            None => deadline,  // stalled: every tick until the cap is a no-op
         };
         if target > now {
             self.net.skip_quiet_cycles(target - now);
@@ -429,6 +436,52 @@ impl Soc {
             }
         }
         self.ticks_executed += 1;
+    }
+
+    /// One stepping quantum toward an absolute cycle `target`, landing
+    /// on or before it — never past it. The event-driven/parallel modes
+    /// cap their fast-forward at `target - 1` so the tick that follows
+    /// advances the clock to at most `target`; full-tick trivially moves
+    /// one cycle. All three modes therefore visit `target` itself with
+    /// an executed tick, which is what makes a bounded-horizon run
+    /// bit-identical across modes: injection at the horizon happens at
+    /// the same cycle regardless of how the gap was crossed.
+    ///
+    /// Requires `self.cycle() < target` (debug-asserted): a quantum must
+    /// move time forward.
+    pub fn step_toward(&mut self, target: u64) {
+        debug_assert!(self.net.cycle < target, "step_toward requires cycle < target");
+        match self.step_mode {
+            StepMode::FullTick => self.tick(),
+            StepMode::EventDriven => {
+                self.fast_forward_cap(target.saturating_sub(1));
+                self.tick();
+            }
+            StepMode::Parallel { threads } => {
+                self.fast_forward_cap(target.saturating_sub(1));
+                self.tick_parallel(threads);
+            }
+        }
+        self.ticks_executed += 1;
+    }
+
+    /// Step until the shared clock reaches the absolute cycle `target`
+    /// exactly (no-op when already there). Unlike
+    /// [`Soc::run_until_idle`], this does not require quiescence and
+    /// never panics: an open-loop driver calls it between injections.
+    pub fn step_bounded(&mut self, target: u64) {
+        while self.net.cycle < target {
+            self.step_toward(target);
+        }
+    }
+
+    /// Advance the system exactly `cycles` cycles — the bounded-horizon
+    /// run API (ISSUE 8): the clock lands precisely on `now + cycles` in
+    /// every [`StepMode`], busy or idle, so callers can interleave task
+    /// injection with stepping deterministically. Returns the new cycle.
+    pub fn run_for(&mut self, cycles: u64) -> u64 {
+        self.step_bounded(self.net.cycle + cycles);
+        self.net.cycle
     }
 
     /// Run until quiescent; panics (watchdog) after `max_cycles`. Steps
@@ -956,6 +1009,79 @@ mod tests {
         let wr = AffinePattern::contiguous(s.map.base_of(NodeId(3)), 1024);
         s.chainwrite(1, NodeId(0), read, &[(NodeId(3), wr)], Strategy::Naive, false);
         s.run_until_idle(10); // a 1 KB chainwrite needs far more than 10 cycles
+    }
+
+    #[test]
+    fn run_for_lands_exactly_on_target() {
+        use crate::sim::StepMode;
+        for mode in [
+            StepMode::FullTick,
+            StepMode::EventDriven,
+            StepMode::Parallel { threads: 2 },
+        ] {
+            let mut s = Soc::with_step_mode(SocConfig::custom(2, 2, 64 * 1024), mode);
+            // Idle system: bounded stepping must still land exactly on the
+            // horizon (the fast-forward cap is horizon - 1, tick closes it).
+            assert_eq!(s.run_for(1), 1, "{mode:?}");
+            assert_eq!(s.run_for(999), 1_000, "{mode:?}");
+            // Busy system: mid-transfer horizons must not overshoot either.
+            fill_src(&mut s, NodeId(0), 0, 2048);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), 2048);
+            let wr = AffinePattern::contiguous(s.map.base_of(NodeId(3)), 2048);
+            s.chainwrite(1, NodeId(0), read, &[(NodeId(3), wr)], Strategy::Naive, true);
+            for chunk in [1u64, 7, 64, 500] {
+                let before = s.net.cycle;
+                assert_eq!(s.run_for(chunk), before + chunk, "{mode:?}");
+            }
+            assert_eq!(s.run_for(0), s.net.cycle, "{mode:?}: zero-length run moves time");
+        }
+    }
+
+    #[test]
+    fn run_for_chunked_matches_run_until_idle_across_modes() {
+        use crate::sim::StepMode;
+        let submit = |s: &mut Soc| {
+            fill_src(s, NodeId(0), 0, 4096);
+            let read = AffinePattern::contiguous(s.map.base_of(NodeId(0)), 4096);
+            let dests: Vec<(NodeId, AffinePattern)> = [5usize, 10, 15]
+                .iter()
+                .map(|&n| {
+                    (NodeId(n), AffinePattern::contiguous(s.map.base_of(NodeId(n)), 4096))
+                })
+                .collect();
+            s.chainwrite(1, NodeId(0), read, &dests, Strategy::Greedy, true);
+        };
+        // Reference: uninterrupted quiescence drain, event-driven.
+        let mut reference =
+            Soc::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), StepMode::EventDriven);
+        submit(&mut reference);
+        let need = reference.run_until_idle(300_000);
+        let ref_lat = reference.torrent_result(NodeId(0), 1).unwrap().latency();
+        let ref_hops = reference.net.stats.flit_hops;
+        // Bounded-horizon stepping in awkward chunk sizes must reproduce
+        // the same completion latency and traffic in every mode: run_for
+        // only changes *when control returns*, never what the hardware did.
+        for mode in [
+            StepMode::FullTick,
+            StepMode::EventDriven,
+            StepMode::Parallel { threads: 2 },
+            StepMode::Parallel { threads: 4 },
+        ] {
+            let mut s = Soc::with_step_mode(SocConfig::custom(4, 4, 64 * 1024), mode);
+            submit(&mut s);
+            while s.net.cycle < need {
+                let step = 113.min(need - s.net.cycle);
+                s.run_for(step);
+            }
+            assert_eq!(s.net.cycle, need, "{mode:?}");
+            assert!(s.is_idle(), "{mode:?}: not idle at the reference quiesce cycle");
+            assert_eq!(
+                s.torrent_result(NodeId(0), 1).unwrap().latency(),
+                ref_lat,
+                "{mode:?}: latency diverged under chunked stepping"
+            );
+            assert_eq!(s.net.stats.flit_hops, ref_hops, "{mode:?}: traffic diverged");
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ where
     for case in 0..cases {
         // Derive a per-case rng so a failure replays without running
         // the preceding cases.
-        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let mut rng = crate::util::rng(seed, crate::util::stream::PROP + case as u64);
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(

@@ -3,7 +3,7 @@
 //! reproducibility of every figure).
 
 use crate::noc::{NodeId, Topology};
-use crate::util::rng::Rng;
+use crate::util::stream;
 
 /// Generate `count` random destination sets of size `n_dst`, drawn from
 /// the fabric excluding `src` (paper: "every group selects destinations
@@ -19,7 +19,7 @@ pub fn random_dest_sets(
 ) -> Vec<Vec<NodeId>> {
     let candidates: Vec<NodeId> = (0..topo.n_nodes()).map(NodeId).filter(|&n| n != src).collect();
     assert!(n_dst <= candidates.len(), "n_dst {n_dst} exceeds fabric minus source");
-    let mut rng = Rng::new(seed);
+    let mut rng = crate::util::rng(seed, stream::DEST_SETS);
     (0..count)
         .map(|_| {
             rng.sample_distinct(candidates.len(), n_dst)

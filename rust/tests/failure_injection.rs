@@ -8,7 +8,6 @@ use torrent::noc::{Message, NodeId, Packet, TopologyKind};
 use torrent::sched::Strategy;
 use torrent::sim::{Fault, FaultKind, FaultPlan, StepMode};
 use torrent::soc::{Soc, SocConfig};
-use torrent::util::rng::Rng;
 use torrent::workloads;
 
 fn coord() -> Coordinator {
@@ -258,7 +257,10 @@ fn chaos_payload(seed: u64, bytes: usize) -> Vec<u8> {
 /// Draw one randomized (dest-set, payload, fault-schedule) case on a
 /// 4x4 fabric of the given topology.
 fn chaos_case(topology: TopologyKind, seed: u64) -> (SocConfig, Vec<NodeId>, usize) {
-    let mut rng = Rng::new(seed ^ ((topology as u64 + 1) << 40));
+    let mut rng = torrent::util::rng(
+        seed,
+        torrent::util::stream::FAULTS + (topology as u64 + 1),
+    );
     let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
     let n_nodes = cfg.n_nodes();
     let n_dests = rng.range(2, 5) as usize;
@@ -369,7 +371,10 @@ fn fault_free_run(
     seed: u64,
     mode: StepMode,
 ) -> (u64, u64, Vec<Vec<u8>>) {
-    let mut rng = Rng::new(seed ^ ((topology as u64 + 1) << 48));
+    let mut rng = torrent::util::rng(
+        seed,
+        torrent::util::stream::WORKLOAD + (topology as u64 + 1),
+    );
     let cfg = SocConfig::custom(4, 4, 64 * 1024).with_topology(topology);
     let n_dests = rng.range(2, 5) as usize;
     let dests = workloads::random_dest_sets(

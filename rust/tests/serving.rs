@@ -1,0 +1,144 @@
+//! Serving-layer determinism suite (ISSUE 8 satellite): the open-loop
+//! driver must be replay-identical by seed and bit-identical across
+//! every step mode — FullTick, EventDriven, Parallel{1,2,4} — on every
+//! fabric, because all serving decisions are functions of the seed
+//! streams and of engine-reported completion cycles, which the three
+//! modes agree on cycle-for-cycle.
+
+use torrent::noc::TopologyKind;
+use torrent::serve::{run, AdmissionPolicy, ArrivalKind, ServeConfig, ServeReport};
+use torrent::sim::{FaultPlan, StepMode};
+use torrent::soc::SocConfig;
+
+fn cfg(seed: u64, rate: u64, policy: AdmissionPolicy) -> ServeConfig {
+    ServeConfig {
+        seed,
+        horizon: 3_000,
+        drain: 40_000,
+        arrival: ArrivalKind::Poisson { rate_per_kcycle: rate },
+        policy,
+        ..ServeConfig::default()
+    }
+}
+
+fn fabric(topology: TopologyKind) -> SocConfig {
+    SocConfig::custom(4, 4, 64 * 1024).with_topology(topology)
+}
+
+/// Everything observable must match: per-request dispositions, the
+/// occupancy time-series, every counter, and the (integer-derived)
+/// utilization down to the last bit.
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport, what: &str) {
+    assert_eq!(a.dispositions, b.dispositions, "dispositions diverged: {what}");
+    assert_eq!(a.samples, b.samples, "occupancy samples diverged: {what}");
+    let counters = |r: &ServeReport| {
+        (
+            r.offered,
+            r.admitted,
+            r.rejected_shed,
+            r.rejected_queue_full,
+            r.completed,
+            r.failed,
+            r.unfinished,
+            r.tasks_submitted,
+            r.cycles,
+            r.pending_peak,
+            r.inflight_peak,
+        )
+    };
+    assert_eq!(counters(a), counters(b), "counters diverged: {what}");
+    assert_eq!(a.util.to_bits(), b.util.to_bits(), "utilization diverged: {what}");
+}
+
+#[test]
+fn per_task_results_match_across_all_step_modes_on_every_fabric() {
+    for topology in TopologyKind::ALL {
+        let reference =
+            run(cfg(21, 8, AdmissionPolicy::Queue), fabric(topology), StepMode::EventDriven);
+        assert!(reference.offered > 0, "{topology:?}: no arrivals");
+        assert!(reference.completed > 0, "{topology:?}: nothing completed");
+        for mode in [
+            StepMode::FullTick,
+            StepMode::Parallel { threads: 1 },
+            StepMode::Parallel { threads: 2 },
+            StepMode::Parallel { threads: 4 },
+        ] {
+            let other = run(cfg(21, 8, AdmissionPolicy::Queue), fabric(topology), mode);
+            assert_reports_identical(&reference, &other, &format!("{topology:?} {mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn bursty_and_fixed_arrivals_hold_cross_mode_parity_too() {
+    let kinds = [
+        ArrivalKind::Bursty { rate_per_kcycle: 20, on_cycles: 500, off_cycles: 500 },
+        ArrivalKind::Fixed { interval: 150 },
+    ];
+    for arrival in kinds {
+        let c = ServeConfig { arrival, ..cfg(33, 0, AdmissionPolicy::Queue) };
+        let reference = run(c.clone(), fabric(TopologyKind::Mesh), StepMode::EventDriven);
+        assert!(reference.offered > 0, "{arrival:?}: no arrivals");
+        for mode in [StepMode::FullTick, StepMode::Parallel { threads: 4 }] {
+            let other = run(c.clone(), fabric(TopologyKind::Mesh), mode);
+            assert_reports_identical(&reference, &other, &format!("{arrival:?} {mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn replay_is_bit_identical_by_seed() {
+    let go = |seed: u64| {
+        run(
+            cfg(seed, 12, AdmissionPolicy::Queue),
+            fabric(TopologyKind::Torus),
+            StepMode::Parallel { threads: 2 },
+        )
+    };
+    let a = go(7);
+    let b = go(7);
+    assert_reports_identical(&a, &b, "same seed, same mode");
+    // A different seed draws different arrival times, so the recorded
+    // dispositions cannot coincide.
+    let c = go(8);
+    assert_ne!(a.dispositions, c.dispositions, "seed must steer the run");
+}
+
+#[test]
+fn overload_policies_diverge_as_specified() {
+    // Well past the ~8-inflight service capacity of the 4x4 fabric.
+    let overload =
+        |policy| run(cfg(5, 50, policy), fabric(TopologyKind::Mesh), StepMode::EventDriven);
+    let shed = overload(AdmissionPolicy::Shed);
+    assert!(shed.rejected_shed > 0, "shed policy must shed past saturation");
+    assert_eq!(shed.pending_peak, 0, "shed policy never queues");
+
+    let queue = overload(AdmissionPolicy::Queue);
+    assert!(queue.pending_peak <= ServeConfig::default().queue_cap, "queue bound violated");
+
+    let bp = overload(AdmissionPolicy::Backpressure);
+    assert_eq!(bp.rejected(), 0, "backpressure never rejects");
+    assert!(
+        bp.pending_peak > queue.pending_peak,
+        "unbounded queue must grow past the bounded one at 6x overload"
+    );
+}
+
+#[test]
+fn faulted_fabric_stays_deterministic_and_conserves_accounting() {
+    let faulted = || {
+        fabric(TopologyKind::Mesh)
+            .with_faults(FaultPlan::parse("router:5@1500;timeout:3000").expect("valid fault spec"))
+    };
+    let reference = run(cfg(13, 8, AdmissionPolicy::Queue), faulted(), StepMode::EventDriven);
+    assert_eq!(
+        reference.admitted,
+        reference.completed + reference.failed + reference.unfinished,
+        "admitted requests must reach a terminal state on a degraded fabric"
+    );
+    assert_eq!(reference.offered, reference.admitted + reference.rejected());
+    for mode in [StepMode::FullTick, StepMode::Parallel { threads: 2 }] {
+        let other = run(cfg(13, 8, AdmissionPolicy::Queue), faulted(), mode);
+        assert_reports_identical(&reference, &other, &format!("faulted {mode:?}"));
+    }
+}
