@@ -3,7 +3,8 @@
 
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
 	bench-scaling examples-smoke doc clean topo-sweep topo-matrix \
-	golden-bless fault-sweep fault-matrix serve-sim serve-smoke
+	golden-bless fault-sweep fault-matrix serve-sim serve-smoke \
+	resilience-sweep resilience-smoke
 
 all: tier1
 
@@ -32,14 +33,17 @@ bench-smoke:
 	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_simcore.json \
 		cargo bench --bench simcore
 
-# Rewrite BENCH_simcore.json + BENCH_serve.json from a full local run
-# (commit the result). Includes the sharded-stepper scaling curve so the
-# baseline keeps its parallel_net_* entries across recalibrations.
+# Rewrite BENCH_simcore.json + BENCH_serve.json + BENCH_resilience.json
+# from a full local run (commit the result). Includes the sharded-stepper
+# scaling curve so the baseline keeps its parallel_net_* entries across
+# recalibrations.
 bench-baseline:
 	TORRENT_BENCH_SCALING=1 TORRENT_BENCH_JSON=BENCH_simcore.json \
 		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench simcore
 	TORRENT_BENCH_JSON=BENCH_serve.json \
 		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench serve
+	TORRENT_BENCH_JSON=BENCH_resilience.json \
+		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench resilience
 
 # The sharded-stepper scaling curve (cycles/s vs threads at 8x8 through
 # 64x64; ISSUE 7 satellite). Prints M cycles/s and the speedup vs t=1
@@ -94,6 +98,26 @@ serve-smoke:
 	cargo test --release --test serving
 	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_serve.json \
 		cargo bench --bench serve
+
+# The full resilience sweep: serving under paired seeded fault
+# schedules, fail-stop vs restream vs resume vs resume+reroute; writes
+# resilience.json + resilience.md (EXPERIMENTS.md §Resilience sweep).
+# Every in-tree guarantee (strictly fewer re-streamed bytes under
+# resume, byte-exact survivors, availability ordering, cross-mode
+# parity) is asserted inside the sweep.
+resilience-sweep:
+	cargo run --release -- resilience-sweep --out resilience
+
+# CI smoke: the quick seeded resilience sweep (guarantees asserted
+# internally), one faulted serve-sim leg per fabric, and one iteration
+# of the resilience bench against the committed BENCH_resilience.json.
+resilience-smoke:
+	cargo run --release -- resilience-sweep --quick --out target/resilience_smoke
+	cargo run --release -- serve-sim --faults "router:5@1500;timeout:1200;resume;reroute" --retries 3
+	cargo run --release -- serve-sim --topology torus --faults "router:5@1500;timeout:1200;resume;reroute" --retries 3
+	cargo run --release -- serve-sim --topology ring --faults "router:5@1500+2000;timeout:1200;resume" --retries 3
+	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_resilience.json \
+		cargo bench --bench resilience
 
 # Measure and commit the golden mesh cycle pins (rust/tests/
 # golden_cycles.tsv). Run once on the first machine with a toolchain;

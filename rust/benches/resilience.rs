@@ -1,0 +1,125 @@
+//! Resilience benchmarks — wall-clock cost of serving under injected
+//! faults (ISSUE 9), plus the availability/goodput/re-streamed-bytes
+//! summary the baseline records.
+//!
+//! Three legs: a fail-stop faulted serving run (repair disarmed, client
+//! retry only), the same schedule under resume+reroute repair, and the
+//! quick resilience sweep (which re-asserts the resume/reroute
+//! guarantees internally — a panic here is a correctness failure, not a
+//! slow run). The simulated counters printed per leg are seed-exact and
+//! machine-independent; only the milliseconds vary.
+//!
+//! CI integration mirrors `serve`: `TORRENT_BENCH_JSON` writes a
+//! `torrent-bench-v1` baseline, `TORRENT_BENCH_BASELINE` compares p50s
+//! against the committed `BENCH_resilience.json` and fails on >2x
+//! calibrated regressions.
+
+mod common;
+
+use torrent::analysis::experiments;
+use torrent::serve::{run, AdmissionPolicy, ArrivalKind, RetryPolicy, ServeConfig, ServeReport};
+use torrent::sim::{FaultPlan, StepMode};
+use torrent::soc::SocConfig;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        seed: 17,
+        horizon: 6_000,
+        drain: 80_000,
+        arrival: ArrivalKind::Poisson { rate_per_kcycle: 4 },
+        policy: AdmissionPolicy::Queue,
+        retry: RetryPolicy { max_attempts: 3, base_backoff: 256, max_backoff: 2_048 },
+        ..ServeConfig::default()
+    }
+}
+
+fn fabric(spec: &str) -> SocConfig {
+    let plan = FaultPlan::parse(spec).expect("bench fault spec");
+    SocConfig::custom(4, 4, 64 * 1024).with_faults(plan)
+}
+
+fn telemetry(r: &ServeReport) {
+    println!(
+        "  -> {} offered, {} completed, availability {:.4}, goodput {} B, \
+         re-streamed {} B, repaired {}, retried {}, p99 = {} CC",
+        r.offered,
+        r.completed,
+        r.availability(),
+        r.goodput_bytes,
+        r.restreamed_bytes,
+        r.repaired_tasks,
+        r.retried,
+        r.p99()
+    );
+}
+
+fn main() {
+    common::banner("resilience: serving-under-faults benchmarks");
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    // 1. Fail-stop: the fault lands, repair is disarmed, only client
+    // retry fights for availability. The wall-clock floor for a
+    // degraded run.
+    let mut last = None;
+    let s = common::bench("resilience_4x4_failstop", 1, common::iters(5), || {
+        last = Some(run(
+            cfg(),
+            fabric("router:5@1500;timeout:1200;norepair"),
+            StepMode::EventDriven,
+        ));
+    });
+    telemetry(&last.take().expect("bench ran"));
+    results.push(("resilience_4x4_failstop".to_string(), s.p50));
+
+    // 2. Same schedule with the full recovery stack armed: watermark
+    // resume + path-diverse reroute. Buys availability back for the
+    // price of the repair machinery — that price is what this leg
+    // tracks.
+    let s = common::bench("resilience_4x4_resume_reroute", 1, common::iters(5), || {
+        last = Some(run(
+            cfg(),
+            fabric("router:5@1500;timeout:1200;resume;reroute"),
+            StepMode::EventDriven,
+        ));
+    });
+    telemetry(&last.take().expect("bench ran"));
+    results.push(("resilience_4x4_resume_reroute".to_string(), s.p50));
+
+    // 3. The quick sweep end-to-end: closed-loop probe + four policy
+    // postures with every in-tree guarantee asserted. Panics on any
+    // violation, so this leg is also a correctness smoke.
+    let s = common::bench("resilience_quick_sweep", 0, common::iters(3), || {
+        let (rows, _) = experiments::resilience_sweep(2025, true);
+        assert_eq!(rows.len(), 4, "quick sweep emits one row per policy");
+    });
+    results.push(("resilience_quick_sweep".to_string(), s.p50));
+
+    // Baseline plumbing (see Makefile `bench-baseline` / `resilience-smoke`).
+    if let Ok(path) = std::env::var("TORRENT_BENCH_JSON") {
+        let calibrated = std::env::var("TORRENT_BENCH_CALIBRATED").is_ok();
+        let note = if calibrated {
+            "calibrated from a real run via `make bench-baseline`"
+        } else {
+            "placeholder written without calibration; run `make bench-baseline`"
+        };
+        common::write_bench_json(&path, "resilience", calibrated, note, &results)
+            .expect("write bench JSON");
+        println!("wrote baseline {path} (calibrated={calibrated})");
+    }
+    if let Ok(path) = std::env::var("TORRENT_BENCH_BASELINE") {
+        common::banner("resilience: baseline comparison");
+        match common::read_bench_json(&path) {
+            Err(e) => {
+                eprintln!("baseline unavailable: {e}");
+                std::process::exit(1);
+            }
+            Ok(base) => {
+                let regressions = common::count_regressions(&results, &base);
+                if regressions > 0 {
+                    eprintln!("{regressions} bench regression(s) vs {path}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+}

@@ -216,6 +216,8 @@ pub fn fault_sweep(seed: u64, trials: usize) -> (Vec<FaultSweepRow>, Table) {
                         faults: Vec::new(),
                         detect_timeout: 2_000,
                         repair,
+                        resume: false,
+                        reroute: false,
                     };
                     for _ in 0..rate {
                         // Never the initiator: a dead source has nothing
@@ -227,7 +229,7 @@ pub fn fault_sweep(seed: u64, trials: usize) -> (Vec<FaultSweepRow>, Table) {
                         } else {
                             FaultKind::FollowerDrop { node }
                         };
-                        plan.faults.push(Fault { at_cycle, kind });
+                        plan.faults.push(Fault::new(at_cycle, kind));
                     }
                     let mut c = Coordinator::new(cfg.with_faults(plan));
                     let pattern: Vec<u8> =
@@ -509,6 +511,214 @@ pub fn serve_sweep(seed: u64, quick: bool) -> (Vec<crate::serve::ServeSweepRow>,
     (rows, t)
 }
 
+/// ISSUE 9 resilience sweep: the serving loop under injected faults,
+/// comparing four repair postures on availability, goodput, re-streamed
+/// bytes and tail latency — plus a deterministic closed-loop probe that
+/// pins the resume/reroute guarantees byte-for-byte.
+///
+/// Postures, per paired fault schedule (identical workload + faults):
+///   * `fail-stop` — detection only: stalled tasks fail, clients retry;
+///   * `restream` — repair re-chains survivors, re-streams in full;
+///   * `resume` — repair re-streams only the undelivered tail;
+///   * `resume+reroute` — resume plus waypoint routes around damage.
+///
+/// In-tree guarantees, re-checked on every sweep, not just in tests:
+///   * the probe's resumed repair re-streams strictly fewer bytes than
+///     the full re-stream, and the survivor payload is byte-exact in
+///     both postures;
+///   * per paired seed, availability(resume+reroute) >=
+///     availability(fail-stop);
+///   * every cell (and the probe) is bit-identical across FullTick,
+///     EventDriven and Parallel{2} stepping.
+pub fn resilience_sweep(seed: u64, quick: bool) -> (Vec<crate::serve::ResilienceRow>, Table) {
+    use crate::serve::{
+        self, AdmissionPolicy, ArrivalKind, ResilienceRow, RetryPolicy, ServeConfig,
+    };
+    use crate::sim::{Fault, FaultKind, FaultPlan, StepMode};
+    use crate::util::stream;
+
+    let modes =
+        [StepMode::EventDriven, StepMode::FullTick, StepMode::Parallel { threads: 2 }];
+
+    // --- Closed-loop probe: the resume guarantee, pinned exactly -------
+    // 4x4 mesh, 64 KB chain 0 -> 4 -> 5; router 4 dies mid-stream. The
+    // back route 5 -> 0 crosses the dead router, so both cells need
+    // reroute; the `resume` cell re-streams only the tail stranded above
+    // survivor 5's watermark.
+    let probe = |spec: &str, mode: StepMode| -> (u64, u64) {
+        let bytes = 64 * 1024;
+        let cfg = SocConfig::custom(4, 4, 256 * 1024)
+            .with_faults(FaultPlan::parse(spec).expect("valid probe spec"));
+        let mut c = Coordinator::with_step_mode(cfg, mode);
+        let src = NodeId(0);
+        let payload: Vec<u8> = (0..bytes).map(|i| (i * 131 % 251) as u8).collect();
+        let base = c.soc.map.base_of(src);
+        c.soc.nodes[src.0].mem.write(base, &payload);
+        let t = c
+            .submit_simple(
+                src,
+                &[NodeId(4), NodeId(5)],
+                bytes,
+                EngineKind::Torrent(Strategy::Greedy),
+                true,
+            )
+            .expect("valid probe request");
+        let report = c.run_to_completion(4_000_000);
+        let restreamed = match c.record(t).unwrap().outcome.clone() {
+            Some(crate::coordinator::TaskOutcome::Repaired { restreamed_bytes, .. }) => {
+                restreamed_bytes
+            }
+            o => panic!("probe must end Repaired ({spec}), got {o:?}"),
+        };
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        assert_eq!(
+            c.soc.nodes[5].mem.peek(c.soc.map.base_of(NodeId(5)) + half, bytes),
+            &payload[..],
+            "probe survivor must be byte-exact ({spec})"
+        );
+        (restreamed, report.cycles)
+    };
+    let mut full: Option<(u64, u64)> = None;
+    let mut resumed: Option<(u64, u64)> = None;
+    for mode in modes {
+        let f = probe("router:4@600;timeout:1000;reroute", mode);
+        let r = probe("router:4@600;timeout:1000;reroute;resume", mode);
+        assert_eq!(*full.get_or_insert(f), f, "full-restream probe diverged in {mode:?}");
+        assert_eq!(*resumed.get_or_insert(r), r, "resume probe diverged in {mode:?}");
+    }
+    let (full, resumed) = (full.unwrap().0, resumed.unwrap().0);
+    assert!(
+        resumed < full,
+        "resume must re-stream strictly fewer bytes ({resumed} vs {full})"
+    );
+
+    // --- Serving cells: fabric x policy x seed, paired schedules -------
+    let fabrics: Vec<TopologyKind> = if quick {
+        vec![TopologyKind::Mesh]
+    } else {
+        vec![TopologyKind::Mesh, TopologyKind::Torus]
+    };
+    let seeds: Vec<u64> = if quick { vec![seed] } else { vec![seed, seed + 1] };
+    let policies: [(&'static str, bool, bool, bool); 4] = [
+        ("fail-stop", false, false, false),
+        ("restream", true, false, false),
+        ("resume", true, true, false),
+        ("resume+reroute", true, true, true),
+    ];
+    let mut rows = Vec::new();
+    let mut t = Table::new("Resilience sweep — serving under injected faults").header([
+        "fabric",
+        "policy",
+        "seed",
+        "offered",
+        "completed",
+        "failed",
+        "rejected",
+        "avail%",
+        "goodput[B]",
+        "restream[B]",
+        "repaired",
+        "retried",
+        "p99",
+    ]);
+    for &topo in &fabrics {
+        for &s in &seeds {
+            let mut failstop_avail: Option<f64> = None;
+            for (label, repair, resume, reroute) in policies {
+                // One fault stream per (fabric, seed): every posture
+                // replays the identical schedule, so cells are paired.
+                let mut rng =
+                    crate::util::rng(s, stream::FAULTS + 0x9100 + topo as u64);
+                let mut faults = Vec::new();
+                for _ in 0..rng.range(1, 2) {
+                    let node = rng.range(1, 15) as usize;
+                    let at_cycle = rng.range(1_500, 3_500);
+                    faults.push(Fault::new(at_cycle, FaultKind::RouterKill { node }));
+                }
+                let plan =
+                    FaultPlan { faults, detect_timeout: 1_200, repair, resume, reroute };
+                let soc = SocConfig::custom(4, 4, 64 * 1024)
+                    .with_topology(topo)
+                    .with_faults(plan);
+                let cfg = ServeConfig {
+                    seed: s,
+                    horizon: 6_000,
+                    drain: 80_000,
+                    arrival: ArrivalKind::Poisson { rate_per_kcycle: 4 },
+                    policy: AdmissionPolicy::Queue,
+                    retry: RetryPolicy {
+                        max_attempts: 3,
+                        base_backoff: 256,
+                        max_backoff: 2_048,
+                    },
+                    ..ServeConfig::default()
+                };
+                let r = serve::run(cfg.clone(), soc.clone(), StepMode::EventDriven);
+                for mode in [StepMode::FullTick, StepMode::Parallel { threads: 2 }] {
+                    let other = serve::run(cfg.clone(), soc.clone(), mode);
+                    assert_eq!(
+                        r.dispositions,
+                        other.dispositions,
+                        "{} {label} seed {s}: dispositions diverged under {mode:?}",
+                        topo.label()
+                    );
+                    assert_eq!(
+                        (r.restreamed_bytes, r.goodput_bytes, r.retry_attempts),
+                        (other.restreamed_bytes, other.goodput_bytes, other.retry_attempts),
+                        "{} {label} seed {s}: telemetry diverged under {mode:?}",
+                        topo.label()
+                    );
+                }
+                match label {
+                    "fail-stop" => failstop_avail = Some(r.availability()),
+                    "resume+reroute" => {
+                        let fs = failstop_avail.expect("fail-stop cell runs first");
+                        assert!(
+                            r.availability() >= fs,
+                            "{} seed {s}: resume+reroute availability {:.4} fell \
+                             below fail-stop {fs:.4}",
+                            topo.label(),
+                            r.availability()
+                        );
+                    }
+                    _ => {}
+                }
+                t.row([
+                    topo.label().to_string(),
+                    label.to_string(),
+                    s.to_string(),
+                    r.offered.to_string(),
+                    r.completed.to_string(),
+                    r.failed.to_string(),
+                    r.rejected().to_string(),
+                    fnum(100.0 * r.availability(), 1),
+                    r.goodput_bytes.to_string(),
+                    r.restreamed_bytes.to_string(),
+                    r.repaired_tasks.to_string(),
+                    r.retried.to_string(),
+                    r.p99().to_string(),
+                ]);
+                rows.push(ResilienceRow {
+                    fabric: topo.label(),
+                    policy: label,
+                    seed: s,
+                    offered: r.offered,
+                    completed: r.completed,
+                    failed: r.failed,
+                    rejected: r.rejected(),
+                    availability: r.availability(),
+                    goodput_bytes: r.goodput_bytes,
+                    restreamed_bytes: r.restreamed_bytes,
+                    repaired_tasks: r.repaired_tasks,
+                    retried: r.retried,
+                    p99: r.p99(),
+                });
+            }
+        }
+    }
+    (rows, t)
+}
+
 /// Fig 11 + Fig 1(d): area/power breakdowns and scaling.
 pub fn fig11() -> Vec<Table> {
     use crate::analysis::{area, power};
@@ -711,6 +921,33 @@ mod tests {
         assert!(rows[0].offered < rows[2].offered, "{rows:?}");
         let rendered = table.render();
         for needle in ["mesh", "greedy", "p999"] {
+            assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
+        }
+    }
+
+    #[test]
+    fn resilience_sweep_quick_holds_guarantees() {
+        // resilience_sweep asserts the resume inequality, byte-exactness
+        // and cross-mode bit-identity internally; reaching the end means
+        // all of them held.
+        let (rows, table) = resilience_sweep(17, true);
+        assert_eq!(rows.len(), 4, "one fabric x one seed x four postures");
+        let labels: Vec<&str> = rows.iter().map(|r| r.policy).collect();
+        assert_eq!(labels, ["fail-stop", "restream", "resume", "resume+reroute"]);
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.availability), "{r:?}");
+            assert!(r.offered > 0, "no arrivals inside the horizon: {r:?}");
+            assert!(
+                r.completed + r.failed + r.rejected <= r.offered,
+                "terminal outcomes exceed offered requests: {r:?}"
+            );
+            if r.policy == "fail-stop" {
+                assert_eq!(r.repaired_tasks, 0, "fail-stop must never repair: {r:?}");
+                assert_eq!(r.restreamed_bytes, 0, "{r:?}");
+            }
+        }
+        let rendered = table.render();
+        for needle in ["fail-stop", "resume+reroute", "restream[B]"] {
             assert!(rendered.contains(needle), "missing {needle}:\n{rendered}");
         }
     }

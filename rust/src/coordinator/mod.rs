@@ -61,6 +61,7 @@ use std::fmt;
 
 use crate::analysis::eta_p2mp;
 use crate::dma::torrent::dse::AffinePattern;
+use crate::dma::torrent::{ChainDest, ChainTask, ChainVias};
 use crate::dma::xdma::XDMA_SUBTASK_BIT;
 use crate::dma::{Engine as _, TaskPhase, TaskResult, TaskSpec};
 use crate::noc::{Degraded, NodeId};
@@ -149,8 +150,20 @@ pub enum TaskOutcome {
     Repairing { suspect: NodeId },
     /// Replacement chains completed. `served` destinations got their
     /// data; `lost` were unreachable on the degraded fabric (dead, or no
-    /// clean route from the source).
-    Repaired { suspect: NodeId, served: usize, lost: Vec<NodeId> },
+    /// clean route from the source). The byte fields account the repair:
+    /// `served_bytes` is the payload confirmed delivered (full size per
+    /// served destination), `lost_bytes` the payload written off with
+    /// the unreachable ones, and `restreamed_bytes` what the repair
+    /// chains actually re-sent — strictly the undelivered tails when the
+    /// fault plan arms `resume`, full payloads otherwise.
+    Repaired {
+        suspect: NodeId,
+        served: usize,
+        lost: Vec<NodeId>,
+        served_bytes: u64,
+        lost_bytes: u64,
+        restreamed_bytes: u64,
+    },
     /// The task is closed without completing. `suspect` names the hop
     /// the diagnosis blamed, when there was a chain to diagnose.
     Failed { suspect: Option<NodeId>, reason: String },
@@ -219,9 +232,9 @@ impl fmt::Display for TaskOutcome {
             TaskOutcome::Repairing { suspect } => {
                 write!(f, "repairing (suspect {suspect:?})")
             }
-            TaskOutcome::Repaired { suspect, served, lost } => write!(
+            TaskOutcome::Repaired { suspect, served, lost, restreamed_bytes, .. } => write!(
                 f,
-                "repaired (suspect {suspect:?}, served {served}, lost {})",
+                "repaired (suspect {suspect:?}, served {served}, lost {}, restreamed {restreamed_bytes} B)",
                 lost.len()
             ),
             TaskOutcome::Failed { suspect, reason } => match suspect {
@@ -251,8 +264,14 @@ mod status_string_tests {
     #[test]
     fn task_outcome_kind_and_display_are_stable() {
         let repairing = TaskOutcome::Repairing { suspect: NodeId(3) };
-        let repaired =
-            TaskOutcome::Repaired { suspect: NodeId(3), served: 2, lost: vec![NodeId(5)] };
+        let repaired = TaskOutcome::Repaired {
+            suspect: NodeId(3),
+            served: 2,
+            lost: vec![NodeId(5)],
+            served_bytes: 8192,
+            lost_bytes: 4096,
+            restreamed_bytes: 4096,
+        };
         let failed =
             TaskOutcome::Failed { suspect: None, reason: "unreachable".to_string() };
         assert_eq!(repairing.kind(), "repairing");
@@ -263,6 +282,7 @@ mod status_string_tests {
             assert!(o.to_string().starts_with(o.kind()), "{o}");
         }
         assert!(repaired.to_string().contains("served 2"));
+        assert!(repaired.to_string().contains("restreamed 4096 B"));
         assert!(failed.to_string().contains("unreachable"));
     }
 }
@@ -322,14 +342,32 @@ impl RunReport {
 /// those are three different physical paths, so a chain is only viable
 /// when all three are undamaged — a plan validated on data legs alone
 /// can re-stall on a cfg or grant route the planner never looked at.
+///
+/// With `reroute` set a dirty leg may still be viable through a
+/// waypoint candidate ([`Degraded::clean_route`]): each of the three
+/// legs is resolved independently to its first clean route (the default
+/// physical route first), and the chosen waypoints come back per hop as
+/// [`ChainVias`] for the repair cfgs to carry. A hop is dropped only
+/// when some leg has no clean candidate at all.
 pub fn plan_repair_chains<T>(
     deg: &Degraded,
     strategy: sched::Strategy,
     src: NodeId,
     mut remaining: Vec<(NodeId, T)>,
-) -> (Vec<Vec<(NodeId, T)>>, Vec<NodeId>) {
+    reroute: bool,
+) -> (Vec<Vec<(NodeId, T, ChainVias)>>, Vec<NodeId>) {
     let mut chains = Vec::new();
     let mut lost = Vec::new();
+    // First clean route for one leg: `Some(None)` = the default physical
+    // route is clean, `Some(Some(via))` = detour through a waypoint,
+    // `None` = no clean candidate exists.
+    let leg = |from: NodeId, to: NodeId| -> Option<Option<NodeId>> {
+        if reroute {
+            deg.clean_route(from, to)
+        } else {
+            deg.path_is_clean(from, to).then_some(None)
+        }
+    };
     remaining.retain(|(n, _)| {
         let alive = deg.node_alive(*n);
         if !alive {
@@ -339,31 +377,40 @@ pub fn plan_repair_chains<T>(
     });
     while !remaining.is_empty() {
         let (_, ordered) = sched::schedule_pairs(strategy, deg, src, remaining);
-        let mut chain: Vec<(NodeId, T)> = Vec::new();
+        let mut chain: Vec<(NodeId, T, ChainVias)> = Vec::new();
         let mut rest: Vec<(NodeId, T)> = Vec::new();
         let mut prev = src;
         let mut broken = false;
         for (node, t) in ordered {
             // cfg src->node, data prev->node, grant/finish node->prev.
-            let viable = !broken
-                && deg.path_is_clean(src, node)
-                && deg.path_is_clean(prev, node)
-                && deg.path_is_clean(node, prev);
-            if viable {
-                prev = node;
-                chain.push((node, t));
-            } else if broken {
-                rest.push((node, t));
+            let vias = if broken {
+                None
             } else {
-                broken = true;
-                if !deg.path_is_clean(src, node) || !deg.path_is_clean(node, src) {
-                    // Even a one-hop chain needs cfg/data out (src->node)
-                    // and grant/finish back (node->src); with either route
-                    // damaged the destination is unreachable — XY routing
-                    // has no alternative path.
-                    lost.push(node);
-                } else {
-                    rest.push((node, t));
+                (|| {
+                    Some(ChainVias {
+                        cfg: leg(src, node)?,
+                        data: leg(prev, node)?,
+                        back: leg(node, prev)?,
+                    })
+                })()
+            };
+            match vias {
+                Some(v) => {
+                    prev = node;
+                    chain.push((node, t, v));
+                }
+                None if broken => rest.push((node, t)),
+                None => {
+                    broken = true;
+                    if leg(src, node).is_none() || leg(node, src).is_none() {
+                        // Even a one-hop chain needs cfg/data out
+                        // (src->node) and grant/finish back (node->src);
+                        // with no clean candidate in either direction the
+                        // destination is unreachable.
+                        lost.push(node);
+                    } else {
+                        rest.push((node, t));
+                    }
                 }
             }
         }
@@ -522,6 +569,16 @@ pub struct Record {
     repair_finish: u64,
     /// Destinations written off by repair planning so far.
     lost_dests: Vec<NodeId>,
+    /// Bytes the repair rounds re-streamed so far (payload submitted on
+    /// replacement chains; tails only when `resume` is armed).
+    restreamed: u64,
+    /// Per-destination resume watermark: bytes confirmed delivered
+    /// before the current repair round — the split base its live tail
+    /// chain (if any) streams from.
+    resume_mark: BTreeMap<NodeId, usize>,
+    /// Destinations each live repair chain serves, so a completed chain
+    /// can advance its members' watermarks to "fully delivered".
+    repair_members: BTreeMap<u32, Vec<NodeId>>,
 }
 
 /// A validated request waiting in an admission queue.
@@ -801,6 +858,9 @@ impl Coordinator {
             repair_live: Vec::new(),
             repair_finish: 0,
             lost_dests: Vec::new(),
+            restreamed: 0,
+            resume_mark: BTreeMap::new(),
+            repair_members: BTreeMap::new(),
         });
         self.open_tasks += 1;
         // Fast path: a task with no unfinished dependencies goes straight
@@ -967,6 +1027,14 @@ impl Coordinator {
                         let rec = &mut self.records[pidx];
                         rec.repair_live.retain(|&t| t != res.task);
                         rec.repair_finish = rec.repair_finish.max(res.finished_at);
+                        if let Some(members) = rec.repair_members.remove(&res.task) {
+                            // A finished chain's destinations hold their
+                            // full payload: a later repair round must not
+                            // re-stream them.
+                            for n in members {
+                                rec.resume_mark.insert(n, rec.bytes);
+                            }
+                        }
                         if rec.repair_live.is_empty() && rec.result.is_none() {
                             let mut lost = std::mem::take(&mut rec.lost_dests);
                             lost.sort_unstable_by_key(|n| n.0);
@@ -983,8 +1051,15 @@ impl Coordinator {
                                 bytes: rec.bytes,
                                 n_dests: served,
                             });
-                            rec.outcome =
-                                Some(TaskOutcome::Repaired { suspect, served, lost });
+                            let lost_bytes = lost.len() as u64 * rec.bytes as u64;
+                            rec.outcome = Some(TaskOutcome::Repaired {
+                                suspect,
+                                served,
+                                lost,
+                                served_bytes: served as u64 * rec.bytes as u64,
+                                lost_bytes,
+                                restreamed_bytes: rec.restreamed,
+                            });
                             self.open_tasks -= 1;
                             completed = true;
                         }
@@ -1247,15 +1322,51 @@ impl Coordinator {
     /// either re-chain the still-reachable destinations over the degraded
     /// fabric (fresh engine ids — the cancelled id's stale traffic is
     /// swallowed by the engines) or close the task as failed.
+    ///
+    /// With `resume` armed the delivered prefix of every survivor is
+    /// kept — buffered bytes are salvaged into its scratchpad before the
+    /// cancel wipes them — and only the undelivered tail is re-streamed.
+    /// With `reroute` armed a hop whose default route is fault-dirty may
+    /// still be chained through a clean waypoint candidate (see
+    /// [`plan_repair_chains`]).
     fn handle_stall(&mut self, idx: usize, now: u64) {
         let task = self.records[idx].task;
         let suspect = self.diagnose(task);
-        // Tear down engine state for the stalled ids on every node, so
-        // the fabric can drain and a replacement cannot double-report.
+        let resume = self.soc.cfg.faults.resume;
+        let reroute = self.soc.cfg.faults.reroute;
         let mut ids = vec![task.0];
         ids.extend(self.records[idx].repair_live.drain(..));
+        // Resume: read back each survivor's delivery watermark — and
+        // salvage buffered-but-unscattered prefixes into its scratchpad —
+        // BEFORE the cancel below wipes the follower state. Marks from a
+        // repair chain are relative to that chain's tail and rebased
+        // onto the recorded watermark when grouping.
+        let mut fresh_marks: BTreeMap<NodeId, usize> = BTreeMap::new();
+        if resume {
+            if let Some((_, dests, with_data)) = &self.records[idx].repair_spec {
+                let with_data = *with_data;
+                for (dn, _) in dests {
+                    let n = &mut self.soc.nodes[dn.0];
+                    let mut got = 0usize;
+                    for &tid in &ids {
+                        let m = if with_data {
+                            n.torrent.salvage(tid, &mut n.mem)
+                        } else {
+                            n.torrent.follower_watermark(tid).unwrap_or(0)
+                        };
+                        got = got.max(m);
+                    }
+                    if got > 0 {
+                        fresh_marks.insert(*dn, got);
+                    }
+                }
+            }
+        }
+        // Tear down engine state for the stalled ids on every node, so
+        // the fabric can drain and a replacement cannot double-report.
         for id in &ids {
             self.repair_parent.remove(id);
+            self.records[idx].repair_members.remove(id);
         }
         for node in &mut self.soc.nodes {
             for engine in node.engines_mut() {
@@ -1298,33 +1409,111 @@ impl Coordinator {
                 !dead
             })
             .collect();
+        // Partition survivors by resumable watermark: the bytes already
+        // confirmed delivered, floored (to a fixpoint) to a boundary both
+        // the read and that destination's write pattern can split at — a
+        // partial block re-streams; the overlapping re-write is
+        // idempotent. Destinations already holding their full payload
+        // (the stall was in the finish back-prop) are served without
+        // re-streaming anything.
+        let total = read.total_bytes();
+        let mut groups: BTreeMap<usize, Vec<(NodeId, AffinePattern)>> = BTreeMap::new();
+        let mut fully_served = 0usize;
+        for (n, pat) in dests {
+            let mut k = 0usize;
+            if resume {
+                let base = self.records[idx].resume_mark.get(&n).copied().unwrap_or(0);
+                k = (base + fresh_marks.get(&n).copied().unwrap_or(0)).min(total);
+                loop {
+                    let k2 = read.split_floor(pat.split_floor(k));
+                    if k2 == k {
+                        break;
+                    }
+                    k = k2;
+                }
+            }
+            if k >= total {
+                self.records[idx].resume_mark.insert(n, total);
+                fully_served += 1;
+                continue;
+            }
+            groups.entry(k).or_default().push((n, pat));
+        }
+        // One planning round per watermark group: every chain streams a
+        // single read tail, so destinations resuming from different
+        // boundaries cannot share a chain.
         let deg = self.soc.net.degraded_topology();
-        let (chains, lost_plan) = plan_repair_chains(&deg, strategy, src, dests);
-        lost_now.extend(lost_plan);
+        let mut planned: Vec<(AffinePattern, Vec<ChainDest>)> = Vec::new();
+        for (k, group) in groups {
+            let (chains, lost_plan) = plan_repair_chains(&deg, strategy, src, group, reroute);
+            lost_now.extend(lost_plan);
+            let read_k = if k == 0 { read.clone() } else { read.tail_at(k) };
+            for chain in chains {
+                self.records[idx].restreamed += ((total - k) * chain.len()) as u64;
+                let cdests: Vec<ChainDest> = chain
+                    .into_iter()
+                    .map(|(node, pattern, vias)| {
+                        self.records[idx].resume_mark.insert(node, k);
+                        ChainDest {
+                            node,
+                            pattern: if k == 0 { pattern } else { pattern.tail_at(k) },
+                            vias,
+                        }
+                    })
+                    .collect();
+                planned.push((read_k.clone(), cdests));
+            }
+        }
         self.records[idx].lost_dests.extend(lost_now);
-        if chains.is_empty() {
-            return self.fail(idx, suspect, "no reachable destinations");
+        if planned.is_empty() {
+            if fully_served == 0 {
+                return self.fail(idx, suspect, "no reachable destinations");
+            }
+            // Nothing left to stream: every reachable survivor already
+            // holds its payload, so the task completes as Repaired here.
+            let suspect = suspect.unwrap_or(src);
+            let rec = &mut self.records[idx];
+            let mut lost = std::mem::take(&mut rec.lost_dests);
+            lost.sort_unstable_by_key(|n| n.0);
+            lost.dedup();
+            let served = rec.n_dests - lost.len();
+            rec.result = Some(TaskResult {
+                task: rec.task.0,
+                submitted_at: rec.dispatched_at,
+                finished_at: now,
+                bytes: rec.bytes,
+                n_dests: served,
+            });
+            let lost_bytes = lost.len() as u64 * rec.bytes as u64;
+            rec.outcome = Some(TaskOutcome::Repaired {
+                suspect,
+                served,
+                lost,
+                served_bytes: served as u64 * rec.bytes as u64,
+                lost_bytes,
+                restreamed_bytes: rec.restreamed,
+            });
+            rec.repairs += 1;
+            self.open_tasks -= 1;
+            self.dispatch_ready();
+            return;
         }
         let suspect = suspect.unwrap_or(src);
-        for chain in chains {
+        for (read_k, cdests) in planned {
             let rid = self.next_task;
             self.next_task += 1;
             debug_assert!(rid & XDMA_SUBTASK_BIT == 0, "task id space exhausted");
             self.records[idx].repair_live.push(rid);
+            self.records[idx]
+                .repair_members
+                .insert(rid, cdests.iter().map(|d| d.node).collect());
             self.repair_parent.insert(rid, idx);
-            self.soc.nodes[src.0]
-                .engine_mut(engine)
-                .submit(
-                    TaskSpec {
-                        task: rid,
-                        read: read.clone(),
-                        dests: chain,
-                        with_data,
-                        drop_offset: 0,
-                    },
-                    now,
-                )
-                .expect("repair chain derived from a validated task");
+            // Submitted as a ChainTask directly: TaskSpec cannot carry
+            // the per-hop reroute waypoints the planner chose.
+            self.soc.nodes[src.0].torrent.submit(
+                ChainTask { task: rid, read: read_k, dests: cdests, with_data },
+                now,
+            );
         }
         let rec = &mut self.records[idx];
         rec.repairs += 1;
@@ -1747,10 +1936,21 @@ mod tests {
         let rec = c.record(t).unwrap();
         assert_eq!(rec.repairs, 1);
         match &rec.outcome {
-            Some(TaskOutcome::Repaired { suspect, served, lost }) => {
+            Some(TaskOutcome::Repaired {
+                suspect,
+                served,
+                lost,
+                served_bytes,
+                lost_bytes,
+                restreamed_bytes,
+            }) => {
                 assert_eq!(*suspect, NodeId(3));
                 assert_eq!(*served, 1);
                 assert_eq!(lost.as_slice(), &[NodeId(3)]);
+                // resume is off: the one survivor re-streams in full.
+                assert_eq!(*served_bytes, 2048);
+                assert_eq!(*lost_bytes, 2048);
+                assert_eq!(*restreamed_bytes, 2048);
             }
             o => panic!("expected Repaired outcome, got {o:?}"),
         }

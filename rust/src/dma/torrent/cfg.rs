@@ -40,9 +40,23 @@ pub struct TorrentCfg {
     pub axi_burst_bytes: u32,
     /// Local DSE write pattern (field F).
     pub pattern: AffinePattern,
+    /// Waypoint for packets this node sends *backward* toward `prev`
+    /// (grant/finish back-prop) when the default route is fault-dirty.
+    /// `None` on healthy chains — and then the wire encoding is
+    /// byte-identical to the pre-extension format.
+    pub via_prev: Option<NodeId>,
+    /// Waypoint for packets this node sends *forward* toward `next`
+    /// (the data stream forward).
+    pub via_next: Option<NodeId>,
 }
 
 const MAGIC: u16 = 0x70C7; // "TOrrent Cfg"
+
+/// High bit of the cfg-type word: a via extension (8 trailing bytes —
+/// via_prev u32, via_next u32) follows the pattern dims. Healthy cfgs
+/// never set it, so their encoding is bit-for-bit the legacy one and
+/// every golden cycle pin over cfg dispatch cost still holds.
+const VIA_FLAG: u16 = 0x8000;
 
 fn put_u16(v: &mut Vec<u8>, x: u16) {
     v.extend_from_slice(&x.to_le_bytes());
@@ -89,8 +103,9 @@ impl TorrentCfg {
     /// Wire encoding (little-endian, variable length with the pattern).
     pub fn encode(&self) -> Vec<u8> {
         let mut v = Vec::with_capacity(64);
+        let has_via = self.via_prev.is_some() || self.via_next.is_some();
         put_u16(&mut v, MAGIC);
-        put_u16(&mut v, self.cfg_type as u16);
+        put_u16(&mut v, self.cfg_type as u16 | if has_via { VIA_FLAG } else { 0 });
         put_u32(&mut v, self.task);
         put_u32(&mut v, self.prev.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
         put_u32(&mut v, self.next.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
@@ -104,6 +119,10 @@ impl TorrentCfg {
         for &(count, stride) in &self.pattern.dims {
             put_u32(&mut v, count as u32);
             put_i64(&mut v, stride);
+        }
+        if has_via {
+            put_u32(&mut v, self.via_prev.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
+            put_u32(&mut v, self.via_next.map(|n| n.0 as u32).unwrap_or(NONE_NODE));
         }
         v
     }
@@ -126,7 +145,9 @@ impl TorrentCfg {
         if r.u16()? != MAGIC {
             return Err("bad cfg magic".into());
         }
-        let cfg_type = match r.u16()? {
+        let type_word = r.u16()?;
+        let has_via = type_word & VIA_FLAG != 0;
+        let cfg_type = match type_word & !VIA_FLAG {
             0 => CfgType::Read,
             1 => CfgType::Write,
             t => return Err(format!("bad cfg type {t}")),
@@ -152,6 +173,19 @@ impl TorrentCfg {
             let stride = r.i64()?;
             dims.push((count, stride));
         }
+        let (via_prev, via_next) = if has_via {
+            let vp = match r.u32()? {
+                NONE_NODE => None,
+                n => Some(NodeId(n as usize)),
+            };
+            let vn = match r.u32()? {
+                NONE_NODE => None,
+                n => Some(NodeId(n as usize)),
+            };
+            (vp, vn)
+        } else {
+            (None, None)
+        };
         Ok(TorrentCfg {
             task,
             cfg_type,
@@ -161,6 +195,8 @@ impl TorrentCfg {
             chain_len,
             axi_burst_bytes,
             pattern: AffinePattern { base, elem_bytes, dims },
+            via_prev,
+            via_next,
         })
     }
 }
@@ -183,6 +219,8 @@ mod tests {
                 elem_bytes: 8,
                 dims: vec![(16, 128), (4, 2048)],
             },
+            via_prev: None,
+            via_next: None,
         }
     }
 
@@ -203,8 +241,37 @@ mod tests {
             chain_len: 1,
             axi_burst_bytes: 64,
             pattern: AffinePattern::contiguous(0, 64),
+            via_prev: None,
+            via_next: None,
         };
         assert_eq!(TorrentCfg::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn via_extension_roundtrips_and_costs_eight_bytes() {
+        let plain = sample();
+        let mut rerouted = sample();
+        rerouted.via_prev = Some(NodeId(9));
+        rerouted.via_next = None;
+        let got = TorrentCfg::decode(&rerouted.encode()).unwrap();
+        assert_eq!(got, rerouted);
+        assert_eq!(rerouted.encode().len(), plain.encode().len() + 8);
+        // Both vias set, including node 0 (must not collide with the
+        // NONE sentinel).
+        rerouted.via_next = Some(NodeId(0));
+        assert_eq!(TorrentCfg::decode(&rerouted.encode()).unwrap(), rerouted);
+    }
+
+    #[test]
+    fn via_free_encoding_is_bit_identical_to_legacy() {
+        // No via = no flag, no trailing bytes: the type word is the bare
+        // CfgType and nothing follows the pattern dims, so healthy-path
+        // cfg dispatch cost (and every golden cycle pin) is unchanged.
+        let bytes = sample().encode();
+        assert_eq!(u16::from_le_bytes([bytes[2], bytes[3]]), CfgType::Write as u16);
+        let (decoded, consumed) = TorrentCfg::decode_prefix(&bytes).unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(decoded, sample());
     }
 
     #[test]

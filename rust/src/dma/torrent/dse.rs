@@ -99,6 +99,49 @@ impl AffinePattern {
             .sum()
     }
 
+    /// Stream bytes per iteration of the *outermost* dimension — the
+    /// granularity at which a prefix of the stream can be cut off and
+    /// the remainder still expressed as one affine pattern (drop
+    /// completed outer iterations, shift the base). Contiguous patterns
+    /// split anywhere.
+    fn outer_block_bytes(&self) -> usize {
+        self.elem_bytes
+            * self.dims[..self.dims.len() - 1].iter().map(|(c, _)| *c).product::<usize>().max(1)
+    }
+
+    /// Largest resumable split point ≤ `bytes`: the longest stream
+    /// prefix not exceeding `bytes` whose *tail* is itself an affine
+    /// pattern ([`AffinePattern::tail_at`]). Contiguous patterns resume
+    /// at any byte; ND patterns floor to the outermost-iteration
+    /// boundary (partial outer rows are re-streamed — re-writing
+    /// already-delivered bytes is idempotent, losing delivered bytes is
+    /// not).
+    pub fn split_floor(&self, bytes: usize) -> usize {
+        let b = bytes.min(self.total_bytes());
+        if self.dims.is_empty() {
+            return b;
+        }
+        let block = self.outer_block_bytes();
+        (b / block) * block
+    }
+
+    /// The pattern covering stream bytes `k..total`, for `k` a valid
+    /// split point strictly inside the stream (`k == split_floor(k)`,
+    /// `k < total_bytes`).
+    pub fn tail_at(&self, k: usize) -> AffinePattern {
+        assert_eq!(k, self.split_floor(k), "tail_at off a resumable boundary");
+        assert!(k < self.total_bytes(), "tail_at past the stream");
+        if self.dims.is_empty() {
+            return AffinePattern::contiguous(self.base + k as u64, self.elem_bytes - k);
+        }
+        let done = k / self.outer_block_bytes();
+        let mut tail = self.clone();
+        let (count, stride) = *tail.dims.last().unwrap();
+        tail.dims.last_mut().unwrap().0 = count - done;
+        tail.base = (tail.base as i64 + done as i64 * stride) as u64;
+        tail
+    }
+
     /// Gather the pattern's bytes from `mem` into a stream buffer.
     pub fn gather(&self, mem: &mut Scratchpad) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.total_bytes());
@@ -192,6 +235,49 @@ mod tests {
     fn negative_stride_walks_backward() {
         let p = AffinePattern { base: 1024, elem_bytes: 8, dims: vec![(3, -64)] };
         assert_eq!(p.runs(), vec![(1024, 8), (960, 8), (896, 8)]);
+    }
+
+    #[test]
+    fn split_floor_is_any_byte_for_contiguous_and_outer_rows_otherwise() {
+        let c = AffinePattern::contiguous(0x100, 4096);
+        assert_eq!(c.split_floor(1000), 1000);
+        assert_eq!(c.split_floor(9999), 4096, "clamped to the stream");
+        // 4 rows x 8 B: resumable only at whole rows.
+        let s = AffinePattern::strided(0, 4, 8, 128);
+        assert_eq!(s.split_floor(0), 0);
+        assert_eq!(s.split_floor(7), 0);
+        assert_eq!(s.split_floor(8), 8);
+        assert_eq!(s.split_floor(23), 16);
+        assert_eq!(s.split_floor(64), 32);
+        // 3-level nest [(2,16),(2,64)] — outer block = 2 inner elems.
+        let n = AffinePattern { base: 0, elem_bytes: 4, dims: vec![(2, 16), (2, 64)] };
+        assert_eq!(n.split_floor(7), 0);
+        assert_eq!(n.split_floor(11), 8);
+    }
+
+    #[test]
+    fn tail_at_resumes_exactly_the_undelivered_suffix() {
+        let mut mem = spm();
+        for (pat, k) in [
+            (AffinePattern::contiguous(0x40, 1024), 600),
+            (AffinePattern::strided(0x40, 8, 16, 256), 48),
+            (AffinePattern { base: 0x80, elem_bytes: 4, dims: vec![(2, 16), (4, 64)] }, 16),
+        ] {
+            assert_eq!(pat.split_floor(k), k, "chosen k must be a boundary");
+            let tail = pat.tail_at(k);
+            assert_eq!(tail.total_bytes(), pat.total_bytes() - k);
+            let full = pat.gather(&mut mem);
+            assert_eq!(tail.gather(&mut mem), full[k..], "tail mismatches suffix");
+        }
+        // k = 0 is the whole pattern again.
+        let p = AffinePattern::strided(0, 4, 8, 128);
+        assert_eq!(p.tail_at(0), p);
+    }
+
+    #[test]
+    #[should_panic(expected = "resumable boundary")]
+    fn tail_at_rejects_mid_row_splits() {
+        AffinePattern::strided(0, 4, 8, 128).tail_at(5);
     }
 
     #[test]

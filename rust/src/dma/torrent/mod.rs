@@ -38,11 +38,29 @@ use self::dse::AffinePattern;
 use self::timing::*;
 use super::{Engine, EngineCtx, SubmitError, TaskPhase, TaskResult, TaskSpec};
 
+/// Waypoint overrides for the three physical routes that must be clean
+/// for a chain hop to function (see `coordinator::plan_repair_chains`):
+/// the cfg dispatch `initiator -> hop`, the data stream `prev -> hop`,
+/// and the grant/finish back-propagation `hop -> prev`. `None`
+/// everywhere (the default) keeps the fabric's own routes — healthy
+/// chains never carry waypoints, so their timing is untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChainVias {
+    /// Waypoint for the cfg packet `initiator -> node`.
+    pub cfg: Option<NodeId>,
+    /// Waypoint for the data stream `prev -> node`.
+    pub data: Option<NodeId>,
+    /// Waypoint for grant/finish `node -> prev`.
+    pub back: Option<NodeId>,
+}
+
 /// One Chainwrite destination: node + local DSE write pattern.
 #[derive(Debug, Clone)]
 pub struct ChainDest {
     pub node: NodeId,
     pub pattern: AffinePattern,
+    /// Fault-repair route overrides for this hop's three legs.
+    pub vias: ChainVias,
 }
 
 /// A P2MP (or P2P when `dests.len() == 1`) task for an initiator Torrent.
@@ -190,6 +208,47 @@ impl Torrent {
         hit
     }
 
+    /// Resume watermark of our follower role in `task`: the longest
+    /// stream prefix that is durable here — delivered in order *and*
+    /// cut at a boundary the write pattern can resume from
+    /// ([`AffinePattern::split_floor`]). `None` when this node holds no
+    /// follower state for the task.
+    pub fn follower_watermark(&self, task: u32) -> Option<usize> {
+        self.followers
+            .get(&task)
+            .map(|f| if f.scattered { f.expected_bytes } else { f.cfg.pattern.split_floor(f.bytes_arrived) })
+    }
+
+    /// Fault repair, called immediately before [`Torrent::cancel`]:
+    /// scatter the delivered stream prefix into local memory so a resume
+    /// chain only has to re-stream the tail. With-data followers buffer
+    /// the stream and scatter at the last segment (`handle`), so a
+    /// cancelled follower would otherwise discard bytes that already
+    /// crossed the fabric — and byte-exactness after resume would fail.
+    /// Returns the salvaged watermark (0 for phantom streams, which have
+    /// no bytes to make durable; their watermark still guides resume
+    /// accounting via [`Torrent::follower_watermark`]).
+    pub fn salvage(&mut self, task: u32, mem: &mut Scratchpad) -> usize {
+        let Some(f) = self.followers.get_mut(&task) else { return 0 };
+        if f.scattered {
+            return f.expected_bytes;
+        }
+        if f.stream_buf.is_empty() {
+            return 0;
+        }
+        let k = f.cfg.pattern.split_floor(f.stream_buf.len());
+        let mut off = 0;
+        for (addr, len) in f.cfg.pattern.runs() {
+            if off >= k {
+                break;
+            }
+            let take = len.min(k - off);
+            mem.write(addr, &f.stream_buf[off..off + take]);
+            off += take;
+        }
+        k
+    }
+
     /// Heartbeat ordinal for the coordinator's stall detector: any value
     /// that keeps *changing* while the local protocol state advances.
     /// The coordinator sums this across every node's engines; a sum
@@ -286,6 +345,8 @@ impl Torrent {
             chain_len: 1,
             axi_burst_bytes: SEG_BYTES as u32,
             pattern: remote_read,
+            via_prev: None,
+            via_next: None,
         };
         let cfg_back = TorrentCfg {
             task,
@@ -296,6 +357,8 @@ impl Torrent {
             chain_len: 1,
             axi_burst_bytes: SEG_BYTES as u32,
             pattern: local_write,
+            via_prev: None,
+            via_next: None,
         };
         let mut payload = cfg_remote.encode();
         payload.extend_from_slice(&cfg_back.encode());
@@ -413,7 +476,11 @@ impl Torrent {
                         ChainTask {
                             task: cfg.task,
                             read: cfg.pattern,
-                            dests: vec![ChainDest { node: pkt.src, pattern: back.pattern }],
+                            dests: vec![ChainDest {
+                                node: pkt.src,
+                                pattern: back.pattern,
+                                vias: ChainVias::default(),
+                            }],
                             with_data: true,
                         },
                         now,
@@ -573,6 +640,14 @@ impl Torrent {
                         chain_len: init.task.dests.len() as u16,
                         axi_burst_bytes: SEG_BYTES as u32,
                         pattern: d.pattern.clone(),
+                        // The hop's own backward leg, and the *next*
+                        // hop's data leg (the forward this node sends).
+                        via_prev: d.vias.back,
+                        via_next: init
+                            .task
+                            .dests
+                            .get(i + 1)
+                            .and_then(|nd| nd.vias.data),
                     };
                     let pkt = Packet::new(
                         0,
@@ -580,7 +655,8 @@ impl Torrent {
                         d.node,
                         Message::TorrentCfg { task: init.task.task },
                     )
-                    .with_payload(cfg.encode());
+                    .with_payload(cfg.encode())
+                    .with_via(d.vias.cfg);
                     net.send(self.node, pkt);
                     self.stats.cfgs_sent += 1;
                     *next_cfg += 1;
@@ -619,7 +695,8 @@ impl Torrent {
                         last,
                     };
                     let pkt = Packet::new(0, self.node, init.task.dests[0].node, msg)
-                        .with_shared_payload(seg_payload, len);
+                        .with_shared_payload(seg_payload, len)
+                        .with_via(init.task.dests[0].vias.data);
                     let n_flits = pkt.len_flits() as u32;
                     let gate: Gate = Arc::new(GateCell::new(1)); // head free
                     net.send_gated(self.node, pkt, gate.clone());
@@ -661,7 +738,8 @@ impl Torrent {
             }
             // New incoming segment: start the forwarded copy, gated.
             let fwd = Packet::new(0, node, next, Message::ChainData { task, seq, last })
-                .with_shared_payload(pkt.payload.clone(), pkt.payload_bytes);
+                .with_shared_payload(pkt.payload.clone(), pkt.payload_bytes)
+                .with_via(f.cfg.via_next);
             let gate: Gate = Arc::new(GateCell::new(allowed));
             net.send_gated(node, fwd, gate.clone());
             f.forwards.insert(id, gate);
@@ -690,7 +768,8 @@ impl Torrent {
                     let prev = f.cfg.prev.unwrap_or(f.initiator);
                     net.send(
                         node,
-                        Packet::new(0, node, prev, Message::TorrentGrant { task: *task }),
+                        Packet::new(0, node, prev, Message::TorrentGrant { task: *task })
+                            .with_via(f.cfg.via_prev),
                     );
                     f.grant_sent = true;
                     self.stats.grants_relayed += 1;
@@ -704,7 +783,8 @@ impl Torrent {
                     let prev = f.cfg.prev.unwrap_or(f.initiator);
                     net.send(
                         node,
-                        Packet::new(0, node, prev, Message::TorrentFinish { task: *task }),
+                        Packet::new(0, node, prev, Message::TorrentFinish { task: *task })
+                            .with_via(f.cfg.via_prev),
                     );
                     f.finish_sent = true;
                     self.stats.finishes_relayed += 1;
@@ -746,7 +826,7 @@ impl Engine for Torrent {
         let TaskSpec { task, read, dests, with_data, .. } = spec;
         let dests = dests
             .into_iter()
-            .map(|(node, pattern)| ChainDest { node, pattern })
+            .map(|(node, pattern)| ChainDest { node, pattern, vias: ChainVias::default() })
             .collect();
         Torrent::submit(self, ChainTask { task, read, dests, with_data }, now);
         Ok(())

@@ -150,7 +150,7 @@ impl Xdma {
             ChainTask {
                 task: sub,
                 read: a.task.read.clone(),
-                dests: vec![ChainDest { node, pattern }],
+                dests: vec![ChainDest { node, pattern, vias: Default::default() }],
                 with_data: a.task.with_data,
             },
             now,

@@ -10,9 +10,11 @@
 //! torrent topo-sweep [--seed N] [--trials N]  # hops across mesh/torus/ring
 //! torrent fault-sweep [--seed N] [--trials N] # availability: repair vs fail-stop
 //! torrent serve-sim [--seed N] [--quick] [--out PREFIX]  # open-loop serving sweep
+//!             [--faults SPEC] [--retries N]   # single faulted serving run instead
+//! torrent resilience-sweep [--seed N] [--quick] [--out PREFIX]  # fault-policy sweep
 //! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
 //!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
-//!             [--faults SPEC]             # e.g. "router:5@300;timeout:2000"
+//!             [--faults SPEC]             # e.g. "router:5@300+200;timeout:2000;resume"
 //!             [--threads N]               # sharded parallel stepper (default 1)
 //! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
 //! ```
@@ -30,15 +32,19 @@ use torrent::soc::SocConfig;
 use torrent::util::cli::Args;
 
 const USAGE: &str =
-    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|serve-sim|run|artifacts> [options]
+    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|serve-sim|resilience-sweep|run|artifacts> [options]
   fig5   [--quick]
   fig6   [--seed N] [--trials N]
   topo-sweep [--seed N] [--trials N]
   fault-sweep [--seed N] [--trials N]
   serve-sim [--seed N] [--quick] [--out PREFIX]   # writes PREFIX.json + PREFIX.md
+            [--faults SPEC] [--retries N]         # single faulted serving run instead
+  resilience-sweep [--seed N] [--quick] [--out PREFIX]  # fail-stop vs restream vs
+                                                  # resume vs resume+reroute
   run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
          [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
-         [--faults \"link:FROM-TO@C;router:N@C;straggle:NxF@C;drop:N@C;timeout:C;norepair\"]
+         [--faults \"link:FROM-TO@C[+D];router:N@C[+D];straggle:NxF@C;drop:N@C;\\
+timeout:C;norepair;resume;reroute\"]
          [--threads N]
   artifacts [--dir artifacts]";
 
@@ -92,6 +98,10 @@ fn main() {
         }
         "serve-sim" => {
             let seed = args.u64_or("seed", 2025);
+            if args.get("faults").is_some() {
+                serve_faulted(&args, seed);
+                return;
+            }
             let quick = args.flag("quick");
             let (rows, t) = experiments::serve_sweep(seed, quick);
             t.print();
@@ -109,10 +119,77 @@ fn main() {
                 println!("wrote {json} + {md}");
             }
         }
+        "resilience-sweep" => {
+            let seed = args.u64_or("seed", 2025);
+            let quick = args.flag("quick");
+            let (rows, t) = experiments::resilience_sweep(seed, quick);
+            t.print();
+            println!(
+                "{} cells; in-tree guarantees held (resume < full re-stream, \
+                 byte-exact survivors, availability ordering, cross-mode parity)",
+                rows.len()
+            );
+            if let Some(prefix) = args.get("out") {
+                let json = format!("{prefix}.json");
+                let md = format!("{prefix}.md");
+                std::fs::write(&json, torrent::serve::resilience_json(&rows))
+                    .unwrap_or_else(|e| panic!("write {json}: {e}"));
+                std::fs::write(&md, torrent::serve::resilience_markdown(&rows))
+                    .unwrap_or_else(|e| panic!("write {md}: {e}"));
+                println!("wrote {json} + {md}");
+            }
+        }
         "run" => run_custom(&args),
         "artifacts" => smoke_artifacts(&args),
         _ => println!("{USAGE}"),
     }
+}
+
+/// One open-loop serving run on a faulted 4x4 fabric
+/// (`serve-sim --faults SPEC [--retries N]`): prints the client-facing
+/// availability / goodput / repair telemetry for the given fault plan.
+fn serve_faulted(args: &Args, seed: u64) {
+    use torrent::serve::{self, RetryPolicy, ServeConfig};
+    let spec = args.get("faults").expect("checked by caller");
+    let plan = torrent::sim::FaultPlan::parse(spec)
+        .unwrap_or_else(|e| panic!("--faults: {e}"));
+    let topo = match args.get("topology") {
+        Some(t) => TopologyKind::parse(t).unwrap_or_else(|| {
+            panic!("--topology: unknown fabric {t:?} (mesh|torus|ring)")
+        }),
+        None => TopologyKind::Mesh,
+    };
+    let retries = args.u64_or("retries", 0) as u32;
+    let cfg = ServeConfig {
+        seed,
+        retry: RetryPolicy { max_attempts: retries, ..RetryPolicy::default() },
+        ..ServeConfig::default()
+    };
+    let soc = SocConfig::custom(4, 4, 64 * 1024).with_topology(topo).with_faults(plan);
+    let r = serve::run(cfg, soc, torrent::sim::StepMode::EventDriven);
+    println!(
+        "serve-sim under faults ({spec}) on {}: offered {}, completed {}, failed {}, \
+         rejected {}, unfinished {}",
+        topo.label(),
+        r.offered,
+        r.completed,
+        r.failed,
+        r.rejected(),
+        r.unfinished
+    );
+    println!(
+        "availability {:.4}, goodput {} B, repaired tasks {}, re-streamed {} B, \
+         retried {} ({} re-offers), p50/p99/p999 = {}/{}/{} CC",
+        r.availability(),
+        r.goodput_bytes,
+        r.repaired_tasks,
+        r.restreamed_bytes,
+        r.retried,
+        r.retry_attempts,
+        r.p50(),
+        r.p99(),
+        r.p999()
+    );
 }
 
 /// One-off P2MP transfer on a custom SoC.

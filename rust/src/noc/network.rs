@@ -210,6 +210,9 @@ impl NetStats {
 pub(crate) struct FaultState {
     /// Scheduled activations not yet applied.
     pub(crate) pending: Vec<Fault>,
+    /// Scheduled heals of transient faults (`@C+D` grammar) not yet
+    /// applied: `(heal cycle, the kind to revive)`, in install order.
+    pub(crate) heals: Vec<(u64, FaultKind)>,
     /// Killed routers (the cluster behind the local port dies with it).
     pub(crate) dead: Vec<bool>,
     /// `link_dead[node][dir]`: the directed channel leaving `node`
@@ -219,7 +222,10 @@ pub(crate) struct FaultState {
     pub(crate) slow: Vec<u32>,
     /// True once any activation has been applied — from then on the
     /// event-driven stepper stops skipping (degraded fabrics are ticked
-    /// cycle-by-cycle, so EventDriven trivially equals FullTick).
+    /// cycle-by-cycle, so EventDriven trivially equals FullTick). This
+    /// stays sticky even after every transient fault heals: a fabric
+    /// that was ever degraded keeps ticking cycle-by-cycle, which is
+    /// what makes heal cycles land identically under every step mode.
     pub(crate) active_any: bool,
 }
 
@@ -285,8 +291,15 @@ impl Network {
         if pending.is_empty() {
             return;
         }
+        // Transient faults (`@C+D`) schedule their own undo. A heal is
+        // always strictly after its activation (the parser enforces
+        // duration > 0), and the fabric never skips cycles once any
+        // fault has activated, so heals are processed exactly on time.
+        let heals: Vec<(u64, FaultKind)> =
+            pending.iter().filter_map(|f| f.heals_at.map(|h| (h, f.kind))).collect();
         self.faults = Some(Box::new(FaultState {
             pending,
+            heals,
             dead: vec![false; n],
             link_dead: vec![[false; 5]; n],
             slow: vec![1; n],
@@ -338,11 +351,19 @@ impl Network {
     /// every shard (the "fault activation is a barrier event" rule).
     pub(crate) fn activate_due_faults(&mut self) {
         let cycle = self.cycle;
-        let due: Vec<Fault> = {
+        let (heal_due, due): (Vec<FaultKind>, Vec<Fault>) = {
             let st = self.faults.as_mut().expect("activate without fault state");
-            if st.pending.is_empty() {
+            if st.pending.is_empty() && st.heals.is_empty() {
                 return;
             }
+            let mut heal_due = Vec::new();
+            st.heals.retain(|&(at, kind)| {
+                let fire = at <= cycle;
+                if fire {
+                    heal_due.push(kind);
+                }
+                !fire
+            });
             let mut due = Vec::new();
             st.pending.retain(|f| {
                 let fire = f.at_cycle <= cycle;
@@ -351,8 +372,14 @@ impl Network {
                 }
                 !fire
             });
-            due
+            (heal_due, due)
         };
+        // Heals apply before same-cycle activations, so a fault that
+        // re-strikes the component it just released wins — the component
+        // ends the cycle dead, never spuriously alive.
+        for kind in heal_due {
+            self.heal_fault(kind);
+        }
         for f in due {
             match f.kind {
                 FaultKind::RouterKill { node } => self.kill_router(node),
@@ -413,6 +440,29 @@ impl Network {
         let st = self.faults.as_mut().unwrap();
         st.link_dead[from][d.index()] = true;
         st.active_any = true;
+    }
+
+    /// Undo a transient fault. Revival is credit-safe by construction:
+    /// while a component is dead its boundary *sinks* flits but keeps
+    /// honouring flow control (purge and the delivery sink both return
+    /// credits; downstream slot-frees still land on a dead router's
+    /// counters), so by heal time every credit counter has converged
+    /// back to its resting value and clearing the flag is the whole
+    /// revival. `active_any` deliberately stays sticky — see the field.
+    fn heal_fault(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::RouterKill { node } => {
+                self.faults.as_mut().unwrap().dead[node] = false;
+            }
+            FaultKind::LinkKill { from, to } => {
+                let d = self.link_dir(from, to).expect("validated at install");
+                self.faults.as_mut().unwrap().link_dead[from][d.index()] = false;
+            }
+            FaultKind::Straggler { node, .. } => {
+                self.faults.as_mut().unwrap().slow[node] = 1;
+            }
+            FaultKind::FollowerDrop { .. } => unreachable!("rejected by FaultPlan::validate"),
+        }
     }
 
     /// Enqueue `pkt` for injection at `from`. Returns the packet id.
@@ -1209,6 +1259,110 @@ mod tests {
         let healthy = lat(None);
         let slowed = lat(Some("straggle:1x4@0"));
         assert!(slowed > healthy, "straggler {slowed} not slower than {healthy}");
+    }
+
+    #[test]
+    fn transient_link_kill_heals_and_traffic_resumes() {
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("link:1-2@5+20").unwrap());
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(2), Message::Raw(1)));
+        for _ in 0..25 {
+            n.tick(); // reaches cycle 25 = heal cycle
+        }
+        assert!(n.recv(NodeId(2)).is_none(), "flit crossed the severed window");
+        assert_eq!(n.stats.flits_dropped, 1);
+        // Healed: the same route works again...
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(2), Message::Raw(2)));
+        for _ in 0..100 {
+            n.tick();
+        }
+        assert_eq!(n.recv(NodeId(2)).expect("link healed").msg, Message::Raw(2));
+        // ...but the fabric stays in cycle-by-cycle mode forever.
+        assert!(n.fault_active(), "active_any must stay sticky after heal");
+        assert!(!n.can_skip(), "a once-degraded fabric never skips");
+        let d = n.degraded_topology();
+        assert!(d.path_is_clean(NodeId(0), NodeId(2)), "snapshot reflects the heal");
+    }
+
+    #[test]
+    fn transient_router_kill_revives_credit_safe() {
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("router:1@5+40").unwrap());
+        // A long stream dies at the fault boundary while the router is
+        // down — exercising purge + sink credit returns.
+        n.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)).with_phantom_payload(64 * 12),
+        );
+        for _ in 0..45 {
+            n.tick(); // cycle 45 = heal cycle
+        }
+        assert!(n.recv(NodeId(3)).is_none());
+        assert!(!n.router_dead(NodeId(1)), "router must be alive after +40");
+        // Repeated traffic through the revived router: if any credit
+        // leaked during the outage, one of these streams would wedge.
+        for round in 0..3u64 {
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(2), Message::Raw(round))
+                    .with_phantom_payload(64 * 10),
+            );
+            for _ in 0..200 {
+                n.tick();
+            }
+            assert_eq!(
+                n.recv(NodeId(2)).expect("revived router forwards").msg,
+                Message::Raw(round)
+            );
+        }
+        assert!(n.is_idle(), "no stranded fabric state after revival");
+    }
+
+    #[test]
+    fn heal_applies_before_a_same_cycle_activation() {
+        // link 1->2 heals at cycle 25; a second kill of the same link
+        // activates at 25. Heal-then-activate means the link ends the
+        // cycle dead — a flit sent after 25 must sink.
+        let mut n = net(4, 1);
+        n.install_faults(&FaultPlan::parse("link:1-2@5+20;link:1-2@25").unwrap());
+        for _ in 0..30 {
+            n.tick();
+        }
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(2), Message::Raw(9)));
+        for _ in 0..100 {
+            n.tick();
+        }
+        assert!(n.recv(NodeId(2)).is_none(), "re-kill at the heal cycle must win");
+        assert_eq!(n.stats.flits_dropped, 1);
+    }
+
+    #[test]
+    fn transient_straggler_recovers_full_speed() {
+        // Latency of a stream injected after the straggler window closes
+        // must match a healthy fabric's.
+        let lat = |spec: Option<&str>| -> u64 {
+            let mut n = net(4, 1);
+            if let Some(s) = spec {
+                n.install_faults(&FaultPlan::parse(s).unwrap());
+            }
+            for _ in 0..50 {
+                n.tick(); // straggle window (5..45) passes idle
+            }
+            n.send(
+                NodeId(0),
+                Packet::new(0, NodeId(0), NodeId(3), Message::Raw(3)).with_phantom_payload(640),
+            );
+            let mut t = 0u64;
+            loop {
+                n.tick();
+                t += 1;
+                if n.recv(NodeId(3)).is_some() {
+                    return t;
+                }
+                assert!(t < 10_000);
+            }
+        };
+        assert_eq!(lat(Some("straggle:1x4@5+40")), lat(None));
     }
 
     #[test]

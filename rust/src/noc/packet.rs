@@ -99,11 +99,24 @@ pub struct Packet {
     pub payload: Option<Arc<Vec<u8>>>,
     /// ESP-style multicast destination set; `dst` is ignored when set.
     pub mcast_dsts: Option<Arc<Vec<NodeId>>>,
+    /// Waypoint routing override (repair reroute): routers steer toward
+    /// `via` while the current node lies on `path(src, via)` before
+    /// `via`, then toward `dst`. `None` (the default) is the zero-cost
+    /// healthy path — routing is untouched and golden pins hold.
+    pub via: Option<NodeId>,
 }
 
 impl Packet {
     pub fn new(id: PacketId, src: NodeId, dst: NodeId, msg: Message) -> Self {
-        Packet { id, src, dst, msg, payload_bytes: 0, payload: None, mcast_dsts: None }
+        Packet { id, src, dst, msg, payload_bytes: 0, payload: None, mcast_dsts: None, via: None }
+    }
+
+    /// Route this packet through waypoint `via` (see the field docs).
+    /// The planner guarantees the detour is simple (`noc::Degraded::
+    /// route_is_clean`); a non-simple waypoint would loop forever.
+    pub fn with_via(mut self, via: Option<NodeId>) -> Self {
+        self.via = via;
+        self
     }
 
     pub fn with_payload(mut self, data: Vec<u8>) -> Self {

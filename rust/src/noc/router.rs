@@ -193,9 +193,35 @@ impl Router {
                 .collect();
             RouteLock { branches }
         } else {
-            let dir = topo.next_hop(self.node, pkt.dst);
+            // Waypoint override (repair reroute): steer toward `via`
+            // while this node still lies on path(src, via) before the
+            // waypoint itself, then toward the real destination. The
+            // test is stateless — flits carry no "passed the waypoint"
+            // bit — which is sound only for *simple* detours (the two
+            // segments share no node besides `via`; the planner
+            // guarantees this via `Degraded::route_is_clean`).
+            let target = match pkt.via {
+                Some(via) if via != self.node && via != pkt.dst && self.toward_via(topo, pkt, via) => via,
+                _ => pkt.dst,
+            };
+            let dir = topo.next_hop(self.node, target);
             RouteLock { branches: vec![(dir, pkt.clone())] }
         }
+    }
+
+    /// True when this node is on `path(src, via)` strictly before `via`.
+    /// Cold path: only packets carrying a waypoint (repair traffic) pay
+    /// the path walk, and only once per packet at route computation.
+    fn toward_via(&self, topo: &dyn Topology, pkt: &Packet, via: NodeId) -> bool {
+        let mut cur = pkt.src;
+        while cur != via {
+            if cur == self.node {
+                return true;
+            }
+            let d = topo.next_hop(cur, via);
+            cur = topo.neighbour(cur, d).expect("routing left the fabric");
+        }
+        false
     }
 
     /// Switch allocation + traversal for one cycle. Emits the flits that
@@ -316,6 +342,30 @@ mod tests {
         let moved = r.tick(&m);
         assert_eq!(moved.len(), 1);
         assert_eq!(moved[0].0, Dir::East);
+    }
+
+    #[test]
+    fn waypoint_steers_until_the_via_then_toward_dst() {
+        // 4x4 mesh, src 0 -> dst 5 via 4 = (0,1): the YX detour. At the
+        // source the default XY route is East (toward 1); the waypoint
+        // forces North (toward 4). At the waypoint itself the override
+        // expires and routing resumes toward dst (East to 5).
+        let m = Mesh::new(4, 4);
+        let pkt = Arc::new(
+            Packet::new(1, NodeId(0), NodeId(5), Message::Raw(0))
+                .with_via(Some(NodeId(4))),
+        );
+        let mut at_src = mk(&m, 0);
+        at_src.accept(Dir::Local, 0, Flit { packet: pkt.clone(), seq: 0 });
+        assert_eq!(at_src.tick(&m)[0].0, Dir::North);
+        let mut at_via = mk(&m, 4);
+        at_via.accept(Dir::South, 0, Flit { packet: pkt.clone(), seq: 0 });
+        assert_eq!(at_via.tick(&m)[0].0, Dir::East);
+        // A via-less packet on the same pair keeps the default XY route.
+        let plain = Arc::new(Packet::new(2, NodeId(0), NodeId(5), Message::Raw(0)));
+        let mut healthy = mk(&m, 0);
+        healthy.accept(Dir::Local, 0, Flit { packet: plain, seq: 0 });
+        assert_eq!(healthy.tick(&m)[0].0, Dir::East);
     }
 
     #[test]

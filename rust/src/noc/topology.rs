@@ -480,6 +480,122 @@ impl Degraded {
     fn penalty(&self) -> usize {
         self.topo.n_nodes() * (self.topo.diameter() + 1)
     }
+
+    /// True when routing `from -> to` through waypoint `via` (`None` =
+    /// the fabric's default route) crosses only living routers and whole
+    /// links. A `Some(v)` waypoint route is the concatenation
+    /// `path(from, v) + path(v, to)`; it must additionally be *simple* —
+    /// the two segments share no node besides `v` — because the routers
+    /// steer toward `v` whenever the current node lies on
+    /// `path(from, v)` before `v` (see `noc::router`), so any other
+    /// shared node would loop the packet forever.
+    pub fn route_is_clean(&self, from: NodeId, via: Option<NodeId>, to: NodeId) -> bool {
+        match via {
+            None => self.path_is_clean(from, to),
+            Some(v) => {
+                if v == from || v == to || self.dead[v.0] {
+                    return false;
+                }
+                if !self.path_is_clean(from, v) || !self.path_is_clean(v, to) {
+                    return false;
+                }
+                let head = self.topo.path(from, v);
+                let tail = self.topo.path(v, to);
+                head.iter().all(|n| *n == v || !tail.contains(n))
+            }
+        }
+    }
+
+    /// Deterministic candidate waypoints for `from -> to`, most direct
+    /// first: the default route, then the YX corner (mesh/torus — the
+    /// dimension-swapped L), then complementary-arc midpoints per wrap
+    /// dimension (torus/ring), then — on the wrapped fabrics only, where
+    /// path diversity is the whole point — every alive intermediate in
+    /// ascending id order. Candidates are *geometric* proposals;
+    /// [`Degraded::route_is_clean`] decides which survive the damage.
+    pub fn route_candidates(&self, from: NodeId, to: NodeId) -> Vec<Option<NodeId>> {
+        let mut cands: Vec<Option<NodeId>> = vec![None];
+        if from == to {
+            return cands;
+        }
+        let (cf, ct) = (self.topo.coord(from), self.topo.coord(to));
+        let yx_corner = |cands: &mut Vec<Option<NodeId>>| {
+            if cf.x != ct.x && cf.y != ct.y {
+                cands.push(Some(self.topo.node(Coord { x: cf.x, y: ct.y })));
+            }
+        };
+        match self.topo {
+            Topo::Mesh(_) => yx_corner(&mut cands),
+            Topo::Torus(t) => {
+                yx_corner(&mut cands);
+                if let Some(x) = wrap_mid(t.cols, cf.x, ct.x) {
+                    cands.push(Some(self.topo.node(Coord { x, y: cf.y })));
+                }
+                if let Some(y) = wrap_mid(t.rows, cf.y, ct.y) {
+                    cands.push(Some(self.topo.node(Coord { x: ct.x, y })));
+                }
+                self.push_alive_intermediates(from, to, &mut cands);
+            }
+            Topo::Ring(r) => {
+                if let Some(x) = wrap_mid(r.n, cf.x, ct.x) {
+                    cands.push(Some(NodeId(x)));
+                }
+                self.push_alive_intermediates(from, to, &mut cands);
+            }
+        }
+        cands
+    }
+
+    fn push_alive_intermediates(&self, from: NodeId, to: NodeId, cands: &mut Vec<Option<NodeId>>) {
+        for v in 0..self.topo.n_nodes() {
+            let v = NodeId(v);
+            if v != from && v != to && !self.dead[v.0] {
+                cands.push(Some(v));
+            }
+        }
+    }
+
+    /// The first clean candidate route for `from -> to`:
+    /// `Some(None)` = the default route is clean, `Some(Some(v))` = the
+    /// default is dirty but the waypoint route via `v` is clean, `None`
+    /// = no candidate survives (the hop is genuinely unreachable).
+    pub fn clean_route(&self, from: NodeId, to: NodeId) -> Option<Option<NodeId>> {
+        self.route_candidates(from, to)
+            .into_iter()
+            .find(|&via| self.route_is_clean(from, via, to))
+    }
+}
+
+/// Midpoint of the complementary (long-way-around) arc from offset `a`
+/// to `b` on a wrap dimension of size `len`, or `None` when the
+/// dimension has no meaningful alternate arc (`a == b`, or fewer than 4
+/// positions — with 2 or 3 there is no intermediate strictly inside the
+/// long arc). The midpoint is the single waypoint that forces routing
+/// the "wrong" way around the wrap: both halves of the detour are
+/// shorter going that direction than coming back.
+fn wrap_mid(len: usize, a: usize, b: usize) -> Option<usize> {
+    if a == b || len < 4 {
+        return None;
+    }
+    let fwd = (b + len - a) % len;
+    let long = fwd.max(len - fwd);
+    // Step half the long arc away from `a`, against the default
+    // direction (default ties East/forward, so the long arc is backward
+    // when fwd <= len - fwd).
+    let d1 = long / 2;
+    if d1 == 0 || d1 >= long {
+        return None;
+    }
+    let mid = if fwd <= len - fwd {
+        (a + len - d1) % len // default forward; detour backward
+    } else {
+        (a + d1) % len // default backward; detour forward
+    };
+    if mid == a || mid == b {
+        None
+    } else {
+        Some(mid)
+    }
 }
 
 impl Topology for Degraded {
@@ -857,6 +973,83 @@ mod tests {
         let d = Degraded::new(topo, dead, vec![[false; 5]; 4]);
         assert!(!d.path_is_clean(NodeId(0), NodeId(2)));
         assert!(d.path_is_clean(NodeId(0), NodeId(3)));
+    }
+
+    #[test]
+    fn mesh_yx_fallback_survives_an_xy_kill() {
+        // 4x4 mesh, kill router 1 = (1,0): the XY route 0 -> 5 crosses
+        // it, but the YX route (via corner 4 = (0,1)) is intact.
+        let topo = Topo::Mesh(Mesh::new(4, 4));
+        let mut dead = vec![false; 16];
+        dead[1] = true;
+        let d = Degraded::new(topo, dead, vec![[false; 5]; 16]);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(5)));
+        assert!(d.route_is_clean(NodeId(0), Some(NodeId(4)), NodeId(5)));
+        assert_eq!(d.clean_route(NodeId(0), NodeId(5)), Some(Some(NodeId(4))));
+        // A healthy pair reports the default route first.
+        assert_eq!(d.clean_route(NodeId(0), NodeId(4)), Some(None));
+        // Mesh candidates stop at the YX corner: kill both L-routes and
+        // the pair is unreachable (no intermediate scan on a mesh).
+        let mut dead2 = vec![false; 16];
+        dead2[1] = true; // XY corner route
+        dead2[4] = true; // YX corner route
+        let d2 = Degraded::new(topo, dead2, vec![[false; 5]; 16]);
+        assert_eq!(d2.clean_route(NodeId(0), NodeId(5)), None);
+    }
+
+    #[test]
+    fn waypoint_routes_must_be_simple() {
+        // Ring of 8: via=4 from 0 -> 1 ties East on the first segment,
+        // crossing node 1 — the segments overlap, so the route is
+        // rejected even though every router on it is alive.
+        let topo = Topo::Ring(Ring::new(8));
+        let d = Degraded::healthy(topo);
+        assert!(!d.route_is_clean(NodeId(0), Some(NodeId(4)), NodeId(1)));
+        // Endpoints are never valid waypoints.
+        assert!(!d.route_is_clean(NodeId(0), Some(NodeId(0)), NodeId(1)));
+        assert!(!d.route_is_clean(NodeId(0), Some(NodeId(1)), NodeId(1)));
+    }
+
+    #[test]
+    fn ring_detours_the_long_way_around_a_kill() {
+        // Ring of 8, kill node 1: the default 0 -> 2 route (East via 1)
+        // is dirty; the complementary arc 0 -> 7 -> 6 -> 5 -> 4 -> 3 -> 2
+        // is clean via the long-arc midpoint 5.
+        let topo = Topo::Ring(Ring::new(8));
+        let mut dead = vec![false; 8];
+        dead[1] = true;
+        let d = Degraded::new(topo, dead, vec![[false; 5]; 8]);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(2)));
+        let via = d.clean_route(NodeId(0), NodeId(2)).expect("detour must exist");
+        let v = via.expect("default route is dirty, so the route must use a waypoint");
+        assert!(d.route_is_clean(NodeId(0), Some(v), NodeId(2)));
+        // The first preferred candidate is the long-arc midpoint.
+        assert_eq!(v, NodeId(5));
+    }
+
+    #[test]
+    fn torus_wrap_candidates_route_around_a_dirty_row() {
+        // 4x4 torus, 0=(0,0) -> 2=(2,0): default ties East through 1.
+        // Kill node 1; the X long-way (West wrap via 3) must survive.
+        let topo = Topo::Torus(Torus::new(4, 4));
+        let mut dead = vec![false; 16];
+        dead[1] = true;
+        let d = Degraded::new(topo, dead, vec![[false; 5]; 16]);
+        assert!(!d.path_is_clean(NodeId(0), NodeId(2)));
+        let via = d.clean_route(NodeId(0), NodeId(2)).expect("torus detour must exist");
+        assert!(via.is_some(), "default route is dirty");
+        assert!(d.route_is_clean(NodeId(0), via, NodeId(2)));
+    }
+
+    #[test]
+    fn wrap_mid_is_on_the_long_arc() {
+        // len 8, 0 -> 2: default East (fwd 2), long arc West length 6,
+        // midpoint 3 back from 0 = 5.
+        assert_eq!(wrap_mid(8, 0, 2), Some(5));
+        // Reverse: 2 -> 0 defaults West, long arc East length 6 -> 5.
+        assert_eq!(wrap_mid(8, 2, 0), Some(5));
+        assert_eq!(wrap_mid(8, 3, 3), None, "no arc to detour");
+        assert_eq!(wrap_mid(3, 0, 1), None, "too small for an alternate arc");
     }
 
     #[test]

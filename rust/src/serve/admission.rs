@@ -16,6 +16,13 @@
 //!
 //! Queued requests keep their original arrival cycle, so queue wait is
 //! inside the reported latency (that is the point of the comparison).
+//!
+//! [`RetryPolicy`] (ISSUE 9) layers client-side retry on top: a request
+//! rejected at the door or whose engine task failed is re-offered after
+//! a bounded exponential backoff instead of terminating, until its
+//! attempt budget runs out. The policy only computes the deterministic
+//! part of the delay; the driver adds seeded jitter so colliding
+//! retries decorrelate without breaking replay.
 
 use std::collections::VecDeque;
 
@@ -73,6 +80,45 @@ impl AdmissionPolicy {
             "backpressure" => Ok(AdmissionPolicy::Backpressure),
             _ => Err(format!("unknown admission policy '{s}' (shed|queue|backpressure)")),
         }
+    }
+}
+
+/// Bounded-retry policy for rejected or failed requests
+/// (CLI: `--retries N`; `max_attempts = 0` disables retry entirely and
+/// keeps the ISSUE-8 terminal semantics bit-for-bit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries per request beyond the first attempt; 0 = off.
+    pub max_attempts: u32,
+    /// Backoff before retry 1, in cycles; doubles per attempt.
+    pub base_backoff: u64,
+    /// Backoff ceiling in cycles (the exponential clamps here).
+    pub max_backoff: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 0, base_backoff: 256, max_backoff: 4096 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Deterministic backoff (pre-jitter) for the 1-based retry
+    /// `attempt`: `base_backoff * 2^(attempt-1)`, clamped to
+    /// `max_backoff`. Saturates instead of overflowing on absurd
+    /// attempt counts.
+    pub fn backoff_for(&self, attempt: u32) -> u64 {
+        let exp = attempt.saturating_sub(1).min(63);
+        let scaled = if exp >= 63 {
+            u64::MAX
+        } else {
+            self.base_backoff.saturating_mul(1u64 << exp)
+        };
+        scaled.min(self.max_backoff)
     }
 }
 
@@ -203,6 +249,23 @@ mod tests {
         assert_eq!(a.offer(3), Verdict::Enqueue);
         assert_eq!(a.pump(), vec![2]);
         assert_eq!(a.pump(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn backoff_doubles_then_clamps() {
+        let p = RetryPolicy { max_attempts: 5, base_backoff: 100, max_backoff: 1000 };
+        assert!(p.enabled());
+        assert_eq!(p.backoff_for(1), 100);
+        assert_eq!(p.backoff_for(2), 200);
+        assert_eq!(p.backoff_for(3), 400);
+        assert_eq!(p.backoff_for(4), 800);
+        assert_eq!(p.backoff_for(5), 1000, "clamped to max_backoff");
+        assert_eq!(p.backoff_for(100), 1000, "huge attempts saturate, not overflow");
+    }
+
+    #[test]
+    fn default_retry_policy_is_disabled() {
+        assert!(!RetryPolicy::default().enabled());
     }
 
     #[test]

@@ -23,10 +23,24 @@
 //! engine-reported completion cycles, which are bit-exact across modes.
 //! Stepping happens only through [`Coordinator::run_for`], whose
 //! bounded-horizon landing is exact in every mode, and driver events at
-//! a wake cycle are processed in one fixed order: completions, then
-//! arrivals, then the admission pump, then batch flushes, then
-//! occupancy samples. `rust/tests/serving.rs` enforces this three ways
-//! (FullTick / EventDriven / Parallel) on three fabrics.
+//! a wake cycle are processed in one fixed order: completions, then due
+//! retries, then arrivals, then the admission pump, then batch flushes,
+//! then occupancy samples. `rust/tests/serving.rs` enforces this three
+//! ways (FullTick / EventDriven / Parallel) on three fabrics.
+//!
+//! # Resilience (ISSUE 9)
+//!
+//! [`Coordinator::run_for`] ticks the fault watcher, so when the SoC
+//! carries an armed [`crate::sim::FaultPlan`] the serving loop detects
+//! mid-stream stalls, repairs them (with partial-transfer resume and
+//! path-diverse reroute when the plan arms them), and the client-facing
+//! dispositions record what survived. On top, an optional
+//! [`admission::RetryPolicy`] re-offers rejected or failed requests
+//! after a bounded exponential backoff with seeded jitter drawn from
+//! [`crate::util::stream::RETRY`] — a pure function of (seed, request,
+//! attempt), so retried runs replay bit-identically across step modes.
+//! Retried requests keep their original `arrived` cycle: retry wait is
+//! client-visible latency, exactly like queue wait.
 
 pub mod admission;
 pub mod arrival;
@@ -34,11 +48,16 @@ pub mod batch;
 pub mod report;
 pub mod stats;
 
-pub use admission::{Admission, AdmissionPolicy, RejectKind, Verdict};
+pub use admission::{Admission, AdmissionPolicy, RejectKind, RetryPolicy, Verdict};
 pub use arrival::{ArrivalGen, ArrivalKind};
 pub use batch::{Batch, Batcher};
-pub use report::{sweep_json, sweep_markdown, ServeSweepRow};
+pub use report::{
+    resilience_json, resilience_markdown, sweep_json, sweep_markdown, ResilienceRow,
+    ServeSweepRow,
+};
 pub use stats::{LatencyHisto, Sample};
+
+use std::collections::BTreeMap;
 
 use crate::coordinator::{Coordinator, EngineKind, TaskId, TaskOutcome};
 use crate::noc::NodeId;
@@ -153,6 +172,8 @@ pub struct ServeConfig {
     /// Chain-order strategy for KV multicasts.
     pub strategy: Strategy,
     pub mix: MixConfig,
+    /// Client-side retry for rejected/failed requests (off by default).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServeConfig {
@@ -169,6 +190,7 @@ impl Default for ServeConfig {
             sample_every: 1_000,
             strategy: Strategy::Greedy,
             mix: MixConfig::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -194,6 +216,18 @@ pub struct ServeReport {
     pub util: f64,
     pub pending_peak: usize,
     pub inflight_peak: usize,
+    /// Destination-bytes actually delivered: `bytes * n_dests` for clean
+    /// completions, the served fraction for repaired tasks.
+    pub goodput_bytes: u64,
+    /// Distinct requests retried at least once.
+    pub retried: u64,
+    /// Total retry re-offers across all requests.
+    pub retry_attempts: u64,
+    /// Engine tasks that terminated as Repaired (fault machinery).
+    pub repaired_tasks: u64,
+    /// Bytes re-streamed by repair chains (0 when resume salvaged
+    /// everything or no fault fired).
+    pub restreamed_bytes: u64,
     /// Terminal record per request, in request-id order.
     pub dispositions: Vec<Disposition>,
 }
@@ -216,6 +250,15 @@ impl ServeReport {
     pub fn p999(&self) -> u64 {
         self.histo.p999().unwrap_or(0)
     }
+
+    /// Fraction of offered requests that completed — the availability
+    /// number the resilience sweep compares across fault policies.
+    pub fn availability(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.offered as f64
+    }
 }
 
 /// The open-loop driver. Owns all serving-layer state; the coordinator
@@ -232,10 +275,23 @@ pub struct ServeSim {
     outcomes: Vec<Option<Outcome>>,
     /// Submitted engine tasks → member request ids sharing completion.
     outstanding: Vec<(TaskId, Vec<u32>)>,
+    /// Retry schedule: release cycle → request ids (BTreeMap so due
+    /// retries drain in deterministic cycle-then-insertion order).
+    retry_queue: BTreeMap<u64, Vec<u32>>,
+    /// Retries scheduled so far, per request.
+    attempts: Vec<u32>,
+    /// Whether the request ever took an inflight slot (so `admitted`
+    /// counts requests, not admission events, under retry).
+    ever_admitted: Vec<bool>,
     tasks_submitted: u64,
     admitted: u64,
     rejected_shed: u64,
     rejected_queue_full: u64,
+    goodput_bytes: u64,
+    retried: u64,
+    retry_attempts: u64,
+    repaired_tasks: u64,
+    restreamed_bytes: u64,
     samples: Vec<Sample>,
     pending_peak: usize,
     inflight_peak: usize,
@@ -269,10 +325,18 @@ impl ServeSim {
             requests: Vec::new(),
             outcomes: Vec::new(),
             outstanding: Vec::new(),
+            retry_queue: BTreeMap::new(),
+            attempts: Vec::new(),
+            ever_admitted: Vec::new(),
             tasks_submitted: 0,
             admitted: 0,
             rejected_shed: 0,
             rejected_queue_full: 0,
+            goodput_bytes: 0,
+            retried: 0,
+            retry_attempts: 0,
+            repaired_tasks: 0,
+            restreamed_bytes: 0,
             samples: Vec::new(),
             pending_peak: 0,
             inflight_peak: 0,
@@ -300,6 +364,9 @@ impl ServeSim {
             if let Some(f) = self.batcher.next_flush() {
                 fold(f);
             }
+            if let Some((&at, _)) = self.retry_queue.iter().next() {
+                fold(at);
+            }
             if next_sample <= horizon {
                 fold(next_sample);
             }
@@ -309,7 +376,8 @@ impl ServeSim {
                 self.c.run_for(wake - now);
             }
             let now = self.c.soc.cycle();
-            self.collect_completions();
+            self.collect_completions(now);
+            self.release_retries(now);
             while self.arrivals.peek() <= now && self.arrivals.peek() <= horizon {
                 let arrived = self.arrivals.pop();
                 self.inject(arrived, now);
@@ -329,14 +397,18 @@ impl ServeSim {
         let drain_deadline = horizon + self.cfg.drain;
         loop {
             let now = self.c.soc.cycle();
-            self.collect_completions();
+            self.collect_completions(now);
+            self.release_retries(now);
             self.pump(now);
             let open = self.batcher.flush_all();
             for b in open {
                 self.submit_batch(&b);
             }
             self.note_peaks();
-            if self.outstanding.is_empty() && self.admission.pending() == 0 {
+            if self.outstanding.is_empty()
+                && self.admission.pending() == 0
+                && self.retry_queue.is_empty()
+            {
                 break;
             }
             if now >= drain_deadline {
@@ -394,6 +466,11 @@ impl ServeSim {
             util,
             pending_peak: self.pending_peak,
             inflight_peak: self.inflight_peak,
+            goodput_bytes: self.goodput_bytes,
+            retried: self.retried,
+            retry_attempts: self.retry_attempts,
+            repaired_tasks: self.repaired_tasks,
+            restreamed_bytes: self.restreamed_bytes,
             dispositions,
         }
     }
@@ -429,18 +506,81 @@ impl ServeSim {
         };
         self.requests.push(req);
         self.outcomes.push(None);
+        self.attempts.push(0);
+        self.ever_admitted.push(false);
+        self.offer(id, now);
+    }
+
+    /// Offer one request (fresh or retried) to admission control.
+    fn offer(&mut self, id: u32, now: u64) {
         match self.admission.offer(id) {
             Verdict::Admit => {
-                self.admitted += 1;
+                self.note_admitted(id);
                 self.dispatch(id, now);
             }
             Verdict::Enqueue => {} // released later by pump()
-            Verdict::Reject(kind) => {
-                match kind {
-                    RejectKind::Shed => self.rejected_shed += 1,
-                    RejectKind::QueueFull => self.rejected_queue_full += 1,
-                }
-                self.outcomes[id as usize] = Some(Outcome::Rejected(kind));
+            Verdict::Reject(kind) => self.reject_or_retry(id, kind, now),
+        }
+    }
+
+    /// `admitted` counts requests that ever held an inflight slot, so a
+    /// request re-admitted after a failed attempt is not double-counted.
+    fn note_admitted(&mut self, id: u32) {
+        if !self.ever_admitted[id as usize] {
+            self.ever_admitted[id as usize] = true;
+            self.admitted += 1;
+        }
+    }
+
+    /// A rejected request either schedules a retry or terminates.
+    fn reject_or_retry(&mut self, id: u32, kind: RejectKind, now: u64) {
+        if self.try_schedule_retry(id, now) {
+            return;
+        }
+        match kind {
+            RejectKind::Shed => self.rejected_shed += 1,
+            RejectKind::QueueFull => self.rejected_queue_full += 1,
+        }
+        self.outcomes[id as usize] = Some(Outcome::Rejected(kind));
+    }
+
+    /// Schedule the next retry for `id` if its budget allows; returns
+    /// false when exhausted (the caller records a terminal outcome).
+    /// The delay is exponential backoff plus jitter drawn from a stream
+    /// keyed only by (seed, request, attempt) — independent of event
+    /// interleaving, so replay is exact.
+    fn try_schedule_retry(&mut self, id: u32, now: u64) -> bool {
+        let p = self.cfg.retry;
+        if !p.enabled() || self.attempts[id as usize] >= p.max_attempts {
+            return false;
+        }
+        self.attempts[id as usize] += 1;
+        let attempt = self.attempts[id as usize];
+        if attempt == 1 {
+            self.retried += 1;
+        }
+        let backoff = p.backoff_for(attempt).max(1);
+        let jitter = util::rng(
+            self.cfg.seed,
+            stream::RETRY + ((attempt as u64) << 32) + id as u64,
+        )
+        .below(backoff);
+        self.retry_queue.entry(now + backoff + jitter).or_default().push(id);
+        true
+    }
+
+    /// Re-offer retries whose backoff expired.
+    fn release_retries(&mut self, now: u64) {
+        loop {
+            match self.retry_queue.iter().next() {
+                Some((&at, _)) if at <= now => {}
+                _ => break,
+            }
+            let (at, ids) = self.retry_queue.pop_first().expect("peeked above");
+            debug_assert!(at <= now);
+            for id in ids {
+                self.retry_attempts += 1;
+                self.offer(id, now);
             }
         }
     }
@@ -448,7 +588,7 @@ impl ServeSim {
     /// Release queued requests into freed slots and dispatch them.
     fn pump(&mut self, now: u64) {
         for id in self.admission.pump() {
-            self.admitted += 1;
+            self.note_admitted(id);
             self.dispatch(id, now);
         }
     }
@@ -511,33 +651,59 @@ impl ServeSim {
     }
 
     /// Drain finished tasks: latency clocks from each member request's
-    /// *arrival* to the engine-reported finish cycle (queue and batching
-    /// wait included), so the number is mode-independent — both ends are
-    /// bit-exact simulator state, not driver observation times.
-    fn collect_completions(&mut self) {
-        let c = &self.c;
-        let requests = &self.requests;
-        let outcomes = &mut self.outcomes;
-        let admission = &mut self.admission;
-        self.outstanding.retain(|(tid, members)| {
-            let rec = c.record(*tid).expect("outstanding task has a record");
-            if let Some(res) = &rec.result {
-                for &m in members {
-                    let lat = res.finished_at.saturating_sub(requests[m as usize].arrived);
-                    outcomes[m as usize] = Some(Outcome::Completed { latency: lat });
-                    admission.release();
+    /// *arrival* to the engine-reported finish cycle (queue, batching
+    /// and retry wait included), so the number is mode-independent —
+    /// both ends are bit-exact simulator state, not driver observation
+    /// times. Repaired tasks complete their members (goodput counts the
+    /// served fraction); failed tasks release their members into the
+    /// retry path when the policy allows.
+    fn collect_completions(&mut self, now: u64) {
+        let outstanding = std::mem::take(&mut self.outstanding);
+        let mut keep = Vec::with_capacity(outstanding.len());
+        for (tid, members) in outstanding {
+            // Extract plain data first so the record borrow ends before
+            // the retry bookkeeping below takes `&mut self`.
+            let (done, failed) = {
+                let rec = self.c.record(tid).expect("outstanding task has a record");
+                match (&rec.result, &rec.outcome) {
+                    (Some(res), outcome) => {
+                        let (goodput, restreamed) = match outcome {
+                            Some(TaskOutcome::Repaired {
+                                served_bytes,
+                                restreamed_bytes,
+                                ..
+                            }) => (*served_bytes, Some(*restreamed_bytes)),
+                            _ => ((res.bytes * res.n_dests) as u64, None),
+                        };
+                        (Some((res.finished_at, goodput, restreamed)), false)
+                    }
+                    (None, Some(TaskOutcome::Failed { .. })) => (None, true),
+                    _ => (None, false),
                 }
-                false
-            } else if matches!(rec.outcome, Some(TaskOutcome::Failed { .. })) {
-                for &m in members {
-                    outcomes[m as usize] = Some(Outcome::Failed);
-                    admission.release();
+            };
+            if let Some((finished_at, goodput, restreamed)) = done {
+                self.goodput_bytes += goodput;
+                if let Some(r) = restreamed {
+                    self.repaired_tasks += 1;
+                    self.restreamed_bytes += r;
                 }
-                false
+                for &m in &members {
+                    let lat = finished_at.saturating_sub(self.requests[m as usize].arrived);
+                    self.outcomes[m as usize] = Some(Outcome::Completed { latency: lat });
+                    self.admission.release();
+                }
+            } else if failed {
+                for &m in &members {
+                    self.admission.release();
+                    if !self.try_schedule_retry(m, now) {
+                        self.outcomes[m as usize] = Some(Outcome::Failed);
+                    }
+                }
             } else {
-                true
+                keep.push((tid, members));
             }
-        });
+        }
+        self.outstanding = keep;
     }
 
     fn sample(&mut self, cycle: u64) {
@@ -671,6 +837,74 @@ mod tests {
         cfg.batch_window = 0;
         let r = run(cfg, fabric(), StepMode::EventDriven);
         assert_eq!(r.tasks_submitted, r.admitted);
+    }
+
+    #[test]
+    fn goodput_counts_delivered_destination_bytes() {
+        // All-background trickle: every request is a 1024-byte unicast,
+        // so goodput is exactly completed * 1024.
+        let mut cfg = quick_cfg(1, AdmissionPolicy::Queue);
+        cfg.mix.mcast_pct = 0;
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert_eq!(r.completed, r.offered);
+        assert_eq!(r.goodput_bytes, r.completed * 1024);
+        assert_eq!(r.retried, 0, "no retry policy armed");
+        assert_eq!(r.repaired_tasks, 0, "no faults armed");
+        assert!((r.availability() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retry_recovers_shed_requests() {
+        let mut base = quick_cfg(30, AdmissionPolicy::Shed);
+        base.queue_cap = 0;
+        let without = run(base.clone(), fabric(), StepMode::EventDriven);
+        assert!(without.rejected_shed > 0, "premise: this load sheds");
+        let mut with = base;
+        with.retry =
+            RetryPolicy { max_attempts: 6, base_backoff: 128, max_backoff: 2048 };
+        let r = run(with, fabric(), StepMode::EventDriven);
+        assert!(r.retried > 0, "shed requests must enter the retry path");
+        assert!(r.retry_attempts >= r.retried);
+        assert!(
+            r.completed > without.completed,
+            "retry must convert sheds into completions ({} vs {})",
+            r.completed,
+            without.completed
+        );
+        assert!(r.rejected() < without.rejected());
+        // Terminal-outcome conservation (the admitted-based identity is
+        // for retry-off runs: a request can terminate Rejected here
+        // without ever holding a slot).
+        assert_eq!(r.offered, r.completed + r.failed + r.rejected() + r.unfinished);
+    }
+
+    #[test]
+    fn retry_budget_is_bounded() {
+        let mut cfg = quick_cfg(60, AdmissionPolicy::Shed);
+        cfg.queue_cap = 0;
+        cfg.max_inflight = 2;
+        cfg.retry = RetryPolicy { max_attempts: 2, base_backoff: 64, max_backoff: 256 };
+        let r = run(cfg, fabric(), StepMode::EventDriven);
+        assert!(
+            r.retry_attempts <= 2 * r.offered,
+            "attempt budget exceeded: {} re-offers for {} requests",
+            r.retry_attempts,
+            r.offered
+        );
+        assert!(r.rejected_shed > 0, "past-saturation load must exhaust some budgets");
+        assert_eq!(r.offered, r.completed + r.failed + r.rejected() + r.unfinished);
+    }
+
+    #[test]
+    fn retry_replays_identically_by_seed() {
+        let mut cfg = quick_cfg(30, AdmissionPolicy::Shed);
+        cfg.queue_cap = 0;
+        cfg.retry = RetryPolicy { max_attempts: 4, base_backoff: 128, max_backoff: 1024 };
+        let a = run(cfg.clone(), fabric(), StepMode::EventDriven);
+        let b = run(cfg, fabric(), StepMode::EventDriven);
+        assert_eq!(a.dispositions, b.dispositions);
+        assert_eq!(a.retry_attempts, b.retry_attempts);
+        assert_eq!(a.cycles, b.cycles);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! import the row type without a module cycle. The JSON schema is
 //! `torrent-serve-sweep-v1`: flat rows, snake_case keys, one object per
 //! (fabric × scheduler × threads × rate) load point — the same
-//! hand-rolled no-serde convention as the bench baselines.
+//! hand-rolled no-serde convention as the bench baselines. The
+//! resilience sweep (`torrent resilience-sweep`, ISSUE 9) emits its own
+//! `torrent-resilience-sweep-v1` rows, one per (fabric × fault-policy ×
+//! seed) cell.
 
 /// One swept load point. Latencies in cycles; `util` is the normalized
 /// router-activity index from [`crate::serve::stats::utilization`].
@@ -91,6 +94,95 @@ pub fn sweep_markdown(rows: &[ServeSweepRow]) -> String {
     out
 }
 
+/// One resilience-sweep cell: a (fabric × fault-policy × seed) serving
+/// run under an armed fault schedule. `policy` is the repair posture
+/// (`fail-stop`, `restream`, `resume`, `resume+reroute`), not the
+/// admission policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceRow {
+    pub fabric: &'static str,
+    pub policy: &'static str,
+    pub seed: u64,
+    pub offered: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    /// completed / offered — the availability axis.
+    pub availability: f64,
+    /// Destination-bytes delivered (served fraction for repaired tasks).
+    pub goodput_bytes: u64,
+    /// Bytes repair chains re-streamed (the resume savings axis).
+    pub restreamed_bytes: u64,
+    pub repaired_tasks: u64,
+    /// Distinct requests that took the client retry path.
+    pub retried: u64,
+    pub p99: u64,
+}
+
+/// Render resilience rows as `torrent-resilience-sweep-v1` JSON.
+pub fn resilience_json(rows: &[ResilienceRow]) -> String {
+    let mut out =
+        String::from("{\n  \"schema\": \"torrent-resilience-sweep-v1\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"fabric\": \"{}\", \"policy\": \"{}\", \"seed\": {}, \
+             \"offered\": {}, \"completed\": {}, \"failed\": {}, \"rejected\": {}, \
+             \"availability\": {:.6}, \"goodput_bytes\": {}, \"restreamed_bytes\": {}, \
+             \"repaired_tasks\": {}, \"retried\": {}, \"p99\": {}}}{}\n",
+            r.fabric,
+            r.policy,
+            r.seed,
+            r.offered,
+            r.completed,
+            r.failed,
+            r.rejected,
+            r.availability,
+            r.goodput_bytes,
+            r.restreamed_bytes,
+            r.repaired_tasks,
+            r.retried,
+            r.p99,
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Render resilience rows as Markdown, one table per fabric in input
+/// order, policies as rows.
+pub fn resilience_markdown(rows: &[ResilienceRow]) -> String {
+    let mut out = String::from("# Resilience sweep — serving under injected faults\n");
+    let mut cur: Option<&str> = None;
+    for r in rows {
+        if cur != Some(r.fabric) {
+            cur = Some(r.fabric);
+            out.push_str(&format!(
+                "\n## {}\n\n\
+                 | policy | seed | offered | completed | failed | rejected | availability | goodput B | restreamed B | repaired | retried | p99 |\n\
+                 |---|---|---|---|---|---|---|---|---|---|---|---|\n",
+                r.fabric
+            ));
+        }
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.4} | {} | {} | {} | {} | {} |\n",
+            r.policy,
+            r.seed,
+            r.offered,
+            r.completed,
+            r.failed,
+            r.rejected,
+            r.availability,
+            r.goodput_bytes,
+            r.restreamed_bytes,
+            r.repaired_tasks,
+            r.retried,
+            r.p99,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +226,50 @@ mod tests {
         assert_eq!(md.matches("## mesh · greedy · t=2").count(), 1);
         assert_eq!(md.matches("| 1 | 40 |").count(), 2);
         assert!(md.contains("pending peak"));
+    }
+
+    fn res_row(fabric: &'static str, policy: &'static str) -> ResilienceRow {
+        ResilienceRow {
+            fabric,
+            policy,
+            seed: 7,
+            offered: 50,
+            completed: 46,
+            failed: 2,
+            rejected: 2,
+            availability: 0.92,
+            goodput_bytes: 188_416,
+            restreamed_bytes: 8_192,
+            repaired_tasks: 3,
+            retried: 4,
+            p99: 5_100,
+        }
+    }
+
+    #[test]
+    fn resilience_json_has_schema_and_balanced_braces() {
+        let s = resilience_json(&[res_row("mesh", "resume"), res_row("mesh", "restream")]);
+        assert!(s.contains("\"schema\": \"torrent-resilience-sweep-v1\""));
+        assert!(s.contains("\"policy\": \"resume\""));
+        assert!(s.contains("\"restreamed_bytes\": 8192"));
+        assert_eq!(
+            s.matches('{').count(),
+            s.matches('}').count(),
+            "unbalanced JSON braces:\n{s}"
+        );
+        assert_eq!(s.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn resilience_markdown_groups_by_fabric() {
+        let md = resilience_markdown(&[
+            res_row("mesh", "fail-stop"),
+            res_row("mesh", "resume+reroute"),
+            res_row("torus", "resume"),
+        ]);
+        assert_eq!(md.matches("## mesh").count(), 1);
+        assert_eq!(md.matches("## torus").count(), 1);
+        assert!(md.contains("| resume+reroute | 7 |"));
+        assert!(md.contains("restreamed B"));
     }
 }

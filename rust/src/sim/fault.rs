@@ -40,12 +40,33 @@ pub enum FaultKind {
     FollowerDrop { node: usize },
 }
 
-/// One scheduled activation.
+/// One scheduled activation, optionally transient (self-healing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Fault {
     /// First cycle at which the fault is in effect.
     pub at_cycle: u64,
     pub kind: FaultKind,
+    /// Absolute cycle at which the fault heals itself (`at_cycle + D`
+    /// for the `@C+D` grammar), `None` for permanent faults. Only
+    /// [`FaultKind::LinkKill`], [`FaultKind::RouterKill`] and
+    /// [`FaultKind::Straggler`] may be transient: a dropped follower has
+    /// lost engine state that no healed fabric can restore. Heals are
+    /// processed *before* same-cycle activations, so a flapping link
+    /// expressed as kill@C+D, kill@(C+D) re-kills cleanly.
+    pub heals_at: Option<u64>,
+}
+
+impl Fault {
+    /// A permanent fault at `at_cycle`.
+    pub fn new(at_cycle: u64, kind: FaultKind) -> Self {
+        Fault { at_cycle, kind, heals_at: None }
+    }
+
+    /// A transient fault in effect for `duration` cycles from `at_cycle`.
+    pub fn transient(at_cycle: u64, kind: FaultKind, duration: u64) -> Self {
+        assert!(duration > 0, "transient fault needs a positive duration");
+        Fault { at_cycle, kind, heals_at: Some(at_cycle + duration) }
+    }
 }
 
 /// A complete fault scenario: the activation schedule plus the
@@ -59,15 +80,61 @@ pub struct FaultPlan {
     /// When false the coordinator diagnoses and fails the task but does
     /// not re-chain (the fail-stop baseline).
     pub repair: bool,
+    /// When true, repair chains re-stream only the undelivered tail to
+    /// each survivor (partial-transfer resume) instead of the full
+    /// payload. Off by default so pre-existing fault pins replay
+    /// unchanged; the resilience sweep compares both settings.
+    pub resume: bool,
+    /// When true, the repair planner searches alternate waypoint routes
+    /// (YX fallback on mesh, wrap/detour candidates on torus/ring) for
+    /// hops whose default routed path is dirty, instead of dropping
+    /// them. Off by default for the same reason as `resume`.
+    pub reroute: bool,
 }
 
 pub const DEFAULT_DETECT_TIMEOUT: u64 = 10_000;
 
 impl Default for FaultPlan {
     fn default() -> Self {
-        FaultPlan { faults: Vec::new(), detect_timeout: DEFAULT_DETECT_TIMEOUT, repair: true }
+        FaultPlan {
+            faults: Vec::new(),
+            detect_timeout: DEFAULT_DETECT_TIMEOUT,
+            repair: true,
+            resume: false,
+            reroute: false,
+        }
     }
 }
+
+/// A structurally invalid fault spec, caught at `SocConfig`/`Soc` build
+/// time rather than surviving until mid-simulation activation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultError {
+    /// A clause references a node index outside the fabric.
+    NodeOutOfRange { fault: String, node: usize, n_nodes: usize },
+    /// A link kill names the same node on both ends.
+    SelfLink { node: usize },
+    /// A fault kind that cannot heal carries a `+duration`.
+    NotHealable { fault: String },
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::NodeOutOfRange { fault, node, n_nodes } => {
+                write!(f, "fault {fault} references node {node} outside the {n_nodes}-node fabric")
+            }
+            FaultError::SelfLink { node } => {
+                write!(f, "fault link:{node}-{node} is a self-link (no such channel)")
+            }
+            FaultError::NotHealable { fault } => {
+                write!(f, "fault {fault} cannot be transient (engine state does not heal)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
 
 impl FaultPlan {
     /// No faults scheduled (policy knobs are irrelevant then).
@@ -85,14 +152,20 @@ impl FaultPlan {
     ///
     /// ```text
     /// link:FROM-TO@CYCLE      kill directed link FROM->TO at CYCLE
+    /// link:FROM-TO@CYCLE+DUR  ... transient: the link heals at CYCLE+DUR
     /// router:NODE@CYCLE       kill router NODE at CYCLE
-    /// straggle:NODExFACTOR@CYCLE   slow router NODE by FACTOR from CYCLE
+    /// router:NODE@CYCLE+DUR   ... transient: the router revives at CYCLE+DUR
+    /// straggle:NODExFACTOR@CYCLE[+DUR]  slow router NODE by FACTOR from CYCLE
     /// drop:NODE@CYCLE         drop follower engines at NODE at CYCLE
     /// timeout:CYCLES          stall-detection window (default 10000)
     /// norepair                fail-stop baseline: diagnose, don't re-chain
+    /// resume                  repair re-streams only the undelivered tail
+    /// reroute                 repair searches alternate waypoint routes
     /// ```
     ///
-    /// Example: `link:3-4@1000;router:7@5000;timeout:2000`.
+    /// `drop` rejects `+DUR`: a follower that lost its engine state has
+    /// nothing to heal back to. Example:
+    /// `link:3-4@1000+500;router:7@5000;resume;reroute;timeout:2000`.
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut plan = FaultPlan::default();
         for clause in spec.split(';') {
@@ -102,6 +175,14 @@ impl FaultPlan {
             }
             if clause == "norepair" {
                 plan.repair = false;
+                continue;
+            }
+            if clause == "resume" {
+                plan.resume = true;
+                continue;
+            }
+            if clause == "reroute" {
+                plan.reroute = true;
                 continue;
             }
             let (head, body) = clause
@@ -114,7 +195,18 @@ impl FaultPlan {
             let (args, at) = body
                 .split_once('@')
                 .ok_or_else(|| format!("fault clause {clause:?}: expected `...@cycle`"))?;
-            let at_cycle = parse_num(at, clause)?;
+            let (at_cycle, duration) = match at.split_once('+') {
+                Some((c, d)) => {
+                    let dur: u64 = parse_num(d, clause)?;
+                    if dur == 0 {
+                        return Err(format!(
+                            "fault clause {clause:?}: transient duration must be > 0"
+                        ));
+                    }
+                    (parse_num::<u64>(c, clause)?, Some(dur))
+                }
+                None => (parse_num(at, clause)?, None),
+            };
             let kind = match head {
                 "link" => {
                     let (from, to) = args
@@ -136,19 +228,37 @@ impl FaultPlan {
                     }
                     FaultKind::Straggler { node: parse_num(node, clause)?, factor }
                 }
-                "drop" => FaultKind::FollowerDrop { node: parse_num(args, clause)? },
+                "drop" => {
+                    if duration.is_some() {
+                        return Err(format!(
+                            "fault clause {clause:?}: drop cannot be transient \
+                             (engine state does not heal)"
+                        ));
+                    }
+                    FaultKind::FollowerDrop { node: parse_num(args, clause)? }
+                }
                 other => return Err(format!("unknown fault kind {other:?} in {clause:?}")),
             };
-            plan.faults.push(Fault { at_cycle, kind });
+            plan.faults.push(Fault { at_cycle, kind, heals_at: duration.map(|d| at_cycle + d) });
         }
         Ok(plan)
     }
 
-    /// Every node index referenced by the schedule must be `< n_nodes`;
-    /// called by `Soc::new` so a bad spec fails at construction, not
+    /// Structural validation against a concrete fabric size — node
+    /// indices in range, no self-links, no transient follower drops.
+    /// Called by `Soc::new` (and the TOML/CLI loaders) so a bad spec
+    /// fails at construction with a typed [`FaultError`], not
     /// mid-simulation.
-    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+    pub fn validate(&self, n_nodes: usize) -> Result<(), FaultError> {
         for f in &self.faults {
+            if let FaultKind::LinkKill { from, to } = f.kind {
+                if from == to {
+                    return Err(FaultError::SelfLink { node: from });
+                }
+            }
+            if f.heals_at.is_some() && matches!(f.kind, FaultKind::FollowerDrop { .. }) {
+                return Err(FaultError::NotHealable { fault: f.kind.to_string() });
+            }
             let nodes: &[usize] = match f.kind {
                 FaultKind::LinkKill { from, to } => &[from, to],
                 FaultKind::RouterKill { node }
@@ -157,7 +267,11 @@ impl FaultPlan {
             };
             for &n in nodes {
                 if n >= n_nodes {
-                    return Err(format!("fault {f:?} references node {n} >= {n_nodes}"));
+                    return Err(FaultError::NodeOutOfRange {
+                        fault: f.kind.to_string(),
+                        node: n,
+                        n_nodes,
+                    });
                 }
             }
         }
@@ -190,6 +304,7 @@ mod tests {
         assert!(p.is_empty() && !p.armed());
         assert_eq!(p.detect_timeout, DEFAULT_DETECT_TIMEOUT);
         assert!(p.repair);
+        assert!(!p.resume && !p.reroute, "resume/reroute are opt-in");
     }
 
     #[test]
@@ -201,12 +316,39 @@ mod tests {
         assert_eq!(
             p.faults,
             vec![
-                Fault { at_cycle: 1000, kind: FaultKind::LinkKill { from: 3, to: 4 } },
-                Fault { at_cycle: 5000, kind: FaultKind::RouterKill { node: 7 } },
-                Fault { at_cycle: 0, kind: FaultKind::Straggler { node: 2, factor: 4 } },
-                Fault { at_cycle: 2000, kind: FaultKind::FollowerDrop { node: 9 } },
+                Fault::new(1000, FaultKind::LinkKill { from: 3, to: 4 }),
+                Fault::new(5000, FaultKind::RouterKill { node: 7 }),
+                Fault::new(0, FaultKind::Straggler { node: 2, factor: 4 }),
+                Fault::new(2000, FaultKind::FollowerDrop { node: 9 }),
             ]
         );
+    }
+
+    #[test]
+    fn parses_transient_faults_and_policy_flags() {
+        let p = FaultPlan::parse("link:3-4@1000+500;router:7@50+9;straggle:2x4@10+20;resume;reroute")
+            .unwrap();
+        assert!(p.resume && p.reroute);
+        assert!(p.repair, "resume/reroute do not imply norepair");
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::transient(1000, FaultKind::LinkKill { from: 3, to: 4 }, 500),
+                Fault::transient(50, FaultKind::RouterKill { node: 7 }, 9),
+                Fault::transient(10, FaultKind::Straggler { node: 2, factor: 4 }, 20),
+            ]
+        );
+        assert_eq!(p.faults[0].heals_at, Some(1500));
+        assert_eq!(p.faults[1].heals_at, Some(59));
+    }
+
+    #[test]
+    fn rejects_malformed_transients() {
+        assert!(FaultPlan::parse("drop:3@100+50").is_err(), "drop cannot heal");
+        assert!(FaultPlan::parse("link:0-1@100+0").is_err(), "zero duration");
+        assert!(FaultPlan::parse("link:0-1@100+x").is_err(), "bad duration");
+        assert!(FaultPlan::parse("resume:yes").is_err(), "resume takes no args");
+        assert!(FaultPlan::parse("reroute:1").is_err(), "reroute takes no args");
     }
 
     #[test]
@@ -229,9 +371,36 @@ mod tests {
     fn validate_bounds_node_indices() {
         let p = FaultPlan::parse("router:7@5").unwrap();
         assert!(p.validate(8).is_ok());
-        assert!(p.validate(7).is_err());
+        assert_eq!(
+            p.validate(7),
+            Err(FaultError::NodeOutOfRange { fault: "router:7".into(), node: 7, n_nodes: 7 })
+        );
         let l = FaultPlan::parse("link:0-9@5").unwrap();
-        assert!(l.validate(9).is_err());
+        assert_eq!(
+            l.validate(9),
+            Err(FaultError::NodeOutOfRange { fault: "link:0-9".into(), node: 9, n_nodes: 9 })
+        );
+    }
+
+    #[test]
+    fn validate_rejects_self_links() {
+        let p = FaultPlan::parse("link:3-3@5").unwrap();
+        assert_eq!(p.validate(8), Err(FaultError::SelfLink { node: 3 }));
+        // The typed error carries a readable message for CLI surfaces.
+        assert!(p.validate(8).unwrap_err().to_string().contains("self-link"));
+    }
+
+    #[test]
+    fn validate_rejects_unhealable_transients() {
+        // The parser already rejects `drop:...+D`; a hand-built plan must
+        // still fail validation (defense in depth for programmatic plans).
+        let mut p = FaultPlan::default();
+        p.faults.push(Fault {
+            at_cycle: 10,
+            kind: FaultKind::FollowerDrop { node: 1 },
+            heals_at: Some(20),
+        });
+        assert_eq!(p.validate(4), Err(FaultError::NotHealable { fault: "drop:1".into() }));
     }
 
     #[test]

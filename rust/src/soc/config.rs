@@ -185,6 +185,10 @@ impl SocConfig {
         if cfg.spm_bytes as u64 > cfg.window {
             return Err("spm does not fit the address window".into());
         }
+        // The loader knows the final geometry, so structurally invalid
+        // fault specs (out-of-fabric nodes, self-links) fail here with
+        // the typed message instead of surviving to `Soc::new`.
+        cfg.faults.validate(cfg.n_nodes()).map_err(|e| e.to_string())?;
         Ok(cfg)
     }
 
@@ -280,5 +284,17 @@ mod tests {
         assert!(SocConfig::from_toml("faults = \"router:x@300\"").is_err());
         // Default presets ship a disarmed plan — healthy by construction.
         assert!(SocConfig::eval_4x5().faults.is_empty());
+    }
+
+    #[test]
+    fn toml_validates_fault_spec_against_geometry() {
+        // eval_4x5 default geometry is 20 nodes; node 25 is outside it.
+        let err = SocConfig::from_toml("faults = \"router:25@300\"").unwrap_err();
+        assert!(err.contains("outside the 20-node fabric"), "{err}");
+        // Self-links are structural nonsense regardless of geometry.
+        let err = SocConfig::from_toml("faults = \"link:3-3@10\"").unwrap_err();
+        assert!(err.contains("self-link"), "{err}");
+        // A spec that fits the declared grid passes.
+        assert!(SocConfig::from_toml("cols = 6\nrows = 5\nfaults = \"router:25@300\"").is_ok());
     }
 }

@@ -513,7 +513,7 @@ impl Soc {
         let (order, ordered) = schedule_pairs(strategy, &topo, src, dests.to_vec());
         let ordered: Vec<ChainDest> = ordered
             .into_iter()
-            .map(|(node, pattern)| ChainDest { node, pattern })
+            .map(|(node, pattern)| ChainDest { node, pattern, vias: Default::default() })
             .collect();
         let now = self.net.cycle;
         self.nodes[src.0].torrent.submit(

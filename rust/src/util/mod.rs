@@ -37,6 +37,11 @@ pub mod stream {
     pub const MIX: u64 = 0x08 << 56;
     /// Scheduler-internal randomized restarts.
     pub const SCHED: u64 = 0x09 << 56;
+    /// Retry-backoff jitter in the serving loop (`serve::RetryPolicy`).
+    /// Call sites compose `(attempt << 32) + request_id` into the low
+    /// bits so every (request, attempt) pair draws an independent value
+    /// regardless of processing order.
+    pub const RETRY: u64 = 0x0A << 56;
 }
 
 /// Construct a seeded [`rng::Rng`] on an independent named stream: the

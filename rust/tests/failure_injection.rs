@@ -1,7 +1,7 @@
 //! Failure-injection and adversarial-condition tests: busy followers,
 //! saturated fabrics, degenerate patterns, protocol edge cases.
 
-use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest, TaskStatus};
+use torrent::coordinator::{Coordinator, EngineKind, P2mpRequest, TaskOutcome, TaskStatus};
 use torrent::dma::torrent::dse::AffinePattern;
 use torrent::dma::torrent::{ChainDest, ChainTask};
 use torrent::noc::{Message, NodeId, Packet, TopologyKind};
@@ -105,6 +105,7 @@ fn pathological_zigzag_chain() {
         .map(|&n| ChainDest {
             node: NodeId(n),
             pattern: AffinePattern::contiguous(c.soc.map.base_of(NodeId(n)) + 0x80000, bytes),
+            vias: Default::default(),
         })
         .collect();
     let now = c.soc.cycle();
@@ -282,9 +283,15 @@ fn chaos_case(topology: TopologyKind, seed: u64) -> (SocConfig, Vec<NodeId>, usi
             1 => FaultKind::FollowerDrop { node },
             _ => FaultKind::Straggler { node, factor: rng.range(2, 4) as u32 },
         };
-        faults.push(Fault { at_cycle, kind });
+        faults.push(Fault::new(at_cycle, kind));
     }
-    let plan = FaultPlan { faults, detect_timeout: CHAOS_DETECT_TIMEOUT, repair: true };
+    let plan = FaultPlan {
+        faults,
+        detect_timeout: CHAOS_DETECT_TIMEOUT,
+        repair: true,
+        resume: false,
+        reroute: false,
+    };
     (cfg.with_faults(plan), dests, bytes)
 }
 
@@ -473,5 +480,62 @@ fn chaos_faulted_runs_identical_across_step_modes() {
                 );
             }
         }
+    }
+}
+
+/// A transient router kill (`router:N@C+D`) heals after its duration.
+/// The cfg lost while the router was down stays lost — healing restores
+/// the fabric, not in-flight state — so the wedged chain is detected
+/// and repaired on the now-healthy fabric: every destination served,
+/// none written off. Both the activation and the heal are barrier
+/// events, so event-driven, full-tick and sharded-parallel stepping
+/// land on identical cycles, outcomes and latencies.
+#[test]
+fn transient_fault_heals_and_stays_identical_across_step_modes() {
+    let bytes = 8 * 1024;
+    let payload = chaos_payload(99, bytes);
+    let run = |mode: StepMode| {
+        let cfg = SocConfig::custom(4, 4, 64 * 1024)
+            .with_faults(FaultPlan::parse("router:1@0+600;timeout:800").unwrap());
+        let mut c = Coordinator::with_step_mode(cfg, mode);
+        let src = NodeId(0);
+        let base = c.soc.map.base_of(src);
+        c.soc.nodes[src.0].mem.write(base, &payload);
+        let t = c
+            .submit_simple(
+                src,
+                &[NodeId(4), NodeId(5)],
+                bytes,
+                EngineKind::Torrent(Strategy::Greedy),
+                true,
+            )
+            .unwrap();
+        let report = c.run_to_completion(2_000_000);
+        assert_eq!(t.status(&c), TaskStatus::Repaired);
+        match c.record(t).unwrap().outcome.clone().unwrap() {
+            TaskOutcome::Repaired { served, lost, .. } => {
+                assert_eq!(served, 2, "the healed fabric serves every destination");
+                assert!(lost.is_empty(), "nothing is written off after the heal");
+            }
+            o => panic!("expected Repaired, got {o:?}"),
+        }
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        for d in [NodeId(4), NodeId(5)] {
+            assert_eq!(
+                c.soc.nodes[d.0].mem.peek(c.soc.map.base_of(d) + half, bytes),
+                &payload[..],
+                "dest {d:?} must hold exact bytes after the heal"
+            );
+        }
+        (report.cycles, c.record(t).unwrap().outcome.clone(), c.latency_of(t))
+    };
+    let ev = run(StepMode::EventDriven);
+    assert_eq!(ev, run(StepMode::FullTick), "transient heal diverged across step modes");
+    for threads in [2, 4] {
+        assert_eq!(
+            ev,
+            run(StepMode::Parallel { threads }),
+            "Parallel{{{threads}}} diverged on a transient-fault run"
+        );
     }
 }

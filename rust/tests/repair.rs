@@ -9,6 +9,7 @@
 //! whole-protocol route checks.
 
 use torrent::coordinator::{plan_repair_chains, Coordinator, EngineKind, TaskOutcome, TaskStatus};
+use torrent::dma::torrent::ChainVias;
 use torrent::noc::{Degraded, NodeId, Topo, TopologyKind};
 use torrent::sched::{schedule_pairs, Strategy};
 use torrent::sim::FaultPlan;
@@ -33,8 +34,8 @@ fn dests(nodes: &[usize]) -> Vec<(NodeId, ())> {
     nodes.iter().map(|&n| (NodeId(n), ())).collect()
 }
 
-fn chain_nodes(chain: &[(NodeId, ())]) -> Vec<usize> {
-    chain.iter().map(|(n, _)| n.0).collect()
+fn chain_nodes(chain: &[(NodeId, (), ChainVias)]) -> Vec<usize> {
+    chain.iter().map(|(n, _, _)| n.0).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -48,7 +49,7 @@ fn healthy_fabric_plans_one_chain_in_schedule_order() {
     let deg = Degraded::healthy(mesh4());
     let src = NodeId(0);
     let (order, _) = schedule_pairs(Strategy::Greedy, &deg, src, dests(&[10, 3, 5]));
-    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&[10, 3, 5]));
+    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&[10, 3, 5]), false);
     assert!(lost.is_empty());
     assert_eq!(chains.len(), 1, "no damage, no reason to split");
     assert_eq!(chain_nodes(&chains[0]), order.iter().map(|n| n.0).collect::<Vec<_>>());
@@ -58,7 +59,8 @@ fn healthy_fabric_plans_one_chain_in_schedule_order() {
 #[test]
 fn dead_destination_is_lost_not_chained() {
     let deg = degraded(&[5]);
-    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]));
+    let (chains, lost) =
+        plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]), false);
     assert_eq!(lost, vec![NodeId(5)]);
     assert_eq!(chains.len(), 1);
     assert_eq!(chain_nodes(&chains[0]), vec![4]);
@@ -69,7 +71,8 @@ fn dead_destination_is_lost_not_chained() {
 #[test]
 fn dead_source_loses_everything() {
     let deg = degraded(&[0]);
-    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[1, 4, 5]));
+    let (chains, lost) =
+        plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[1, 4, 5]), false);
     assert!(chains.is_empty());
     let mut lost: Vec<usize> = lost.iter().map(|n| n.0).collect();
     lost.sort_unstable();
@@ -86,7 +89,8 @@ fn cfg_route_damage_loses_the_hop_despite_clean_data_legs() {
     let deg = degraded(&[1]);
     assert!(deg.path_is_clean(NodeId(0), NodeId(4)) && deg.path_is_clean(NodeId(4), NodeId(5)));
     assert!(!deg.path_is_clean(NodeId(0), NodeId(5)), "geometry premise");
-    let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]));
+    let (chains, lost) =
+        plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]), false);
     assert_eq!(lost, vec![NodeId(5)]);
     assert_eq!(chains.len(), 1);
     assert_eq!(chain_nodes(&chains[0]), vec![4]);
@@ -102,11 +106,11 @@ fn plans_partition_dests_into_clean_chains_and_unreachable() {
     for kill in 1..16usize {
         let deg = degraded(&[kill]);
         let ds: Vec<usize> = all.iter().copied().filter(|&d| d != kill).collect();
-        let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&ds));
+        let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&ds), false);
         let mut covered: Vec<usize> = lost.iter().map(|n| n.0).collect();
         for chain in &chains {
             let mut prev = src;
-            for &(node, _) in chain {
+            for &(node, _, _) in chain {
                 assert!(
                     deg.path_is_clean(src, node)
                         && deg.path_is_clean(prev, node)
@@ -254,7 +258,7 @@ fn repair_replans_around_cfg_route_damage() {
     let rec = c.record(t).unwrap();
     assert_eq!(rec.repairs, 1, "one repair round suffices");
     match rec.outcome.clone().unwrap() {
-        TaskOutcome::Repaired { suspect, served, lost } => {
+        TaskOutcome::Repaired { suspect, served, lost, .. } => {
             assert_eq!(suspect, NodeId(5));
             assert_eq!(served, 1);
             assert_eq!(lost, vec![NodeId(5)]);
@@ -299,4 +303,162 @@ fn repair_is_not_double_issued() {
     }
     assert_eq!(c.record(t).unwrap().repairs, 1, "manual re-checks must not re-issue");
     assert_eq!(c.record(t).unwrap().outcome, outcome);
+}
+
+// ---------------------------------------------------------------------------
+// Reroute: waypoint candidates revive hops the default routes lose
+// ---------------------------------------------------------------------------
+
+/// With reroute armed, the cfg-damaged hop from
+/// `cfg_route_damage_loses_the_hop_despite_clean_data_legs` is chained
+/// after all: the cfg leg 0 -> 5 detours through the YX corner 4 while
+/// the clean legs keep their default routes.
+#[test]
+fn reroute_revives_a_cfg_damaged_hop() {
+    let deg = degraded(&[1]);
+    let (chains, lost) =
+        plan_repair_chains(&deg, Strategy::Greedy, NodeId(0), dests(&[4, 5]), true);
+    assert!(lost.is_empty(), "a clean waypoint exists for every leg");
+    assert_eq!(chains.len(), 1);
+    assert_eq!(chain_nodes(&chains[0]), vec![4, 5]);
+    assert_eq!(chains[0][0].2, ChainVias::default(), "hop 4 needs no detour");
+    let vias = chains[0][1].2;
+    assert_eq!(vias.cfg, Some(NodeId(4)), "cfg 0 -> 5 detours via the YX corner");
+    assert_eq!(vias.data, None, "data 4 -> 5 is clean by default");
+    assert_eq!(vias.back, None, "grant/finish 5 -> 4 is clean by default");
+}
+
+/// Every leg of every rerouted chain is clean under its chosen route,
+/// and reroute never loses more destinations than the default planner.
+#[test]
+fn rerouted_chains_satisfy_every_protocol_leg() {
+    let src = NodeId(0);
+    let all = [3, 5, 6, 9, 10, 12, 15];
+    for kill in 1..16usize {
+        let deg = degraded(&[kill]);
+        let ds: Vec<usize> = all.iter().copied().filter(|&d| d != kill).collect();
+        let (chains, lost) = plan_repair_chains(&deg, Strategy::Greedy, src, dests(&ds), true);
+        let (_, lost_default) =
+            plan_repair_chains(&deg, Strategy::Greedy, src, dests(&ds), false);
+        assert!(
+            lost.len() <= lost_default.len(),
+            "kill {kill}: reroute lost more destinations than the default planner"
+        );
+        for chain in &chains {
+            let mut prev = src;
+            for &(node, _, vias) in chain {
+                assert!(
+                    deg.route_is_clean(src, vias.cfg, node),
+                    "kill {kill}: dirty cfg leg to {node:?}"
+                );
+                assert!(
+                    deg.route_is_clean(prev, vias.data, node),
+                    "kill {kill}: dirty data leg to {node:?}"
+                );
+                assert!(
+                    deg.route_is_clean(node, vias.back, prev),
+                    "kill {kill}: dirty grant/finish leg from {node:?}"
+                );
+                prev = node;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resume: partial-transfer equivalence properties
+// ---------------------------------------------------------------------------
+
+/// 2x2 chain 0 -> 1 -> 3; router 3 dies mid-stream. The dead boundary
+/// sinks node 1's forwards but keeps returning credits, so node 1 still
+/// receives and scatters the whole payload — only the finish back-prop
+/// is lost. With resume armed, the repair recognizes the survivor's
+/// watermark already covers the transfer and serves it without
+/// re-streaming a single byte.
+#[test]
+fn fully_delivered_survivor_is_served_without_restreaming() {
+    let bytes = 32 * 1024;
+    let cfg = SocConfig::custom(2, 2, 64 * 1024)
+        .with_faults(FaultPlan::parse("router:3@300;timeout:800;resume").unwrap());
+    let mut c = Coordinator::new(cfg);
+    let src = NodeId(0);
+    let payload: Vec<u8> = (0..bytes).map(|i| (i * 31 % 253) as u8).collect();
+    let base = c.soc.map.base_of(src);
+    c.soc.nodes[src.0].mem.write(base, &payload);
+    let t = c
+        .submit_simple(
+            src,
+            &[NodeId(1), NodeId(3)],
+            bytes,
+            EngineKind::Torrent(Strategy::Greedy),
+            true,
+        )
+        .unwrap();
+    c.run_to_completion(2_000_000);
+    assert_eq!(t.status(&c), TaskStatus::Repaired);
+    match c.record(t).unwrap().outcome.clone().unwrap() {
+        TaskOutcome::Repaired { served, lost, restreamed_bytes, .. } => {
+            assert_eq!(served, 1);
+            assert_eq!(lost, vec![NodeId(3)]);
+            assert_eq!(restreamed_bytes, 0, "survivor held the full payload already");
+        }
+        o => panic!("expected Repaired, got {o:?}"),
+    }
+    let half = c.soc.cfg.spm_bytes as u64 / 2;
+    assert_eq!(
+        c.soc.nodes[1].mem.peek(c.soc.map.base_of(NodeId(1)) + half, bytes),
+        &payload[..],
+        "survivor payload must be byte-exact"
+    );
+}
+
+/// 4x4 chain 0 -> 4 -> 5; router 4 (the head hop) dies mid-stream,
+/// stranding a delivered prefix at survivor 5. The repair needs reroute
+/// either way — the default XY back route 5 -> 0 turns at the dead
+/// router — and with resume armed on top, only the undelivered tail is
+/// re-streamed. The survivor's payload is byte-exact in both modes:
+/// resume splices the fresh tail onto the salvaged prefix.
+#[test]
+fn resume_restreams_only_the_tail_and_stays_byte_exact() {
+    let bytes = 64 * 1024;
+    let payload: Vec<u8> = (0..bytes).map(|i| (i * 131 % 251) as u8).collect();
+    let mut run = |spec: &str| -> u64 {
+        let cfg = SocConfig::custom(4, 4, 256 * 1024)
+            .with_faults(FaultPlan::parse(spec).unwrap());
+        let mut c = Coordinator::new(cfg);
+        let src = NodeId(0);
+        let base = c.soc.map.base_of(src);
+        c.soc.nodes[src.0].mem.write(base, &payload);
+        let t = c
+            .submit_simple(
+                src,
+                &[NodeId(4), NodeId(5)],
+                bytes,
+                EngineKind::Torrent(Strategy::Greedy),
+                true,
+            )
+            .unwrap();
+        c.run_to_completion(4_000_000);
+        assert_eq!(t.status(&c), TaskStatus::Repaired, "{spec}");
+        let restreamed = match c.record(t).unwrap().outcome.clone().unwrap() {
+            TaskOutcome::Repaired { served, lost, restreamed_bytes, .. } => {
+                assert_eq!(served, 1, "{spec}: survivor 5 must be served");
+                assert_eq!(lost, vec![NodeId(4)], "{spec}");
+                restreamed_bytes
+            }
+            o => panic!("{spec}: expected Repaired, got {o:?}"),
+        };
+        let half = c.soc.cfg.spm_bytes as u64 / 2;
+        assert_eq!(
+            c.soc.nodes[5].mem.peek(c.soc.map.base_of(NodeId(5)) + half, bytes),
+            &payload[..],
+            "{spec}: survivor payload must be byte-exact"
+        );
+        restreamed
+    };
+    let full = run("router:4@600;timeout:1000;reroute");
+    let tail = run("router:4@600;timeout:1000;reroute;resume");
+    assert_eq!(full, bytes as u64, "without resume the survivor re-streams in full");
+    assert!(tail < full, "resume must re-stream strictly fewer bytes ({tail} vs {full})");
+    assert!(tail > 0, "the kill lands mid-stream, so an undelivered tail remains");
 }

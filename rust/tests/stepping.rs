@@ -253,8 +253,8 @@ fn initiator_hints_cfg_issue_wait() {
     let mut t = Torrent::new(NodeId(0));
     let read = AffinePattern::contiguous(0, 256);
     let dests = vec![
-        ChainDest { node: NodeId(1), pattern: AffinePattern::contiguous(0x100, 256) },
-        ChainDest { node: NodeId(2), pattern: AffinePattern::contiguous(0x200, 256) },
+        ChainDest { node: NodeId(1), pattern: AffinePattern::contiguous(0x100, 256), vias: Default::default() },
+        ChainDest { node: NodeId(2), pattern: AffinePattern::contiguous(0x200, 256), vias: Default::default() },
     ];
     t.submit(ChainTask { task: 1, read, dests, with_data: false }, 0);
     assert_eq!(t.next_event(0), Some(0), "queued task is immediate work");
