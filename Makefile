@@ -4,7 +4,7 @@
 .PHONY: all build test tier1 artifacts figures bench-smoke bench-baseline \
 	bench-scaling examples-smoke doc clean topo-sweep topo-matrix \
 	golden-bless fault-sweep fault-matrix serve-sim serve-smoke \
-	resilience-sweep resilience-smoke
+	resilience-sweep resilience-smoke contention-sweep contention-smoke
 
 all: tier1
 
@@ -44,6 +44,8 @@ bench-baseline:
 		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench serve
 	TORRENT_BENCH_JSON=BENCH_resilience.json \
 		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench resilience
+	TORRENT_BENCH_JSON=BENCH_sched.json \
+		TORRENT_BENCH_CALIBRATED=1 cargo bench --bench sched
 
 # The sharded-stepper scaling curve (cycles/s vs threads at 8x8 through
 # 64x64; ISSUE 7 satellite). Prints M cycles/s and the speedup vs t=1
@@ -118,6 +120,25 @@ resilience-smoke:
 	cargo run --release -- serve-sim --topology ring --faults "router:5@1500+2000;timeout:1200;resume" --retries 3
 	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_resilience.json \
 		cargo bench --bench resilience
+
+# The full contention sweep: naive/greedy/TSP/load-aware chain
+# scheduling under seeded background traffic at rising load, every
+# in-tree guarantee (byte-exact delivery, cross-step-mode parity,
+# load-aware p99 <= greedy p99 at the congested point) asserted inside
+# the sweep (EXPERIMENTS.md §Contention sweep).
+contention-sweep:
+	cargo run --release -- contention-sweep
+
+# CI smoke: the quick two-level sweep (guarantees asserted internally),
+# the contention differential suite, one load-aware serve-sim leg, and
+# one iteration of the sched bench against the committed
+# BENCH_sched.json.
+contention-smoke:
+	cargo run --release -- contention-sweep --quick
+	cargo test --release --test contention
+	cargo run --release -- serve-sim --scheduler load_aware
+	TORRENT_BENCH_ITERS=1 TORRENT_BENCH_BASELINE=BENCH_sched.json \
+		cargo bench --bench sched
 
 # Measure and commit the golden mesh cycle pins (rust/tests/
 # golden_cycles.tsv). Run once on the first machine with a toolchain;

@@ -1,0 +1,110 @@
+//! Chain-scheduler benchmarks — wall-clock cost of planning, not of the
+//! transfers it plans (ISSUE 10).
+//!
+//! Greedy (the load-blind default) against load-aware ordering plus the
+//! k-way partition pass, at the paper's destination-set scales (8, 32
+//! and 63 of 64 nodes on an 8×8 mesh), under a saturated-row load view.
+//! Each sample plans many independent seeded destination sets, so the
+//! numbers amortize the per-call setup and expose the O(n²) leg-score
+//! walks the load-aware path adds.
+//!
+//! CI integration mirrors `serve`: `TORRENT_BENCH_JSON` writes a
+//! `torrent-bench-v1` baseline, `TORRENT_BENCH_BASELINE` compares p50s
+//! against the committed `BENCH_sched.json` and fails on >2x calibrated
+//! regressions.
+
+mod common;
+
+use torrent::noc::{Mesh, NodeId};
+use torrent::sched::load::hot_row_view;
+use torrent::sched::{greedy_order, load_aware_order, partition_chains};
+use torrent::util::stream;
+
+/// Seeded destination sets: `reps` draws of `n_dests` distinct non-source
+/// nodes on the 64-node mesh.
+fn dest_sets(n_dests: usize, reps: usize) -> Vec<Vec<NodeId>> {
+    let mut rng = torrent::util::rng(907, stream::BENCH + n_dests as u64);
+    (0..reps)
+        .map(|_| {
+            let mut pool: Vec<usize> = (1..64).collect();
+            let mut set = Vec::with_capacity(n_dests);
+            for _ in 0..n_dests {
+                let i = rng.below(pool.len() as u64) as usize;
+                set.push(NodeId(pool.swap_remove(i)));
+            }
+            set
+        })
+        .collect()
+}
+
+fn main() {
+    common::banner("sched: chain-planning benchmarks (greedy vs load-aware, 8x8)");
+    let mesh = Mesh::new(8, 8);
+    let src = NodeId(0);
+    let hot = hot_row_view(64, 8, 0, 1000);
+    let reps = 64;
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    for n_dests in [8usize, 32, 63] {
+        let sets = dest_sets(n_dests, reps);
+
+        // Greedy: the load-blind baseline every strategy is measured
+        // against ("is load-awareness affordable at dispatch time?").
+        let name = format!("sched_greedy_{n_dests}");
+        let mut sink = 0usize;
+        let s = common::bench(&name, 1, common::iters(20), || {
+            for set in &sets {
+                sink += greedy_order(&mesh, src, set).len();
+            }
+        });
+        results.push((name, s.p50));
+
+        // Load-aware ordering plus the partition decision — the exact
+        // work `Strategy::LoadAware` adds on the dispatch path.
+        let name = format!("sched_load_aware_{n_dests}");
+        let mut splits = 0usize;
+        let s = common::bench(&name, 1, common::iters(20), || {
+            splits = 0;
+            for set in &sets {
+                let order = load_aware_order(&mesh, src, set, &hot);
+                let parts = partition_chains(&mesh, src, &order, &hot);
+                sink += order.len();
+                if parts.len() > 1 {
+                    splits += 1;
+                }
+            }
+        });
+        println!("  -> {splits}/{reps} sets split under the saturated row");
+        results.push((name, s.p50));
+        assert!(sink > 0, "planner output must be consumed");
+    }
+
+    // Baseline plumbing (see Makefile `bench-baseline` / `contention-smoke`).
+    if let Ok(path) = std::env::var("TORRENT_BENCH_JSON") {
+        let calibrated = std::env::var("TORRENT_BENCH_CALIBRATED").is_ok();
+        let note = if calibrated {
+            "calibrated from a real run via `make bench-baseline`"
+        } else {
+            "placeholder written without calibration; run `make bench-baseline`"
+        };
+        common::write_bench_json(&path, "sched", calibrated, note, &results)
+            .expect("write bench JSON");
+        println!("wrote baseline {path} (calibrated={calibrated})");
+    }
+    if let Ok(path) = std::env::var("TORRENT_BENCH_BASELINE") {
+        common::banner("sched: baseline comparison");
+        match common::read_bench_json(&path) {
+            Err(e) => {
+                eprintln!("baseline unavailable: {e}");
+                std::process::exit(1);
+            }
+            Ok(base) => {
+                let regressions = common::count_regressions(&results, &base);
+                if regressions > 0 {
+                    eprintln!("{regressions} bench regression(s) vs {path}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+}

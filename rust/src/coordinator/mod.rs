@@ -579,6 +579,15 @@ pub struct Record {
     /// Destinations each live repair chain serves, so a completed chain
     /// can advance its members' watermarks to "fully delivered".
     repair_members: BTreeMap<u32, Vec<NodeId>>,
+    /// Engine ids of the load-aware partition's sibling chains still in
+    /// flight. Empty for single-chain tasks.
+    part_live: Vec<u32>,
+    /// Latest finish cycle among completed sibling chains — the parent
+    /// task's finish once the last sibling lands.
+    part_finish: u64,
+    /// Width of the load-aware partition this task dispatched as
+    /// (0 = single chain). Survives completion, unlike `part_live`.
+    part_chains: usize,
 }
 
 /// A validated request waiting in an admission queue.
@@ -591,6 +600,12 @@ struct Pending {
 }
 
 impl Record {
+    /// Number of sibling chains the load-aware partition pass split this
+    /// task into at dispatch — `0` for a task dispatched as one chain.
+    pub fn partition_width(&self) -> usize {
+        self.part_chains
+    }
+
     /// η_P2MP of the completed task (Eq. 1).
     pub fn eta(&self) -> Option<f64> {
         self.result
@@ -623,6 +638,9 @@ pub struct Coordinator {
     pub orphan_results: Vec<TaskResult>,
     /// Repair-chain engine id → index of the record it is healing.
     repair_parent: BTreeMap<u32, usize>,
+    /// Partition sibling-chain engine id → index of the parent record
+    /// (load-aware k-way splits; see [`Coordinator::dispatch`]).
+    part_parent: BTreeMap<u32, usize>,
     /// Fault plan armed: run the heartbeat watchdog between quanta.
     fault_watch: bool,
 }
@@ -654,6 +672,7 @@ impl Coordinator {
             open_tasks: 0,
             orphan_results: Vec::new(),
             repair_parent: BTreeMap::new(),
+            part_parent: BTreeMap::new(),
             fault_watch,
         }
     }
@@ -861,6 +880,9 @@ impl Coordinator {
             restreamed: 0,
             resume_mark: BTreeMap::new(),
             repair_members: BTreeMap::new(),
+            part_live: Vec::new(),
+            part_finish: 0,
+            part_chains: 0,
         });
         self.open_tasks += 1;
         // Fast path: a task with no unfinished dependencies goes straight
@@ -976,7 +998,28 @@ impl Coordinator {
             (self.records[idx].task.0, self.records[idx].engine, self.records[idx].src);
         let dests = if let EngineKind::Torrent(strategy) = engine {
             let topo = self.soc.topo();
-            let (order, ordered) = sched::schedule_pairs(strategy, &topo, src, dests);
+            // Load-aware scheduling observes the fabric at dispatch time:
+            // the snapshot folds the directed-link counters into windowed
+            // EWMA occupancies. Static strategies never take the snapshot,
+            // so their dispatch stays byte-identical to before.
+            let load =
+                (strategy == sched::Strategy::LoadAware).then(|| self.soc.net.load_view());
+            let (order, ordered) =
+                sched::schedule_pairs_with_load(strategy, &topo, src, dests, load.as_ref());
+            // Partition pass: when the snapshot predicts k concurrent
+            // sub-chains beat the best single chain, dispatch the split
+            // as sibling ChainTasks that jointly complete this record.
+            // `drop_offset` arms a single-chain payload fault the split
+            // could not carry — keep the single chain in that case.
+            if let Some(view) = load.as_ref() {
+                if drop_offset == 0 {
+                    let parts = sched::partition_chains(&topo, src, &order, view);
+                    if parts.len() > 1 {
+                        return self
+                            .dispatch_partitioned(idx, read, order, ordered, parts, with_data);
+                    }
+                }
+            }
             self.records[idx].chain_order = Some(order);
             ordered
         } else {
@@ -1000,6 +1043,58 @@ impl Coordinator {
             .engine_mut(engine)
             .submit(TaskSpec { task, read, dests, with_data, drop_offset }, now)
             .expect("request validated at submission");
+    }
+
+    /// Dispatch a load-aware split as `k` sibling chains with fresh
+    /// engine ids (like repair chains, submitted as `ChainTask`s
+    /// directly). The parent record completes when the last sibling
+    /// lands ([`Coordinator::collect_and_dispatch`]) with a synthesized
+    /// result spanning dispatch to the latest sibling finish — dependency
+    /// edges therefore release only after *every* destination was
+    /// served, exactly as for a single chain.
+    fn dispatch_partitioned(
+        &mut self,
+        idx: usize,
+        read: AffinePattern,
+        order: Vec<NodeId>,
+        ordered: Vec<(NodeId, AffinePattern)>,
+        parts: Vec<Vec<NodeId>>,
+        with_data: bool,
+    ) {
+        let src = self.records[idx].src;
+        let now = self.soc.cycle();
+        self.records[idx].dispatched_at = now;
+        if self.fault_watch {
+            self.records[idx].act_baseline =
+                Some(order.iter().map(|&h| self.soc.net.router_activity(h)).collect());
+            self.records[idx].repair_spec = Some((read.clone(), ordered.clone(), with_data));
+        }
+        self.records[idx].chain_order = Some(order);
+        self.records[idx].part_chains = parts.len();
+        let mut rest = ordered;
+        for part in parts {
+            // Segments are contiguous slices of the visit order, so the
+            // keyed pairs split at the same boundaries.
+            let tail = rest.split_off(part.len());
+            let seg = std::mem::replace(&mut rest, tail);
+            debug_assert!(
+                seg.iter().map(|(n, _)| *n).eq(part.iter().copied()),
+                "partition segments must tile the visit order"
+            );
+            let pid = self.next_task;
+            self.next_task += 1;
+            debug_assert!(pid & XDMA_SUBTASK_BIT == 0, "task id space exhausted");
+            self.records[idx].part_live.push(pid);
+            self.part_parent.insert(pid, idx);
+            let cdests: Vec<ChainDest> = seg
+                .into_iter()
+                .map(|(node, pattern)| ChainDest { node, pattern, vias: ChainVias::default() })
+                .collect();
+            self.soc.nodes[src.0]
+                .torrent
+                .submit(ChainTask { task: pid, read: read.clone(), dests: cdests, with_data }, now);
+        }
+        debug_assert!(rest.is_empty(), "every ordered destination joined a segment");
     }
 
     /// Synchronize records with engine state: drain completions and
@@ -1059,6 +1154,30 @@ impl Coordinator {
                                 served_bytes: served as u64 * rec.bytes as u64,
                                 lost_bytes,
                                 restreamed_bytes: rec.restreamed,
+                            });
+                            self.open_tasks -= 1;
+                            completed = true;
+                        }
+                        continue;
+                    }
+                    if let Some(&pidx) = self.part_parent.get(&res.task) {
+                        // A partition sibling finished. When the last
+                        // live one lands, the parent task completes with
+                        // a result spanning its dispatch to the latest
+                        // sibling finish — the same join the repair path
+                        // uses, minus any outcome (a healthy split is
+                        // not a fault).
+                        self.part_parent.remove(&res.task);
+                        let rec = &mut self.records[pidx];
+                        rec.part_live.retain(|&t| t != res.task);
+                        rec.part_finish = rec.part_finish.max(res.finished_at);
+                        if rec.part_live.is_empty() && rec.result.is_none() {
+                            rec.result = Some(TaskResult {
+                                task: rec.task.0,
+                                submitted_at: rec.dispatched_at,
+                                finished_at: rec.part_finish,
+                                bytes: rec.bytes,
+                                n_dests: rec.n_dests,
                             });
                             self.open_tasks -= 1;
                             completed = true;
@@ -1243,10 +1362,14 @@ impl Coordinator {
     fn progress_sum(&self, idx: usize) -> u64 {
         let rec = &self.records[idx];
         let mut sum = 0u64;
-        let ids: &[u32] = if rec.repair_live.is_empty() {
-            std::slice::from_ref(&rec.task.0)
-        } else {
+        let ids: &[u32] = if !rec.repair_live.is_empty() {
             &rec.repair_live
+        } else if !rec.part_live.is_empty() {
+            // A partitioned task's engine state lives under its sibling
+            // ids; the parent id never reached an engine.
+            &rec.part_live
+        } else {
+            std::slice::from_ref(&rec.task.0)
         };
         for (i, node) in self.soc.nodes.iter().enumerate() {
             if self.soc.node_dropped(NodeId(i)) {
@@ -1299,9 +1422,11 @@ impl Coordinator {
             }
             prev = h;
         }
-        if rec.outcome.is_none() {
-            // Engine-level evidence only applies before a repair: cancel
-            // wipes task state everywhere, which would finger hop 0.
+        if rec.outcome.is_none() && rec.part_live.is_empty() {
+            // Engine-level evidence only applies before a repair (cancel
+            // wipes task state everywhere, which would finger hop 0) and
+            // to single chains — a partitioned task's engine state lives
+            // under sibling ids, not `rec.task`.
             for &h in chain {
                 if self.soc.nodes[h.0].torrent.progress_of(rec.task.0).is_none() {
                     return Some(h);
@@ -1336,6 +1461,7 @@ impl Coordinator {
         let reroute = self.soc.cfg.faults.reroute;
         let mut ids = vec![task.0];
         ids.extend(self.records[idx].repair_live.drain(..));
+        ids.extend(self.records[idx].part_live.drain(..));
         // Resume: read back each survivor's delivery watermark — and
         // salvage buffered-but-unscattered prefixes into its scratchpad —
         // BEFORE the cancel below wipes the follower state. Marks from a
@@ -1366,6 +1492,7 @@ impl Coordinator {
         // the fabric can drain and a replacement cannot double-report.
         for id in &ids {
             self.repair_parent.remove(id);
+            self.part_parent.remove(id);
             self.records[idx].repair_members.remove(id);
         }
         for node in &mut self.soc.nodes {

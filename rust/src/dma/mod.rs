@@ -54,6 +54,7 @@ impl EngineKind {
             EngineKind::Torrent(Strategy::Naive) => "torrent/naive",
             EngineKind::Torrent(Strategy::Greedy) => "torrent/greedy",
             EngineKind::Torrent(Strategy::Tsp) => "torrent/tsp",
+            EngineKind::Torrent(Strategy::LoadAware) => "torrent/load_aware",
             EngineKind::Idma => "idma",
             EngineKind::Xdma => "xdma",
             EngineKind::Mcast => "mcast",

@@ -10,10 +10,12 @@
 //! torrent topo-sweep [--seed N] [--trials N]  # hops across mesh/torus/ring
 //! torrent fault-sweep [--seed N] [--trials N] # availability: repair vs fail-stop
 //! torrent serve-sim [--seed N] [--quick] [--out PREFIX]  # open-loop serving sweep
+//!             [--scheduler naive|greedy|tsp|load_aware]
 //!             [--faults SPEC] [--retries N]   # single faulted serving run instead
+//! torrent contention-sweep [--seed N] [--quick]  # schedulers under background load
 //! torrent resilience-sweep [--seed N] [--quick] [--out PREFIX]  # fault-policy sweep
 //! torrent run [--config soc.toml] [--topology mesh|torus|ring] [--size KB]
-//!             [--dests N] [--engine E] [--strategy naive|greedy|tsp] [--data]
+//!             [--dests N] [--engine E] [--strategy naive|greedy|tsp|load_aware] [--data]
 //!             [--faults SPEC]             # e.g. "router:5@300+200;timeout:2000;resume"
 //!             [--threads N]               # sharded parallel stepper (default 1)
 //! torrent artifacts [--dir artifacts]     # load + smoke-run AOT artifacts
@@ -32,17 +34,20 @@ use torrent::soc::SocConfig;
 use torrent::util::cli::Args;
 
 const USAGE: &str =
-    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|serve-sim|resilience-sweep|run|artifacts> [options]
+    "torrent <table1|fig5|fig6|fig7|fig9|fig11|topo-sweep|fault-sweep|serve-sim|contention-sweep|resilience-sweep|run|artifacts> [options]
   fig5   [--quick]
   fig6   [--seed N] [--trials N]
   topo-sweep [--seed N] [--trials N]
   fault-sweep [--seed N] [--trials N]
   serve-sim [--seed N] [--quick] [--out PREFIX]   # writes PREFIX.json + PREFIX.md
+            [--scheduler naive|greedy|tsp|load_aware]
             [--faults SPEC] [--retries N]         # single faulted serving run instead
+  contention-sweep [--seed N] [--quick]           # schedulers under background load
   resilience-sweep [--seed N] [--quick] [--out PREFIX]  # fail-stop vs restream vs
                                                   # resume vs resume+reroute
   run    [--config soc.toml] [--topology mesh|torus|ring] [--size KB] [--dests N]
-         [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp] [--data]
+         [--engine torrent|idma|xdma|mcast] [--strategy naive|greedy|tsp|load_aware]
+         [--data]
          [--faults \"link:FROM-TO@C[+D];router:N@C[+D];straggle:NxF@C;drop:N@C;\\
 timeout:C;norepair;resume;reroute\"]
          [--threads N]
@@ -98,8 +103,10 @@ fn main() {
         }
         "serve-sim" => {
             let seed = args.u64_or("seed", 2025);
-            if args.get("faults").is_some() {
-                serve_faulted(&args, seed);
+            // A single serving run instead of the sweep: a fault plan
+            // and/or an explicit scheduler pins one configuration.
+            if args.get("faults").is_some() || args.get("scheduler").is_some() {
+                serve_single(&args, seed);
                 return;
             }
             let quick = args.flag("quick");
@@ -118,6 +125,17 @@ fn main() {
                     .unwrap_or_else(|e| panic!("write {md}: {e}"));
                 println!("wrote {json} + {md}");
             }
+        }
+        "contention-sweep" => {
+            let seed = args.u64_or("seed", 2025);
+            let quick = args.flag("quick");
+            let (rows, t) = experiments::contention_sweep(seed, quick);
+            t.print();
+            println!(
+                "{} cells; in-tree guarantees held (byte-exact delivery, cross-mode \
+                 parity, load-aware p99 <= greedy p99 at the congested point)",
+                rows.len()
+            );
         }
         "resilience-sweep" => {
             let seed = args.u64_or("seed", 2025);
@@ -145,12 +163,24 @@ fn main() {
     }
 }
 
-/// One open-loop serving run on a faulted 4x4 fabric
-/// (`serve-sim --faults SPEC [--retries N]`): prints the client-facing
-/// availability / goodput / repair telemetry for the given fault plan.
-fn serve_faulted(args: &Args, seed: u64) {
+/// `--scheduler` flag shared by the serving entrypoints (default greedy).
+fn parse_scheduler(args: &Args) -> Strategy {
+    match args.get_or("scheduler", "greedy") {
+        "naive" => Strategy::Naive,
+        "tsp" => Strategy::Tsp,
+        "load_aware" => Strategy::LoadAware,
+        "greedy" => Strategy::Greedy,
+        other => panic!("--scheduler: unknown strategy {other:?} (naive|greedy|tsp|load_aware)"),
+    }
+}
+
+/// One open-loop serving run on a 4x4 fabric
+/// (`serve-sim [--faults SPEC] [--scheduler S] [--retries N]`): prints
+/// the client-facing availability / goodput / repair telemetry for the
+/// pinned configuration.
+fn serve_single(args: &Args, seed: u64) {
     use torrent::serve::{self, RetryPolicy, ServeConfig};
-    let spec = args.get("faults").expect("checked by caller");
+    let spec = args.get("faults").unwrap_or("");
     let plan = torrent::sim::FaultPlan::parse(spec)
         .unwrap_or_else(|e| panic!("--faults: {e}"));
     let topo = match args.get("topology") {
@@ -162,14 +192,17 @@ fn serve_faulted(args: &Args, seed: u64) {
     let retries = args.u64_or("retries", 0) as u32;
     let cfg = ServeConfig {
         seed,
+        strategy: parse_scheduler(args),
         retry: RetryPolicy { max_attempts: retries, ..RetryPolicy::default() },
         ..ServeConfig::default()
     };
     let soc = SocConfig::custom(4, 4, 64 * 1024).with_topology(topo).with_faults(plan);
+    let sched = experiments::sched_label(cfg.strategy);
     let r = serve::run(cfg, soc, torrent::sim::StepMode::EventDriven);
     println!(
-        "serve-sim under faults ({spec}) on {}: offered {}, completed {}, failed {}, \
+        "serve-sim ({sched}, faults: {}) on {}: offered {}, completed {}, failed {}, \
          rejected {}, unfinished {}",
+        if spec.is_empty() { "none" } else { spec },
         topo.label(),
         r.offered,
         r.completed,
@@ -227,6 +260,7 @@ fn run_custom(args: &Args) {
     let strategy = match args.get_or("strategy", "greedy") {
         "naive" => Strategy::Naive,
         "tsp" => Strategy::Tsp,
+        "load_aware" => Strategy::LoadAware,
         _ => Strategy::Greedy,
     };
     let engine = match args.get_or("engine", "torrent") {

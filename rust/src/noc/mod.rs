@@ -14,7 +14,7 @@ pub mod router;
 pub mod shard;
 pub mod topology;
 
-pub use network::{Gate, GateCell, NetPort, NetStats, Network};
+pub use network::{Gate, GateCell, LoadView, NetPort, NetStats, Network, LOAD_WINDOW};
 pub use shard::shard_ranges;
 pub use packet::{Flit, Message, Packet, PacketId, FLIT_BYTES};
 pub use router::{BUF_FLITS, LINK_CYCLES, NUM_VCS, ROUTER_PIPELINE};

@@ -146,6 +146,13 @@ pub(crate) struct Lane {
     /// Flits moved by this router over the run — the activity counter
     /// the coordinator's dead-hop diagnosis reads.
     pub(crate) activity: u64,
+    /// `link_flits[dir]`: flits this router has pushed onto its outbound
+    /// delay line toward `dir` (Local = ejections) over the run. The
+    /// per-directed-link half of the activity telemetry; the load-aware
+    /// scheduler reads windowed deltas of these through
+    /// [`Network::load_view`]. Lane-owned, so the sharded tick counts
+    /// them without any cross-thread merge.
+    pub(crate) link_flits: [u64; 5],
     pub(crate) alloc: AllocState,
 }
 
@@ -158,6 +165,7 @@ impl Lane {
             inbox: VecDeque::new(),
             eject: BTreeMap::new(),
             activity: 0,
+            link_flits: [0; 5],
             alloc: AllocState::default(),
         }
     }
@@ -229,6 +237,90 @@ pub(crate) struct FaultState {
     pub(crate) active_any: bool,
 }
 
+/// Cycles per occupancy window: [`Network::load_view`] folds the
+/// per-link flit deltas of the last completed window into the EWMA. 256
+/// cycles ≈ a few chain-hop round trips — short enough to track serving
+/// bursts, long enough that a single packet does not read as congestion.
+pub const LOAD_WINDOW: u64 = 256;
+
+/// Windowed link-occupancy EWMA state. Boxed behind an `Option` exactly
+/// like [`FaultState`]: a fabric whose load is never observed pays one
+/// pointer of storage and nothing per tick — counters are folded lazily
+/// at [`Network::load_view`] call sites, never during `tick`, so the
+/// event-driven fast-forward stays untouched.
+pub(crate) struct LoadEwma {
+    /// Per-node, per-direction EWMA of link occupancy in milli-flits
+    /// per cycle (0..=1000). Integer arithmetic keeps the telemetry
+    /// bit-identical across step modes and platforms.
+    ewma_milli: Vec<[u32; 5]>,
+    /// `link_flits` snapshot at the last window rollover.
+    last: Vec<[u64; 5]>,
+    /// Cycle of the last window rollover.
+    last_cycle: u64,
+}
+
+/// Immutable snapshot of windowed link occupancy, in milli-flits per
+/// cycle per directed link (0 = idle, 1000 = a flit every cycle). Taken
+/// by the coordinator at dispatch time and consumed by
+/// `sched::load_aware_order`; values are derived from deterministic
+/// counters at deterministic call sites, so snapshots are bit-identical
+/// across FullTick/EventDriven/Parallel runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadView {
+    load_milli: Vec<[u32; 5]>,
+}
+
+impl LoadView {
+    /// An all-idle view over `n` nodes (what a never-observed or
+    /// freshly-armed fabric reports).
+    pub fn zero(n: usize) -> Self {
+        LoadView { load_milli: vec![[0; 5]; n] }
+    }
+
+    /// Construct from explicit per-link milli-occupancies (tests and
+    /// benches; production views come from [`Network::load_view`]).
+    pub fn with_loads(load_milli: Vec<[u32; 5]>) -> Self {
+        LoadView { load_milli }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.load_milli.len()
+    }
+
+    /// Occupancy of the directed link leaving `from` toward `d`, in
+    /// milli-flits/cycle. Out-of-range nodes read as idle.
+    pub fn link_load_milli(&self, from: NodeId, d: Dir) -> u32 {
+        self.load_milli.get(from.0).map_or(0, |a| a[d.index()])
+    }
+
+    /// Force one directed link's occupancy (test helper for scheduler
+    /// unit tests that need a synthetic hot link).
+    pub fn set_link(&mut self, from: NodeId, d: Dir, milli: u32) {
+        self.load_milli[from.0][d.index()] = milli;
+    }
+
+    /// Hottest link on the fabric's routed path `from -> to` (0 when
+    /// `from == to`). Walks `next_hop` — the same walk the chain
+    /// schedulers use, so the score sees exactly the links a leg would
+    /// traverse.
+    pub fn max_on_path(&self, topo: &dyn Topology, from: NodeId, to: NodeId) -> u32 {
+        let mut max = 0;
+        let mut cur = from;
+        while cur != to {
+            let d = topo.next_hop(cur, to);
+            let next = topo.neighbour(cur, d).expect("routing left the fabric");
+            max = max.max(self.link_load_milli(cur, d));
+            cur = next;
+        }
+        max
+    }
+
+    /// True when every link reads idle (e.g. the arming snapshot).
+    pub fn is_zero(&self) -> bool {
+        self.load_milli.iter().all(|a| a.iter().all(|&v| v == 0))
+    }
+}
+
 pub struct Network {
     pub topo: Topo,
     pub cycle: u64,
@@ -247,6 +339,9 @@ pub struct Network {
     credit_scratch: Vec<(usize, Dir, usize)>,
     /// Fault-injection state; `None` on a healthy fabric.
     pub(crate) faults: Option<Box<FaultState>>,
+    /// Link-occupancy EWMA state; `None` until the first
+    /// [`Network::load_view`] call arms it (zero-cost when unused).
+    pub(crate) load: Option<Box<LoadEwma>>,
     pub stats: NetStats,
 }
 
@@ -262,6 +357,7 @@ impl Network {
             moved_scratch: Vec::new(),
             credit_scratch: Vec::new(),
             faults: None,
+            load: None,
             stats: NetStats::default(),
         }
     }
@@ -333,6 +429,63 @@ impl Network {
     /// coordinator's dead-hop diagnosis compares across a chain.
     pub fn router_activity(&self, node: NodeId) -> u64 {
         self.lanes[node.0].activity
+    }
+
+    /// Cumulative flits pushed by `node` onto each outbound direction
+    /// (`Dir::index` order; Local = ejections to the NI).
+    pub fn link_flits(&self, node: NodeId) -> [u64; 5] {
+        self.lanes[node.0].link_flits
+    }
+
+    /// Snapshot the windowed link-occupancy EWMA, arming the tracker on
+    /// first use (the arming call returns an all-idle view — there is no
+    /// completed window to read yet). Folding happens here, never in
+    /// `tick`: an unobserved fabric does zero load accounting, and the
+    /// event-driven fast-forward path is untouched. Once armed, the EWMA
+    /// advances only when at least [`LOAD_WINDOW`] cycles have elapsed
+    /// since the last fold, with integer milli-occupancy arithmetic
+    /// (`ewma' = (ewma + rate)/2`), so every step mode computes the same
+    /// view at the same dispatch cycle.
+    pub fn load_view(&mut self) -> LoadView {
+        let n = self.lanes.len();
+        if self.load.is_none() {
+            self.load = Some(Box::new(LoadEwma {
+                ewma_milli: vec![[0; 5]; n],
+                last: self.lanes.iter().map(|l| l.link_flits).collect(),
+                last_cycle: self.cycle,
+            }));
+            return LoadView::zero(n);
+        }
+        let st = self.load.as_mut().unwrap();
+        let elapsed = self.cycle - st.last_cycle;
+        if elapsed >= LOAD_WINDOW {
+            for (i, lane) in self.lanes.iter().enumerate() {
+                for d in 0..5 {
+                    let delta = lane.link_flits[d] - st.last[i][d];
+                    let rate = ((delta * 1000) / elapsed).min(1000) as u32;
+                    st.ewma_milli[i][d] = (st.ewma_milli[i][d] + rate) / 2;
+                    st.last[i][d] = lane.link_flits[d];
+                }
+            }
+            st.last_cycle = self.cycle;
+        }
+        LoadView { load_milli: st.ewma_milli.clone() }
+    }
+
+    /// Test hook: seed the EWMA state so the next [`Network::load_view`]
+    /// call within one window returns exactly `view`. Lets integration
+    /// tests drive the coordinator's load-aware dispatch (ordering and
+    /// the partition pass) against a pinned fabric-load picture without
+    /// reverse-engineering a traffic schedule that produces it.
+    #[doc(hidden)]
+    pub fn preload_load_view(&mut self, view: &LoadView) {
+        let n = self.lanes.len();
+        assert_eq!(view.n_nodes(), n, "view shape must match the fabric");
+        self.load = Some(Box::new(LoadEwma {
+            ewma_milli: view.load_milli.clone(),
+            last: self.lanes.iter().map(|l| l.link_flits).collect(),
+            last_cycle: self.cycle,
+        }));
     }
 
     /// Snapshot of the surviving fabric: the base topology minus killed
@@ -863,6 +1016,7 @@ pub(crate) fn switch_range(
             credits_out.push((upstream.0, port.opposite(), vc));
         }
         for (dir, vc, flit) in scratch.drain(..) {
+            lanes[li].link_flits[dir.index()] += 1;
             if dir == Dir::Local {
                 stats.flit_ejections += 1;
                 deliver_local_lane(&mut lanes[li], flit, stats);
@@ -1408,6 +1562,87 @@ mod tests {
         assert!(n.router_activity(NodeId(1)) > 0);
         assert!(n.router_activity(NodeId(2)) > 0);
         assert!(n.router_activity(NodeId(3)) > 0, "ejection counts as movement");
+    }
+
+    #[test]
+    fn link_flit_counters_track_directed_traffic() {
+        // 0 -> 3 on a 4x1 mesh: every flit leaves 0, 1 and 2 eastward
+        // and ejects at 3. Westward counters stay zero.
+        let mut n = net(4, 1);
+        n.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(3), Message::Raw(0)).with_phantom_payload(256),
+        );
+        n.run_until_idle(10_000);
+        let flits = 1 + 256 / 64;
+        for node in [0usize, 1, 2] {
+            assert_eq!(n.link_flits(NodeId(node))[Dir::East.index()], flits);
+            assert_eq!(n.link_flits(NodeId(node))[Dir::West.index()], 0);
+        }
+        assert_eq!(n.link_flits(NodeId(3))[Dir::Local.index()], flits);
+        // The per-dir counters decompose the per-router activity total.
+        for node in 0..4 {
+            let lane_total: u64 = n.link_flits(NodeId(node)).iter().sum();
+            assert_eq!(lane_total, n.router_activity(NodeId(node)));
+        }
+    }
+
+    #[test]
+    fn load_view_is_lazy_and_zero_cost_when_unused() {
+        let mut n = net(2, 1);
+        n.send(NodeId(0), Packet::new(0, NodeId(0), NodeId(1), Message::Raw(0)));
+        n.run_until_idle(1_000);
+        assert!(n.load.is_none(), "unobserved fabric must not allocate load state");
+        let v = n.load_view();
+        assert!(v.is_zero(), "arming snapshot has no completed window");
+        assert!(n.load.is_some());
+    }
+
+    #[test]
+    fn load_view_ewma_tracks_a_hot_link_and_decays() {
+        let mut n = net(2, 1);
+        n.load_view(); // arm at cycle 0
+        // Saturate 0 -> 1 for a full window: inject a stream long enough
+        // that the link moves ~a flit per cycle.
+        n.send(
+            NodeId(0),
+            Packet::new(0, NodeId(0), NodeId(1), Message::Raw(0))
+                .with_phantom_payload(64 * 300),
+        );
+        while n.cycle < LOAD_WINDOW {
+            n.tick();
+        }
+        let hot = n.load_view();
+        let e = hot.link_load_milli(NodeId(0), Dir::East);
+        assert!(e > 300, "hot link must read loaded, got {e}");
+        assert!(e <= 1000, "occupancy is capped at 1 flit/cycle");
+        // Drain and run two more quiet windows: the EWMA must decay.
+        n.run_until_idle(100_000);
+        let c = n.cycle;
+        while n.cycle < c + LOAD_WINDOW {
+            n.tick();
+        }
+        let cooler = n.load_view();
+        assert!(
+            cooler.link_load_milli(NodeId(0), Dir::East) < e,
+            "EWMA must decay on a quiet window"
+        );
+        // Calls inside the same window return the same snapshot.
+        let again = n.load_view();
+        assert_eq!(cooler, again, "intra-window snapshots must be stable");
+    }
+
+    #[test]
+    fn load_view_max_on_path_walks_the_routed_links() {
+        let mut v = LoadView::zero(16);
+        let m = Mesh::new(4, 4);
+        // Path 0 -> 10 routes XY: East (0,1),(1,2), then North (2,6),(6,10).
+        v.set_link(NodeId(1), Dir::East, 700);
+        v.set_link(NodeId(6), Dir::North, 400);
+        v.set_link(NodeId(9), Dir::East, 999); // off-path: must not count
+        assert_eq!(v.max_on_path(&m, NodeId(0), NodeId(10)), 700);
+        assert_eq!(v.max_on_path(&m, NodeId(2), NodeId(10)), 400);
+        assert_eq!(v.max_on_path(&m, NodeId(5), NodeId(5)), 0);
     }
 
     #[test]

@@ -14,6 +14,11 @@ pub enum Strategy {
     Greedy,
     /// Open-path TSP (OR-Tools in the paper; Held–Karp/2-opt here).
     Tsp,
+    /// Contention-aware: greedy's walk scored by `hops + w·max link
+    /// load` against a [`crate::noc::LoadView`] snapshot, plus the
+    /// k-way partition pass (`sched::load`). Falls back to pure
+    /// geometry (an idle view) when no load snapshot is supplied.
+    LoadAware,
 }
 
 /// Naive ordering: ascending cluster ID (the paper's "simple Chainwrite").
@@ -31,7 +36,60 @@ pub fn naive_order(dests: &[NodeId]) -> Vec<NodeId> {
 /// no link-disjoint candidate exists. Link-disjointness keeps the
 /// chain's hop-to-hop transfers from serializing on shared fabric links
 /// while the stream is pipelined through all destinations.
+///
+/// Every Chainwrite hop drives *three* routes over the fabric: the
+/// forward data leg (prev → hop) plus the grant/finish back-legs
+/// (hop → prev) — the same three-leg protocol the repair planner
+/// validates per candidate detour. Both directions of each leg are
+/// therefore reserved in `used`; [`greedy_order_forward_only`] keeps
+/// the historical data-leg-only behavior for the differential test.
+///
+/// Duplicate destinations keep their multiplicity (matching
+/// `naive_order` and `schedule_pairs` FIFO semantics): a duplicate of
+/// the chain tail is zero hops away and chains consecutively.
 pub fn greedy_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<NodeId> {
+    greedy_order_impl(topo, src, dests, true)
+}
+
+/// Pre-fix greedy that reserves only the forward data leg of each hop.
+/// Test-only: kept so the differential suite can demonstrate the
+/// back-leg blindness this module used to have. Not part of the API.
+#[doc(hidden)]
+pub fn greedy_order_forward_only(
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: &[NodeId],
+) -> Vec<NodeId> {
+    greedy_order_impl(topo, src, dests, false)
+}
+
+/// Reserve the routed links of one chain leg — and, when `both_dirs`,
+/// of the reverse route the grant/finish control flits take. Under XY
+/// routing the reverse route is *not* the mirrored forward path (it
+/// re-routes YX from the other end), so it must be walked separately.
+fn reserve_leg(
+    topo: &dyn Topology,
+    used: &mut BTreeSet<(NodeId, NodeId)>,
+    from: NodeId,
+    to: NodeId,
+    both_dirs: bool,
+) {
+    for l in topo.links(from, to) {
+        used.insert(l);
+    }
+    if both_dirs {
+        for l in topo.links(to, from) {
+            used.insert(l);
+        }
+    }
+}
+
+fn greedy_order_impl(
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: &[NodeId],
+    both_dirs: bool,
+) -> Vec<NodeId> {
     if dests.is_empty() {
         return vec![];
     }
@@ -42,9 +100,14 @@ pub fn greedy_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<N
         .iter()
         .min_by_key(|&&d| (topo.distance(src, d), d))
         .unwrap();
-    remaining.retain(|&d| d != start);
+    // Remove exactly one occurrence — `retain` would silently collapse
+    // duplicate destinations that naive_order (and the pair scheduler's
+    // FIFO payload slots) preserve.
+    let pos = remaining.iter().position(|&d| d == start).unwrap();
+    remaining.remove(pos);
     let mut order = vec![start];
-    let mut used: BTreeSet<(NodeId, NodeId)> = topo.links(src, start).into_iter().collect();
+    let mut used: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
+    reserve_leg(topo, &mut used, src, start, both_dirs);
 
     while !remaining.is_empty() {
         let tail = *order.last().unwrap();
@@ -82,11 +145,10 @@ pub fn greedy_order(topo: &dyn Topology, src: NodeId, dests: &[NodeId]) -> Vec<N
                 .min_by_key(|&&c| (topo.distance(tail, c), c))
                 .unwrap(),
         };
-        for l in topo.links(tail, chosen) {
-            used.insert(l);
-        }
+        reserve_leg(topo, &mut used, tail, chosen, both_dirs);
         order.push(chosen);
-        remaining.retain(|&d| d != chosen);
+        let pos = remaining.iter().position(|&d| d == chosen).unwrap();
+        remaining.remove(pos);
     }
     order
 }
@@ -163,6 +225,39 @@ mod tests {
         let o = greedy_order(&m, NodeId(0), &dests);
         assert_eq!(o, [1, 2, 4, 6].map(NodeId).to_vec());
         assert_eq!(chain_hops(&m, NodeId(0), &o), 6);
+    }
+
+    #[test]
+    fn greedy_reserves_grant_finish_back_legs() {
+        // Leg 0→5 on a 4×4 mesh routes XY through node 1; its
+        // grant/finish back-leg 5→0 routes XY through node 4, reserving
+        // (5,4),(4,0). Candidate 8's data leg from tail 5 is
+        // (5,4),(4,8) — "clean" under the old forward-only reservation
+        // but colliding with the back-leg traffic in reality — so the
+        // fixed greedy chains the genuinely disjoint 7 first.
+        let m = Mesh::new(4, 4);
+        let dests: Vec<NodeId> = [5, 8, 7].map(NodeId).to_vec();
+        let legacy = greedy_order_forward_only(&m, NodeId(0), &dests);
+        let fixed = greedy_order(&m, NodeId(0), &dests);
+        assert_eq!(legacy, [5, 8, 7].map(NodeId).to_vec());
+        assert_eq!(fixed, [5, 7, 8].map(NodeId).to_vec());
+    }
+
+    #[test]
+    fn greedy_keeps_duplicate_destinations() {
+        // `retain` used to collapse duplicates, silently disagreeing
+        // with naive_order (and panicking schedule_pairs' permutation
+        // check). One removal per placement keeps the multiset.
+        let m = Mesh::new(4, 4);
+        let dests: Vec<NodeId> = [5, 2, 5, 2].map(NodeId).to_vec();
+        let o = greedy_order(&m, NodeId(0), &dests);
+        assert_eq!(o.len(), dests.len());
+        let mut a = o.clone();
+        a.sort();
+        let mut b = dests.clone();
+        b.sort();
+        assert_eq!(a, b, "greedy must preserve destination multiplicity");
+        assert_eq!(naive_order(&dests).len(), dests.len());
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Load-aware chain ordering and the k-way partition pass (ISSUE 10
+//! tentpole).
+//!
+//! [`load_aware_order`] runs the same tail-extension walk as greedy
+//! Alg. 1 but replaces the hard link-disjointness test with an
+//! ICN-style weighted bid: every candidate leg is scored
+//! `hops + w · max_link_load_on_path`, where link load is the fabric's
+//! windowed occupancy ([`LoadView`], milli-flits/cycle) and links the
+//! chain has already reserved for itself (data leg *and* grant/finish
+//! back-leg) are charged as fully occupied. With an idle view the score
+//! degenerates to hop count plus the self-collision penalty, i.e. a
+//! soft variant of greedy's disjointness preference.
+//!
+//! [`partition_chains`] is the dynamic-partition extension (à la
+//! arxiv 2108.00566): when one long chain's predicted completion under
+//! the observed load exceeds the best contiguous k-way split's — plus a
+//! per-chain dispatch overhead — the destination set is cut into k
+//! concurrent sibling chains. Everything is integer arithmetic with
+//! (score, node-id) tie-breaks, so orders and cuts are bit-identical
+//! across FullTick/EventDriven/Parallel runs given the same view.
+
+use std::collections::BTreeSet;
+
+use crate::noc::{Dir, LoadView, NodeId, Topology};
+
+/// Weight of the congestion term: milli-hops charged per
+/// milli-occupancy unit. 2000 means a fully-occupied link (1000 milli)
+/// costs as much as 2 extra hops — hot links are worth detouring
+/// around, but not at any geometric price.
+pub const LOAD_WEIGHT_MILLI: u64 = 2000;
+
+/// Occupancy charged for links the chain itself already uses (both
+/// directions of every reserved leg): full.
+const SELF_LOAD_MILLI: u32 = 1000;
+
+/// Per-extra-chain overhead charged against a split, in milli-hops.
+/// Each sibling chain pays its own DSE config round and competes for
+/// the initiator's injection port, so a split must beat the single
+/// chain by a real margin before it wins.
+pub const CHAIN_OVERHEAD_MILLI: u64 = 8000;
+
+/// Maximum concurrent sibling chains a partition may produce.
+pub const MAX_CHAINS: usize = 4;
+
+/// Score of the routed leg `from -> to` under `load`: `1000 · hops +
+/// LOAD_WEIGHT_MILLI · hottest/1000`, where `hottest` is the max
+/// occupancy over the leg's links, counting `used` links as fully
+/// occupied. Walks `next_hop` exactly like greedy's overlap test.
+fn leg_score_milli(
+    topo: &dyn Topology,
+    from: NodeId,
+    to: NodeId,
+    load: &LoadView,
+    used: &BTreeSet<(NodeId, NodeId)>,
+) -> u64 {
+    let mut cur = from;
+    let mut hops = 0u64;
+    let mut hottest = 0u32;
+    while cur != to {
+        let d = topo.next_hop(cur, to);
+        let next = topo.neighbour(cur, d).expect("routing left the fabric");
+        let ext = load.link_load_milli(cur, d);
+        let link_load =
+            if used.contains(&(cur, next)) { SELF_LOAD_MILLI.max(ext) } else { ext };
+        hottest = hottest.max(link_load);
+        cur = next;
+        hops += 1;
+    }
+    hops * 1000 + LOAD_WEIGHT_MILLI * hottest as u64 / 1000
+}
+
+/// Reserve both directions of one chain leg (data + grant/finish
+/// routes), mirroring `chain::greedy_order`'s reservation semantics.
+fn reserve_leg(
+    topo: &dyn Topology,
+    used: &mut BTreeSet<(NodeId, NodeId)>,
+    from: NodeId,
+    to: NodeId,
+) {
+    for l in topo.links(from, to) {
+        used.insert(l);
+    }
+    for l in topo.links(to, from) {
+        used.insert(l);
+    }
+}
+
+/// Load-aware chain order: repeatedly extend the chain with the
+/// destination of minimal `(leg score, node id)` from the current tail.
+/// Duplicate destinations keep their multiplicity (one removal per
+/// placement), matching the other strategies' multiset semantics. With
+/// `LoadView::zero` this is fully deterministic geometry; with a real
+/// view the hop term steers legs off hot links.
+pub fn load_aware_order(
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: &[NodeId],
+    load: &LoadView,
+) -> Vec<NodeId> {
+    if dests.is_empty() {
+        return vec![];
+    }
+    let mut remaining: Vec<NodeId> = dests.to_vec();
+    let mut order = Vec::with_capacity(dests.len());
+    let mut used: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
+    let mut tail = src;
+    while !remaining.is_empty() {
+        let chosen = *remaining
+            .iter()
+            .min_by_key(|&&c| (leg_score_milli(topo, tail, c, load, &used), c))
+            .unwrap();
+        reserve_leg(topo, &mut used, tail, chosen);
+        let pos = remaining.iter().position(|&d| d == chosen).unwrap();
+        remaining.remove(pos);
+        order.push(chosen);
+        tail = chosen;
+    }
+    order
+}
+
+/// Predicted completion of a chain `src -> order[0] -> ...` under
+/// `load`, in milli-hops: the sum of leg scores. No self-reservation —
+/// the estimate ranks alternatives, it does not re-plan them.
+fn chain_cost_milli(
+    topo: &dyn Topology,
+    src: NodeId,
+    order: &[NodeId],
+    load: &LoadView,
+) -> u64 {
+    let empty = BTreeSet::new();
+    let mut cost = 0u64;
+    let mut prev = src;
+    for &d in order {
+        cost += leg_score_milli(topo, prev, d, load, &empty);
+        prev = d;
+    }
+    cost
+}
+
+/// Best contiguous split of `order` into exactly `k` non-empty
+/// segments, minimizing the maximum per-segment cost (each segment pays
+/// its own `src -> head` leg). Returns `(max segment cost, cut
+/// indices)`; cuts are segment start offsets (excluding 0). O(n²k) DP —
+/// n is at most the paper's 63-destination sets.
+fn best_split(
+    topo: &dyn Topology,
+    src: NodeId,
+    order: &[NodeId],
+    load: &LoadView,
+    k: usize,
+) -> (u64, Vec<usize>) {
+    let n = order.len();
+    let empty = BTreeSet::new();
+    // seg_cost[i][j]: cost of the segment order[i..=j] as its own chain.
+    let mut seg_cost = vec![vec![0u64; n]; n];
+    for i in 0..n {
+        let mut cost = leg_score_milli(topo, src, order[i], load, &empty);
+        seg_cost[i][i] = cost;
+        for j in i + 1..n {
+            cost += leg_score_milli(topo, order[j - 1], order[j], load, &empty);
+            seg_cost[i][j] = cost;
+        }
+    }
+    // dp[m][j]: min over splits of order[..=j] into m segments of the
+    // max segment cost; cut[m][j] remembers the last segment's start.
+    let mut dp = vec![vec![u64::MAX; n]; k + 1];
+    let mut cut = vec![vec![0usize; n]; k + 1];
+    for j in 0..n {
+        dp[1][j] = seg_cost[0][j];
+    }
+    for m in 2..=k {
+        for j in m - 1..n {
+            for s in m - 1..=j {
+                let prev = dp[m - 1][s - 1];
+                if prev == u64::MAX {
+                    continue;
+                }
+                let cand = prev.max(seg_cost[s][j]);
+                if cand < dp[m][j] {
+                    dp[m][j] = cand;
+                    cut[m][j] = s;
+                }
+            }
+        }
+    }
+    let mut cuts = Vec::with_capacity(k - 1);
+    let mut j = n - 1;
+    for m in (2..=k).rev() {
+        let s = cut[m][j];
+        cuts.push(s);
+        j = s - 1;
+    }
+    cuts.reverse();
+    (dp[k][n - 1], cuts)
+}
+
+/// Partition pass: split `order` into up to [`MAX_CHAINS`] concurrent
+/// chains when the best split's predicted completion (max segment cost
+/// plus [`CHAIN_OVERHEAD_MILLI`] per extra chain) strictly beats the
+/// single chain's. Returns the segments in order-position order
+/// (`len() == 1` means "don't split"). Ties keep the smaller k — the
+/// deterministic, conservative choice.
+pub fn partition_chains(
+    topo: &dyn Topology,
+    src: NodeId,
+    order: &[NodeId],
+    load: &LoadView,
+) -> Vec<Vec<NodeId>> {
+    if order.len() < 2 {
+        return vec![order.to_vec()];
+    }
+    let single = chain_cost_milli(topo, src, order, load);
+    let mut best_cost = single;
+    let mut best_cuts: Vec<usize> = vec![];
+    let max_k = MAX_CHAINS.min(order.len());
+    for k in 2..=max_k {
+        let (max_seg, cuts) = best_split(topo, src, order, load, k);
+        let predicted = max_seg + CHAIN_OVERHEAD_MILLI * (k as u64 - 1);
+        if predicted < best_cost {
+            best_cost = predicted;
+            best_cuts = cuts;
+        }
+    }
+    if best_cuts.is_empty() {
+        return vec![order.to_vec()];
+    }
+    let mut segments = Vec::with_capacity(best_cuts.len() + 1);
+    let mut start = 0usize;
+    for &c in &best_cuts {
+        segments.push(order[start..c].to_vec());
+        start = c;
+    }
+    segments.push(order[start..].to_vec());
+    segments
+}
+
+/// Synthetic view with one hot row of eastward links — shared by the
+/// unit tests here and the scheduler bench.
+#[doc(hidden)]
+pub fn hot_row_view(n_nodes: usize, cols: usize, row: usize, milli: u32) -> LoadView {
+    let mut v = LoadView::zero(n_nodes);
+    for x in 0..cols.saturating_sub(1) {
+        v.set_link(NodeId(row * cols + x), Dir::East, milli);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::Mesh;
+    use crate::sched::chain::greedy_order;
+    use crate::sched::hops::chain_hops;
+
+    #[test]
+    fn idle_view_orders_are_deterministic_and_complete() {
+        let m = Mesh::new(8, 8);
+        let dests: Vec<NodeId> = [3, 7, 21, 63, 40, 11].map(NodeId).to_vec();
+        let zero = LoadView::zero(64);
+        let a = load_aware_order(&m, NodeId(0), &dests, &zero);
+        let b = load_aware_order(&m, NodeId(0), &dests, &zero);
+        assert_eq!(a, b, "same inputs must replay identically");
+        let mut s = a.clone();
+        s.sort();
+        let mut want = dests.clone();
+        want.sort();
+        assert_eq!(s, want, "order must permute the destination set");
+    }
+
+    #[test]
+    fn keeps_duplicate_destinations() {
+        let m = Mesh::new(4, 4);
+        let dests: Vec<NodeId> = [5, 2, 5, 2].map(NodeId).to_vec();
+        let o = load_aware_order(&m, NodeId(0), &dests, &LoadView::zero(16));
+        assert_eq!(o.len(), 4);
+        let mut s = o.clone();
+        s.sort();
+        assert_eq!(s, [2, 2, 5, 5].map(NodeId).to_vec());
+    }
+
+    #[test]
+    fn hot_link_steers_the_chain_off_the_congested_row() {
+        // Destinations 3 (3,0) and 12 (0,3) from src 0 on a 4×4 mesh:
+        // both 3 hops, so the idle tie-break takes the lower id first.
+        // Saturate row-0 eastward: the 0→3 leg rides the hot row
+        // (score 3000 + 2000) while 0→12 is pure-North and cold, so
+        // the load-aware order flips.
+        let m = Mesh::new(4, 4);
+        let dests: Vec<NodeId> = [3, 12].map(NodeId).to_vec();
+        let idle = load_aware_order(&m, NodeId(0), &dests, &LoadView::zero(16));
+        assert_eq!(idle[0], NodeId(3), "idle tie-break is (score, id)");
+        let hot = hot_row_view(16, 4, 0, 1000);
+        let steered = load_aware_order(&m, NodeId(0), &dests, &hot);
+        assert_eq!(steered[0], NodeId(12), "hot row must repel the first leg");
+    }
+
+    #[test]
+    fn idle_scores_match_geometry() {
+        // With no load anywhere and no reserved links, the first leg's
+        // score is exactly 1000·hops, so the chain starts nearest —
+        // agreeing with greedy's seed rule.
+        let m = Mesh::new(8, 8);
+        let dests: Vec<NodeId> = [63, 9, 56].map(NodeId).to_vec();
+        let o = load_aware_order(&m, NodeId(0), &dests, &LoadView::zero(64));
+        assert_eq!(o[0], NodeId(9));
+        // And the full chain's geometric cost stays in greedy's league
+        // (same walk, soft instead of hard disjointness).
+        let g = chain_hops(&m, NodeId(0), &greedy_order(&m, NodeId(0), &dests));
+        let l = chain_hops(&m, NodeId(0), &o);
+        assert!(l <= g + 4, "load-aware idle geometry degraded: {l} vs greedy {g}");
+    }
+
+    #[test]
+    fn partition_declines_on_an_idle_fabric() {
+        let m = Mesh::new(4, 4);
+        let order: Vec<NodeId> = [1, 2, 3, 7, 11, 15].map(NodeId).to_vec();
+        let parts = partition_chains(&m, NodeId(0), &order, &LoadView::zero(16));
+        assert_eq!(parts.len(), 1, "an uncongested short chain must not split");
+        assert_eq!(parts[0], order);
+    }
+
+    #[test]
+    fn partition_splits_a_chain_crossing_a_saturated_row() {
+        // Six row-0 destinations on a fully-hot row (3000 per leg)
+        // followed by six cold column-0 destinations: single chain =
+        // 18000 + 7000 (cluster switch) + 5000 = 30000 milli-hops; the
+        // 2-way split at the cluster boundary costs max(18000, 6000) +
+        // 8000 overhead = 26000, so the partition pass must cut there.
+        let m = Mesh::new(8, 8);
+        let order: Vec<NodeId> = [1, 2, 3, 4, 5, 6, 8, 16, 24, 32, 40, 48].map(NodeId).to_vec();
+        let hot = hot_row_view(64, 8, 0, 1000);
+        let parts = partition_chains(&m, NodeId(0), &order, &hot);
+        assert_eq!(parts.len(), 2, "saturated row must trigger a 2-way split");
+        assert_eq!(parts[0], [1, 2, 3, 4, 5, 6].map(NodeId).to_vec());
+        assert_eq!(parts[1], [8, 16, 24, 32, 40, 48].map(NodeId).to_vec());
+        // Segments must concatenate back to the original order.
+        let flat: Vec<NodeId> = parts.iter().flatten().copied().collect();
+        assert_eq!(flat, order);
+    }
+
+    #[test]
+    fn partition_is_deterministic_under_replay() {
+        let m = Mesh::new(8, 8);
+        let order: Vec<NodeId> = (1..=10).map(NodeId).collect();
+        let hot = hot_row_view(64, 8, 0, 900);
+        let a = partition_chains(&m, NodeId(0), &order, &hot);
+        let b = partition_chains(&m, NodeId(0), &order, &hot);
+        assert_eq!(a, b);
+    }
+}

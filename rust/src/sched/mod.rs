@@ -13,32 +13,66 @@
 //!   (just-in-time optimization);
 //! * [`tsp_order`] — open-path TSP on the routing-distance matrix; exact
 //!   Held–Karp for small sets, nearest-neighbour + 2-opt beyond (the
-//!   paper used OR-Tools; see DESIGN.md §3).
+//!   paper used OR-Tools; see DESIGN.md §3);
+//! * [`load_aware_order`] — greedy's walk scored `hops + w·max link
+//!   load` against a windowed [`LoadView`] occupancy snapshot, with a
+//!   k-way partition pass for congested long chains (DESIGN.md
+//!   §Scheduler).
 
 pub mod chain;
 pub mod hops;
+pub mod load;
 pub mod tsp;
 
 pub use chain::{greedy_order, naive_order, Strategy};
 pub use hops::{chain_hops, unicast_hops};
+pub use load::{load_aware_order, partition_chains};
 pub use tsp::tsp_order;
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::noc::{NodeId, Topology};
+use crate::noc::{LoadView, NodeId, Topology};
 
 /// Dispatch by strategy. `src` is the initiator; returns the destination
-/// visit order (a permutation of `dests`).
+/// visit order (a permutation of `dests`). `Strategy::LoadAware` runs
+/// against an idle load view here — use [`schedule_with_load`] to feed
+/// it a real fabric snapshot.
 pub fn schedule(
     strategy: Strategy,
     topo: &dyn Topology,
     src: NodeId,
     dests: &[NodeId],
 ) -> Vec<NodeId> {
+    schedule_with_load(strategy, topo, src, dests, None)
+}
+
+/// [`schedule`] with an optional fabric-load snapshot. Only
+/// `Strategy::LoadAware` consumes the view (the static strategies are
+/// load-blind by definition); `None` means "assume idle", which keeps
+/// the call deterministic for paths that never observe the fabric
+/// (e.g. repair planning over a `Degraded` view).
+pub fn schedule_with_load(
+    strategy: Strategy,
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: &[NodeId],
+    load: Option<&LoadView>,
+) -> Vec<NodeId> {
     match strategy {
         Strategy::Naive => naive_order(dests),
         Strategy::Greedy => greedy_order(topo, src, dests),
         Strategy::Tsp => tsp_order(topo, src, dests),
+        Strategy::LoadAware => {
+            let idle;
+            let view = match load {
+                Some(v) => v,
+                None => {
+                    idle = LoadView::zero(topo.n_nodes());
+                    &idle
+                }
+            };
+            load_aware_order(topo, src, dests, view)
+        }
     }
 }
 
@@ -58,8 +92,21 @@ pub fn schedule_pairs<T>(
     src: NodeId,
     dests: Vec<(NodeId, T)>,
 ) -> (Vec<NodeId>, Vec<(NodeId, T)>) {
+    schedule_pairs_with_load(strategy, topo, src, dests, None)
+}
+
+/// [`schedule_pairs`] with an optional fabric-load snapshot (see
+/// [`schedule_with_load`]). The coordinator's dispatch path feeds the
+/// snapshot it takes at dispatch time through here.
+pub fn schedule_pairs_with_load<T>(
+    strategy: Strategy,
+    topo: &dyn Topology,
+    src: NodeId,
+    dests: Vec<(NodeId, T)>,
+    load: Option<&LoadView>,
+) -> (Vec<NodeId>, Vec<(NodeId, T)>) {
     let nodes: Vec<NodeId> = dests.iter().map(|(n, _)| *n).collect();
-    let order = schedule(strategy, topo, src, &nodes);
+    let order = schedule_with_load(strategy, topo, src, &nodes, load);
     let mut slots: BTreeMap<NodeId, VecDeque<(NodeId, T)>> = BTreeMap::new();
     for pair in dests {
         slots.entry(pair.0).or_default().push_back(pair);
@@ -86,7 +133,7 @@ mod tests {
         let m = Mesh::new(4, 4);
         let dests: Vec<(NodeId, &str)> =
             vec![(NodeId(5), "five"), (NodeId(10), "ten"), (NodeId(3), "three")];
-        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp, Strategy::LoadAware] {
             let (order, ordered) = schedule_pairs(s, &m, NodeId(0), dests.clone());
             assert_eq!(order.len(), dests.len(), "{s:?}");
             for ((n, payload), o) in ordered.iter().zip(&order) {
@@ -103,7 +150,7 @@ mod tests {
         // duplicate-free 64-dest set on a 65-node fabric.
         let m = Mesh::new(13, 5);
         let dests: Vec<(NodeId, usize)> = (1..65).map(|n| (NodeId(n), n * 7)).collect();
-        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp, Strategy::LoadAware] {
             let (order, ordered) = schedule_pairs(s, &m, NodeId(0), dests.clone());
             assert_eq!(order.len(), 64, "{s:?}");
             let mut sorted: Vec<NodeId> = order.clone();
@@ -118,20 +165,31 @@ mod tests {
 
     #[test]
     fn schedule_pairs_duplicates_drain_fifo() {
-        // Duplicate destination nodes keep submission order per node —
-        // the contract the old linear scan provided implicitly.
+        // Duplicate destination nodes keep submission order per node for
+        // *every* strategy — greedy used to collapse duplicates via
+        // `retain`, which tripped the permutation expect below.
         let m = Mesh::new(4, 1);
-        let dests = vec![(NodeId(2), "first"), (NodeId(2), "second")];
-        let (order, ordered) = schedule_pairs(Strategy::Naive, &m, NodeId(0), dests);
-        assert_eq!(order, vec![NodeId(2), NodeId(2)]);
-        assert_eq!(ordered, vec![(NodeId(2), "first"), (NodeId(2), "second")]);
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp, Strategy::LoadAware] {
+            let dests =
+                vec![(NodeId(2), "first"), (NodeId(2), "second"), (NodeId(1), "only")];
+            let (order, ordered) = schedule_pairs(s, &m, NodeId(0), dests);
+            let mut sorted = order.clone();
+            sorted.sort();
+            assert_eq!(sorted, vec![NodeId(1), NodeId(2), NodeId(2)], "{s:?}");
+            let at_two: Vec<&str> = ordered
+                .iter()
+                .filter(|(n, _)| *n == NodeId(2))
+                .map(|(_, p)| *p)
+                .collect();
+            assert_eq!(at_two, vec!["first", "second"], "{s:?} FIFO per node");
+        }
     }
 
     #[test]
     fn schedule_dispatches_all_strategies() {
         let m = Mesh::new(4, 4);
         let dests = vec![NodeId(5), NodeId(10), NodeId(3)];
-        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+        for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp, Strategy::LoadAware] {
             let order = schedule(s, &m, NodeId(0), &dests);
             let mut sorted = order.clone();
             sorted.sort();
@@ -146,7 +204,7 @@ mod tests {
         let fabrics: [&dyn Topology; 3] = [&Mesh::new(4, 4), &Torus::new(4, 4), &Ring::new(16)];
         let dests = vec![NodeId(15), NodeId(3), NodeId(9), NodeId(12)];
         for topo in fabrics {
-            for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp] {
+            for s in [Strategy::Naive, Strategy::Greedy, Strategy::Tsp, Strategy::LoadAware] {
                 let order = schedule(s, topo, NodeId(0), &dests);
                 let mut sorted = order.clone();
                 sorted.sort();

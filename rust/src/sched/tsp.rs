@@ -193,6 +193,27 @@ mod tests {
     }
 
     #[test]
+    fn tsp_keeps_duplicate_destinations() {
+        // Both solver paths index destinations by position (duplicate
+        // copies sit at distance 0), so multiplicity must survive —
+        // matching naive/greedy multiset semantics.
+        let m = Mesh::new(4, 4);
+        let small: Vec<NodeId> = [5, 2, 5, 2].map(NodeId).to_vec();
+        let mut o = tsp_order(&m, NodeId(0), &small);
+        o.sort();
+        assert_eq!(o, [2, 2, 5, 5].map(NodeId).to_vec());
+        // Force the NN + 2-opt path (> EXACT_LIMIT) with duplicates.
+        let mut big: Vec<NodeId> = (1..=12).map(NodeId).collect();
+        big.extend((1..=12).map(NodeId));
+        let mut o = tsp_order(&m, NodeId(0), &big);
+        assert_eq!(o.len(), 24);
+        o.sort();
+        let mut want = big.clone();
+        want.sort();
+        assert_eq!(o, want);
+    }
+
+    #[test]
     fn handles_trivial_sizes() {
         let m = Mesh::new(4, 4);
         assert!(tsp_order(&m, NodeId(0), &[]).is_empty());

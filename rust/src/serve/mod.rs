@@ -211,7 +211,8 @@ pub struct ServeReport {
     pub cycles: u64,
     pub histo: LatencyHisto,
     pub samples: Vec<Sample>,
-    /// Normalized router-activity index over the run
+    /// Fabric utilization over the run: activity normalized by the
+    /// topology's aggregate port capacity, always in `[0, 1]`
     /// ([`stats::utilization`]).
     pub util: f64,
     pub pending_peak: usize,
@@ -430,7 +431,8 @@ impl ServeSim {
         let end = self.c.soc.cycle();
         let act_now: u64 =
             (0..n_nodes).map(|n| self.c.soc.net.router_activity(NodeId(n))).sum();
-        let util = stats::utilization(act_now - act_base, n_nodes, end - start);
+        let capacity = stats::fabric_port_capacity(&self.c.soc.topo());
+        let util = stats::utilization(act_now - act_base, capacity, end - start);
         let mut completed = 0u64;
         let mut failed = 0u64;
         let mut histo = LatencyHisto::new();

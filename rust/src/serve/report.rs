@@ -10,8 +10,10 @@
 //! `torrent-resilience-sweep-v1` rows, one per (fabric × fault-policy ×
 //! seed) cell.
 
-/// One swept load point. Latencies in cycles; `util` is the normalized
-/// router-activity index from [`crate::serve::stats::utilization`].
+/// One swept load point. Latencies in cycles; `util` is fabric
+/// utilization in `[0, 1]` — router activity normalized by the
+/// topology's aggregate port capacity
+/// ([`crate::serve::stats::utilization`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeSweepRow {
     pub fabric: &'static str,

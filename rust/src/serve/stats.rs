@@ -91,16 +91,39 @@ pub struct Sample {
     pub rejected: u64,
 }
 
+/// Total switch capacity of the fabric in flits per cycle: each router
+/// can move at most one flit per output port per cycle, and its port
+/// count is topology-dependent (Local eject plus one port per live
+/// neighbour — 5 for an interior mesh router, 3 for a mesh corner, 3
+/// everywhere on a ring).
+pub fn fabric_port_capacity(topo: &dyn crate::noc::Topology) -> u64 {
+    use crate::noc::Dir;
+    // Cardinal ports only — `neighbour(n, Local)` is `Some(n)` by
+    // convention, so Local is added explicitly as the eject port.
+    let cardinal = [Dir::North, Dir::East, Dir::South, Dir::West];
+    (0..topo.n_nodes())
+        .map(|n| {
+            let node = crate::noc::NodeId(n);
+            let radix =
+                cardinal.iter().filter(|&&d| topo.neighbour(node, d).is_some()).count() as u64;
+            radix + 1 // + Local eject port
+        })
+        .sum()
+}
+
 /// Fabric utilization over a window: router lane-activity delta
-/// normalized per router per cycle. A router can move several flits per
-/// cycle (one per output lane), so this is an activity index — 0 means
-/// a quiet fabric, and the sweep reads it for the saturation knee, not
-/// as a percentage.
-pub fn utilization(activity_delta: u64, n_nodes: usize, cycles: u64) -> f64 {
-    if cycles == 0 || n_nodes == 0 {
+/// normalized by the fabric's aggregate port capacity
+/// (`fabric_port_capacity(topo) · cycles`). A router moves up to one
+/// flit per output port per cycle — not one per router — so dividing by
+/// the per-router port count is what makes this a true fraction:
+/// 0 means a quiet fabric, 1.0 means every port on every router moved
+/// a flit every cycle. Clamped defensively to `[0, 1]` so accounting
+/// drift can never report an impossible > 100%.
+pub fn utilization(activity_delta: u64, port_capacity: u64, cycles: u64) -> f64 {
+    if cycles == 0 || port_capacity == 0 {
         return 0.0;
     }
-    activity_delta as f64 / (n_nodes as f64 * cycles as f64)
+    (activity_delta as f64 / (port_capacity as f64 * cycles as f64)).clamp(0.0, 1.0)
 }
 
 #[cfg(test)]
@@ -155,9 +178,32 @@ mod tests {
     }
 
     #[test]
-    fn utilization_normalizes_per_router_cycle() {
-        assert!((utilization(1600, 16, 100) - 1.0).abs() < 1e-9);
-        assert_eq!(utilization(5, 16, 0), 0.0);
-        assert!(utilization(800, 16, 100) < utilization(1600, 16, 100));
+    fn utilization_normalizes_per_port_cycle() {
+        // 64 ports moving every cycle for 100 cycles is exactly full.
+        assert!((utilization(6400, 64, 100) - 1.0).abs() < 1e-9);
+        assert_eq!(utilization(5, 64, 0), 0.0);
+        assert_eq!(utilization(5, 0, 100), 0.0);
+        assert!(utilization(800, 64, 100) < utilization(1600, 64, 100));
+    }
+
+    #[test]
+    fn utilization_is_clamped_to_one() {
+        // Even a nonsense delta (more flits than ports could move) must
+        // report at most 100% — the old per-router normalization leaked
+        // values like 4.2 on hot fabrics.
+        assert_eq!(utilization(u64::MAX, 16, 100), 1.0);
+        assert_eq!(utilization(1601, 16, 100), 1.0);
+    }
+
+    #[test]
+    fn port_capacity_counts_topology_radix() {
+        use crate::noc::{Mesh, Ring, Torus};
+        // 4×4 mesh: 4 corners (radix 2), 8 edges (radix 3), 4 interior
+        // (radix 4), plus a Local port each: 4*3 + 8*4 + 4*5 = 64.
+        assert_eq!(fabric_port_capacity(&Mesh::new(4, 4)), 64);
+        // Torus: every router has all four neighbours: 16 * 5 = 80.
+        assert_eq!(fabric_port_capacity(&Torus::new(4, 4)), 80);
+        // Ring of 8: two neighbours + Local each: 8 * 3 = 24.
+        assert_eq!(fabric_port_capacity(&Ring::new(8)), 24);
     }
 }

@@ -42,6 +42,11 @@ pub mod stream {
     /// bits so every (request, attempt) pair draws an independent value
     /// regardless of processing order.
     pub const RETRY: u64 = 0x0A << 56;
+    /// Background-traffic injection in the contention sweep
+    /// (`experiments::contention_sweep`). Call sites compose
+    /// `(level << 16) + trial` into the low bits so every strategy
+    /// replays the identical background schedule per cell.
+    pub const CONTENTION: u64 = 0x0B << 56;
 }
 
 /// Construct a seeded [`rng::Rng`] on an independent named stream: the
